@@ -1,0 +1,51 @@
+"""Beyond-paper: self-calibrating thresholds vs the paper's hand-tuned eps.
+
+The paper tunes eps per graph size (Fig. 4: eps in {1.85, 2.0, 2.1}) and
+per family. ``auto_eps`` replaces the Irwin-Hall design rule with local
+per-node quantiles of the warmup theta-hat distribution — decentralized,
+inspection-paradox-bias-inclusive, zero tuning. This benchmark runs the
+Fig. 4 / Fig. 6 sweeps with ONE global quantile setting and compares
+against the per-graph-tuned DECAFORK."""
+from benchmarks.common import burst_failures, pcfg_for, run_case, save_result
+from repro.graphs import make_graph
+
+SWEEP = [
+    ("regular", 50, dict(degree=8)),
+    ("regular", 100, dict(degree=8)),
+    ("regular", 200, dict(degree=8)),
+    ("power_law", 100, dict(m=4)),
+    ("erdos_renyi", 100, {}),
+]
+
+TUNED_EPS = {("regular", 50): 1.85, ("regular", 100): 2.0, ("regular", 200): 2.1,
+             ("power_law", 100): 1.9, ("erdos_renyi", 100): 1.9}
+
+
+def run(verbose: bool = True):
+    rows = []
+    for fam, n, kw in SWEEP:
+        g = make_graph(fam, n, seed=0, **kw)
+        tuned = run_case(
+            f"auto_eps/tuned/{fam}-{n}", g,
+            pcfg_for("decafork", eps=TUNED_EPS[(fam, n)]),
+            burst_failures(),
+        )
+        # self-calibration needs ~100+ theta-hat samples per node: give the
+        # warmup ~1200 steps (the paper's own init-phase assumption, made
+        # quantitative — EXPERIMENTS.md §Beyond-paper)
+        auto = run_case(
+            f"auto_eps/auto/{fam}-{n}", g,
+            pcfg_for("decafork+", auto_eps=True, protocol_start=1200),
+            burst_failures(),
+        )
+        for res in (tuned, auto):
+            rows.append({"name": res.name, "us_per_call": res.us_per_call,
+                         **res.metrics()})
+            if verbose:
+                print(res.csv_row())
+    save_result("auto_eps", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,133 @@
+"""Shared benchmark machinery for the paper-figure reproductions.
+
+Every figure benchmark runs a seed-ensemble simulation (vmapped, jitted),
+reports wall time per simulated step per seed, and derives the paper's
+qualitative metrics: stability (mean |Z_t - Z_0|), reaction time to each
+burst, max overshoot, and survival rate.
+
+Reduced mode (default, CI-friendly): 4500 steps, 8 seeds, bursts at
+1500/3000. Paper mode (BENCH_FULL=1): 9000 steps, 50 seeds, bursts at
+2000/6000 as in Figs. 1-3.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import FailureConfig, ProtocolConfig, run_ensemble
+from repro.graphs import make_graph
+
+FULL = os.environ.get("BENCH_FULL", "0") == "1"
+
+# canonical synchronous-rounds parameters (EXPERIMENTS.md "Thresholds")
+Z0 = 10
+EPS_DECAFORK = 2.0
+EPS_DFKP = 3.0
+EPS2_DFKP = 7.57  # design_eps2(10, 1e-3)
+EPS_MP = 400.0
+MAX_WALKS = 64
+
+STEPS = 9000 if FULL else 4500
+SEEDS = 50 if FULL else 8
+BURSTS = (2000, 6000) if FULL else (1500, 3000)
+BURST_SIZES = (5, 6)
+PROTO_START = 1000 if FULL else 800
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def pcfg_for(alg: str, **overrides) -> ProtocolConfig:
+    base = dict(z0=Z0, max_walks=MAX_WALKS, protocol_start=PROTO_START, rt_bins=1024)
+    if alg == "decafork":
+        base.update(eps=EPS_DECAFORK)
+    elif alg == "decafork+":
+        base.update(eps=EPS_DFKP, eps2=EPS2_DFKP)
+    elif alg == "missingperson":
+        base.update(eps_mp=EPS_MP)
+    base.update(overrides)
+    return ProtocolConfig(algorithm=alg, **base)
+
+
+def burst_failures(**overrides) -> FailureConfig:
+    base = dict(burst_times=BURSTS, burst_sizes=BURST_SIZES)
+    base.update(overrides)
+    return FailureConfig(**base)
+
+
+@dataclasses.dataclass
+class EnsembleResult:
+    name: str
+    z: np.ndarray  # (seeds, T)
+    us_per_call: float  # wall microseconds per (step x seed)
+    forks: int
+    terms: int
+
+    def metrics(self, z0: int = Z0, bursts=BURSTS) -> dict:
+        z = self.z
+        post = z[:, PROTO_START:]
+        m = {
+            "mean_z": float(post.mean()),
+            "mean_abs_dev": float(np.abs(post - z0).mean()),
+            "max_z": int(z.max()),
+            "min_z_post": int(post.min()),
+            "survival_rate": float((z > 0).all(1).mean()),
+        }
+        reacts = []
+        for bt in bursts:
+            per_seed = []
+            for s in range(z.shape[0]):
+                hits = np.nonzero(z[s, bt + 1 :] >= z0)[0]
+                per_seed.append(int(hits[0]) if hits.size else STEPS)
+            reacts.append(float(np.median(per_seed)))
+        m["reaction_median"] = reacts
+        m["overshoot"] = int(z.max() - z0)
+        return m
+
+    def csv_row(self) -> str:
+        m = self.metrics()
+        derived = (
+            f"meanZ={m['mean_z']:.1f}|dev={m['mean_abs_dev']:.2f}"
+            f"|react={'/'.join(str(int(r)) for r in m['reaction_median'])}"
+            f"|overshoot={m['overshoot']}|surv={m['survival_rate']:.2f}"
+        )
+        return f"{self.name},{self.us_per_call:.2f},{derived}"
+
+
+def run_case(
+    name: str,
+    graph,
+    pcfg: ProtocolConfig,
+    fcfg: FailureConfig,
+    steps: int = None,
+    seeds: int = None,
+) -> EnsembleResult:
+    steps = steps or STEPS
+    seeds = seeds or SEEDS
+    t0 = time.time()
+    outs = run_ensemble(graph, pcfg, fcfg, steps=steps, seeds=seeds)
+    z = np.asarray(outs.z)
+    wall = time.time() - t0
+    return EnsembleResult(
+        name=name,
+        z=z,
+        us_per_call=wall * 1e6 / (steps * seeds),
+        forks=int(np.asarray(outs.forks).sum()),
+        terms=int(np.asarray(outs.terms).sum()),
+    )
+
+
+def default_graph(n: int = 100, seed: int = 0):
+    return make_graph("regular", n, seed=seed, degree=8)
+
+
+def save_result(bench: str, rows: list, extra: dict | None = None) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    payload = {"bench": bench, "full": FULL, "rows": rows}
+    if extra:
+        payload.update(extra)
+    with open(os.path.join(RESULTS_DIR, f"{bench}.json"), "w") as f:
+        json.dump(payload, f, indent=2, default=float)

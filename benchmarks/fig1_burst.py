@@ -1,0 +1,26 @@
+"""Fig. 1: burst failures — MISSINGPERSON vs DECAFORK vs DECAFORK+.
+
+Paper claims reproduced: MISSINGPERSON over-reacts (overshoot well past
+Z_0); DECAFORK reacts and stabilizes around Z_0; DECAFORK+ reacts
+significantly faster (terminations allow a more aggressive eps)."""
+from benchmarks.common import (
+    burst_failures, default_graph, pcfg_for, run_case, save_result,
+)
+
+
+def run(verbose: bool = True):
+    g = default_graph()
+    fcfg = burst_failures()
+    rows = []
+    for alg in ("missingperson", "decafork", "decafork+"):
+        res = run_case(f"fig1/{alg}", g, pcfg_for(alg), fcfg)
+        rows.append({"name": res.name, "us_per_call": res.us_per_call,
+                     **res.metrics(), "forks": res.forks, "terms": res.terms})
+        if verbose:
+            print(res.csv_row())
+    save_result("fig1_burst", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,26 @@
+"""Fig. 2: continuous probabilistic failures p_f on top of bursts.
+
+Paper claims: DECAFORK recovers from bursts but cannot hold Z_0 under
+continuous failures; DECAFORK+ stays stable across p_f values."""
+from benchmarks.common import (
+    PROTO_START, burst_failures, default_graph, pcfg_for, run_case, save_result,
+)
+
+
+def run(verbose: bool = True):
+    g = default_graph()
+    rows = []
+    for pf in (0.001, 0.0002):
+        fcfg = burst_failures(p_fail=pf, p_fail_start=PROTO_START)
+        for alg in ("decafork", "decafork+"):
+            res = run_case(f"fig2/{alg}/pf={pf}", g, pcfg_for(alg), fcfg)
+            rows.append({"name": res.name, "us_per_call": res.us_per_call,
+                         **res.metrics()})
+            if verbose:
+                print(res.csv_row())
+    save_result("fig2_probabilistic", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,31 @@
+"""Fig. 3: a Byzantine node (2-state Markov chain) kills incoming walks.
+
+Paper claims: DECAFORK with the burst-tuned eps fails; only DECAFORK+
+copes with both the Byz phase and the sudden No-Byz phase (no runaway
+overshoot when the node turns honest)."""
+from benchmarks.common import (
+    PROTO_START, default_graph, pcfg_for, run_case, save_result,
+)
+from repro.core import FailureConfig
+
+
+def run(verbose: bool = True):
+    g = default_graph()
+    fcfg = FailureConfig(
+        byzantine_node=0, p_byz=0.001, byz_start_time=PROTO_START + 1000,
+    )
+    rows = []
+    for alg, kw in (("decafork", {}), ("decafork", dict(eps=2.5)),
+                    ("decafork+", {})):
+        label = f"fig3/{alg}" + (f"/eps={kw['eps']}" if kw else "")
+        res = run_case(label, g, pcfg_for(alg, **kw), fcfg)
+        rows.append({"name": res.name, "us_per_call": res.us_per_call,
+                     **res.metrics()})
+        if verbose:
+            print(res.csv_row())
+    save_result("fig3_byzantine", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,30 @@
+"""Fig. 4: consistency across graph sizes n in {50, 100, 200}.
+
+Paper claim: DECAFORK recovers on all sizes; smaller graphs react faster
+(return-time support is tighter)."""
+from benchmarks.common import (
+    burst_failures, pcfg_for, run_case, save_result,
+)
+from repro.graphs import make_graph
+
+# eps tuned per n as in the paper (eps in {1.85, 2, 2.1})
+EPS_BY_N = {50: 1.85, 100: 2.0, 200: 2.1}
+
+
+def run(verbose: bool = True):
+    rows = []
+    for n, eps in EPS_BY_N.items():
+        g = make_graph("regular", n, seed=0, degree=8)
+        res = run_case(
+            f"fig4/n={n}", g, pcfg_for("decafork", eps=eps), burst_failures()
+        )
+        rows.append({"name": res.name, "us_per_call": res.us_per_call,
+                     **res.metrics()})
+        if verbose:
+            print(res.csv_row())
+    save_result("fig4_nodes", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

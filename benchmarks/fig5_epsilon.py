@@ -1,0 +1,26 @@
+"""Fig. 5: the eps trade-off — reaction time vs undesired forks.
+
+Paper claim: larger eps -> faster reaction but more walks beyond Z_0;
+smaller eps risks failure after the second burst."""
+from benchmarks.common import (
+    burst_failures, default_graph, pcfg_for, run_case, save_result,
+)
+
+
+def run(verbose: bool = True):
+    g = default_graph()
+    rows = []
+    for eps in (1.8, 2.0, 2.25, 2.5):
+        res = run_case(
+            f"fig5/eps={eps}", g, pcfg_for("decafork", eps=eps), burst_failures()
+        )
+        rows.append({"name": res.name, "us_per_call": res.us_per_call,
+                     **res.metrics()})
+        if verbose:
+            print(res.csv_row())
+    save_result("fig5_epsilon", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,35 @@
+"""Fig. 6: stability across graph families (the survival function is
+estimated per node, so no distributional assumption is needed).
+
+Families as in the paper: random regular, complete, Erdos-Renyi,
+power-law; eps mildly tuned per family as the paper tunes per graph."""
+from benchmarks.common import (
+    burst_failures, pcfg_for, run_case, save_result,
+)
+from repro.graphs import make_graph
+
+FAMILIES = [
+    ("regular", dict(degree=8), 2.0),
+    ("complete", {}, 2.0),
+    ("erdos_renyi", {}, 1.9),
+    ("power_law", dict(m=4), 1.9),
+]
+
+
+def run(verbose: bool = True):
+    rows = []
+    for fam, kw, eps in FAMILIES:
+        g = make_graph(fam, 100, seed=0, **kw)
+        res = run_case(
+            f"fig6/{fam}", g, pcfg_for("decafork", eps=eps), burst_failures()
+        )
+        rows.append({"name": res.name, "us_per_call": res.us_per_call,
+                     **res.metrics()})
+        if verbose:
+            print(res.csv_row())
+    save_result("fig6_graphs", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

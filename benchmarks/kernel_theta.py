@@ -1,0 +1,64 @@
+"""Estimator implementations microbenchmark (gather vs compare vs kernel).
+
+The 'compare' formulation is the TPU-native restatement the Pallas kernel
+uses; on CPU/XLA we measure both jnp paths (the Pallas kernel itself runs
+in interpret mode here, so its wall-clock is not meaningful — its
+correctness is covered by tests, its roofline by the dry-run)."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import save_result
+
+
+def _bench(fn, args, iters=20):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6
+
+
+def run(verbose: bool = True):
+    from repro.core import estimator as est
+
+    key = jax.random.key(0)
+    rows = []
+    for n, W, B in ((1024, 64, 512), (4096, 64, 1024)):
+        ls = jax.random.randint(key, (n, W), -1, 500, dtype=jnp.int32)
+        hist = (jax.random.uniform(jax.random.fold_in(key, 1), (n, B)) * 4).astype(
+            jnp.float32
+        )
+        total = hist.sum(1)
+        t = jnp.int32(600)
+
+        @jax.jit
+        def gather(ls, hist, total, t):
+            cum = jnp.concatenate(
+                [jnp.zeros_like(hist[:, :1]), jnp.cumsum(hist, axis=1)], axis=1
+            )
+            nodes = jnp.broadcast_to(jnp.arange(ls.shape[0])[:, None], ls.shape)
+            s = est.survival_eval(cum, total, nodes, t - ls)
+            return jnp.sum(jnp.where(ls >= 0, s, 0.0), axis=1)
+
+        compare = jax.jit(est.node_sums_compare)
+        us_g = _bench(gather, (ls, hist, total, t))
+        us_c = _bench(compare, (ls, hist, total, t))
+        a = gather(ls, hist, total, t)
+        b = compare(ls, hist, total, t)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+        for name, us in (("gather", us_g), ("compare", us_c)):
+            row = f"kernel_theta/{name}/n={n}"
+            rows.append({"name": row, "us_per_call": us, "n": n, "W": W, "B": B})
+            if verbose:
+                print(f"{row},{us:.1f},identical=True")
+    save_result("kernel_theta", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,101 @@
+"""Aggregate experiments/dryrun/*.json into the EXPERIMENTS.md tables.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.report_roofline            # print
+  PYTHONPATH=src python -m benchmarks.report_roofline --markdown # tables
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+HBM_PER_CHIP = 16 * 2**30  # v5e: 16 GiB
+
+
+def load_records(dry_dir: str = DRYRUN_DIR):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(dry_dir, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_bytes(b: float) -> str:
+    return f"{b / 2**30:.1f}"
+
+
+def fmt_s(x: float) -> str:
+    if x >= 0.1:
+        return f"{x:.2f}"
+    return f"{x * 1e3:.2f}m"
+
+
+def roofline_table(recs, mesh="pod256", tag_filter=""):
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | bottleneck | "
+        "GiB/dev | fits | useful |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("mesh") != mesh or not r.get("ok") or "roofline" not in r:
+            continue
+        if r["arch"].startswith("protocol"):
+            continue
+        rl = r["roofline"]
+        mem = r["memory"]["total_bytes"]
+        fits = "Y" if mem <= HBM_PER_CHIP else f"N ({mem / HBM_PER_CHIP:.0f}x)"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(rl['compute_s'])} | "
+            f"{fmt_s(rl['memory_s'])} | {fmt_s(rl['collective_s'])} | "
+            f"**{rl['bottleneck']}** | {fmt_bytes(mem)} | {fits} | "
+            f"{rl['useful_ratio']:.2f} |"
+        )
+    return "\n".join(lines)
+
+
+def compile_table(recs, mesh="pod512"):
+    lines = [
+        "| arch | shape | ok | compile s | GiB/dev |",
+        "|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("mesh") != mesh:
+            continue
+        mem = r.get("memory", {}).get("total_bytes", 0)
+        lines.append(
+            f"| {r['arch']} | {r.get('shape','-')} | "
+            f"{'ok' if r.get('ok') else 'FAIL: ' + r.get('error','')[:60]} | "
+            f"{r.get('compile_seconds','-')} | {fmt_bytes(mem)} |"
+        )
+    return "\n".join(lines)
+
+
+def summary(recs):
+    by_mesh = {}
+    for r in recs:
+        key = r.get("mesh", "?")
+        by_mesh.setdefault(key, [0, 0])
+        by_mesh[key][0] += 1
+        by_mesh[key][1] += 1 if r.get("ok") else 0
+    return {m: f"{ok}/{n} ok" for m, (n, ok) in by_mesh.items()}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--markdown", action="store_true")
+    ap.add_argument("--dir", default=DRYRUN_DIR)
+    args = ap.parse_args()
+    recs = load_records(args.dir)
+    print("# summary:", summary(recs))
+    print("\n## Roofline (single pod, 16x16 = 256 chips)\n")
+    print(roofline_table(recs, "pod256"))
+    print("\n## Multi-pod compile proof (2x16x16 = 512 chips)\n")
+    print(compile_table(recs, "pod512"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Benchmark harness entry point — one benchmark per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Reduced sizes by default;
+set BENCH_FULL=1 for the paper-scale ensembles (50 seeds, 9000 steps).
+
+  PYTHONPATH=src python -m benchmarks.run             # all figures
+  PYTHONPATH=src python -m benchmarks.run fig1 fig3   # a subset
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks import (
+    auto_eps,
+    fig1_burst,
+    fig2_probabilistic,
+    fig3_byzantine,
+    fig4_nodes,
+    fig5_epsilon,
+    fig6_graphs,
+    kernel_theta,
+    theory_bounds,
+)
+
+BENCHES = {
+    "fig1": fig1_burst.run,
+    "fig2": fig2_probabilistic.run,
+    "fig3": fig3_byzantine.run,
+    "fig4": fig4_nodes.run,
+    "fig5": fig5_epsilon.run,
+    "fig6": fig6_graphs.run,
+    "theory": theory_bounds.run,
+    "kernel_theta": kernel_theta.run,
+    "auto_eps": auto_eps.run,
+}
+
+
+def main() -> None:
+    names = [a for a in sys.argv[1:] if not a.startswith("-")] or list(BENCHES)
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name in names:
+        if name not in BENCHES:
+            raise SystemExit(f"unknown benchmark {name!r}; have {list(BENCHES)}")
+        BENCHES[name]()
+    print(f"# total wall time: {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Theory-vs-simulation: Thm. 2 reaction bound and Cor. 3 overshoot.
+
+Checks that the worst-case analytical bounds hold over the measured
+ensembles (bounds must upper-bound the observed quantities)."""
+import numpy as np
+
+from benchmarks.common import (
+    BURSTS, Z0, burst_failures, default_graph, pcfg_for, run_case, save_result,
+)
+from repro.core.theory import Rates, overshoot_recursion, reaction_time_bound
+from repro.graphs import arrival_rate_estimate, return_rate_estimate
+
+
+def run(verbose: bool = True):
+    g = default_graph()
+    rates = Rates(
+        lambda_r=float(return_rate_estimate(g).mean()),
+        lambda_a=float(arrival_rate_estimate(g)),
+    )
+    res = run_case("theory/decafork", g, pcfg_for("decafork"), burst_failures())
+    m = res.metrics()
+    # Thm. 2: time until the FIRST fork after D=5 failures (K=5 remain)
+    t_bound = reaction_time_bound(
+        d_failed=5, r_forked=0, k_remaining=Z0 - 5, t_d=0.0,
+        eps=2.0, p=1.0 / Z0, rates=rates, delta=0.05,
+    )
+    observed_react = m["reaction_median"][0]
+    # Cor. 3: overshoot 500 steps after the burst
+    oc = overshoot_recursion(
+        z_after_failure=Z0 - 5, d_failed=5, t_d=0.0, steps=500,
+        eps=2.0, p=1.0 / Z0, rates=rates,
+    )
+    rows = [{
+        "name": "theory/thm2_vs_sim",
+        "us_per_call": res.us_per_call,
+        "thm2_first_fork_bound": float(t_bound),
+        "observed_full_recovery_median": float(observed_react),
+        "cor3_z_bound_at_500": float(oc[-1]),
+        "observed_max_z": m["max_z"],
+    }]
+    if verbose:
+        print(
+            f"theory/thm2,{res.us_per_call:.2f},"
+            f"bound_first_fork={t_bound:.0f}|observed_recovery={observed_react:.0f}"
+            f"|cor3_bound500={oc[-1]:.1f}|observed_maxZ={m['max_z']}"
+        )
+    save_result("theory_bounds", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,3 @@
+from repro.checkpoint.checkpoint import save_pytree, load_pytree, save_walk_snapshot
+
+__all__ = ["save_pytree", "load_pytree", "save_walk_snapshot"]

@@ -1,0 +1,52 @@
+"""Minimal dependency-free pytree checkpointing (npz + path-keyed leaves).
+
+A forked walk *is* a live checkpoint copy — the same serialization is used
+to snapshot a walk's model replica so a restarted node can re-enter the
+system (``save_walk_snapshot``).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.utils.tree import tree_flatten_with_paths
+
+
+def save_pytree(path: str, tree: Any, metadata: dict | None = None) -> None:
+    flat = tree_flatten_with_paths(tree)
+    arrays = {}
+    for p, leaf in flat:
+        a = np.asarray(leaf)
+        if a.dtype.name == "bfloat16":  # npz can't serialize ml_dtypes
+            a = a.astype(np.float32)
+        arrays[p] = a
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **arrays)
+    if metadata is not None:
+        with open(path + ".meta.json", "w") as f:
+            json.dump(metadata, f, indent=2, default=str)
+
+
+def load_pytree(path: str, like: Any) -> Any:
+    """Restore into the structure of `like` (shape/dtype checked)."""
+    with np.load(path if path.endswith(".npz") else path + ".npz") as data:
+        flat = tree_flatten_with_paths(like)
+        leaves = []
+        for p, ref in flat:
+            if p not in data:
+                raise KeyError(f"checkpoint missing leaf {p!r}")
+            arr = data[p]
+            if tuple(arr.shape) != tuple(ref.shape):
+                raise ValueError(f"shape mismatch for {p}: {arr.shape} vs {ref.shape}")
+            leaves.append(arr.astype(ref.dtype))
+    treedef = jax.tree.structure(like)
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def save_walk_snapshot(path: str, replica_params: Any, walk_slot: int, step: int) -> None:
+    snap = jax.tree.map(lambda x: x[walk_slot], replica_params)
+    save_pytree(path, snap, metadata={"walk_slot": walk_slot, "step": step})

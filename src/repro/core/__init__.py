@@ -1,0 +1,44 @@
+"""The paper's primary contribution: self-regulating random walks.
+
+DECAFORK / DECAFORK+ / MISSINGPERSON protocols, the return-time estimator,
+the jitted multi-walk simulator, the node-sharded distributed step, and the
+Section IV/V theory (Irwin-Hall threshold design + computable bounds).
+"""
+from repro.core.protocol import ProtocolConfig, ALGORITHMS
+from repro.core.failures import FailureConfig
+from repro.core.simulator import (
+    run_simulation,
+    run_ensemble,
+    reaction_time,
+    max_overshoot,
+    survived,
+    SimState,
+    StepOutputs,
+)
+from repro.core.irwin_hall import (
+    irwin_hall_cdf,
+    scaled_irwin_hall_cdf,
+    design_eps,
+    design_eps2,
+    false_fork_probability,
+    false_termination_probability,
+)
+
+__all__ = [
+    "ProtocolConfig",
+    "ALGORITHMS",
+    "FailureConfig",
+    "run_simulation",
+    "run_ensemble",
+    "reaction_time",
+    "max_overshoot",
+    "survived",
+    "SimState",
+    "StepOutputs",
+    "irwin_hall_cdf",
+    "scaled_irwin_hall_cdf",
+    "design_eps",
+    "design_eps2",
+    "false_fork_probability",
+    "false_termination_probability",
+]

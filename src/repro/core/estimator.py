@@ -1,0 +1,154 @@
+"""Return-time estimation and the theta-hat walk-count estimator (Eq. 1).
+
+This is the heart of the paper: every node i maintains
+  - ``last_seen[i, c]``: last time step at which walk (track) c visited i
+    (-1 if never seen) — the random variable L_{i,c}(t);
+  - ``hist[i, b]``: empirical histogram of observed return times R_i
+    (bin b holds counts of return time b+1, the final bin clamps the tail).
+
+From the histogram each node derives the empirical survival function
+  S_i(r) = Pr(R_i > r) = 1 - F_hat_{R_i}(r)
+and estimates the number of live walks as (Eq. 1)
+  theta_hat_i(t) = 1/2 + sum_{c != k, seen} S_i(t - last_seen[i, c]).
+
+Everything here is functional and jit/vmap-friendly: histograms are dense
+(n, B) float32 arrays, survival evaluation is a gather into the exclusive
+cumulative sum, and theta-hat is a masked (W, C) reduction.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+NEVER = -1  # sentinel for "walk never seen at this node"
+
+
+class ReturnTimeState(NamedTuple):
+    """Per-node empirical return-time statistics."""
+
+    hist: jax.Array  # (n, B) float32 counts; bin b <-> return time b+1
+    total: jax.Array  # (n,) float32 total sample count
+
+
+def init_return_time_state(n: int, bins: int) -> ReturnTimeState:
+    return ReturnTimeState(
+        hist=jnp.zeros((n, bins), jnp.float32),
+        total=jnp.zeros((n,), jnp.float32),
+    )
+
+
+def record_returns(
+    state: ReturnTimeState,
+    nodes: jax.Array,  # (W,) int32 node visited by each walk
+    r: jax.Array,  # (W,) int32 observed return times (t - last_seen)
+    valid: jax.Array,  # (W,) bool — active walk with a prior visit record
+) -> ReturnTimeState:
+    """Scatter-add observed return-time samples into per-node histograms."""
+    bins = state.hist.shape[1]
+    b = jnp.clip(r, 1, bins) - 1
+    w = valid.astype(jnp.float32)
+    hist = state.hist.at[nodes, b].add(w, mode="drop")
+    total = state.total.at[nodes].add(w, mode="drop")
+    return ReturnTimeState(hist=hist, total=total)
+
+
+def survival_cumulative(state: ReturnTimeState) -> jax.Array:
+    """(n, B+1) table C with C[i, r] = #samples <= r (C[i, 0] = 0)."""
+    csum = jnp.cumsum(state.hist, axis=1)
+    return jnp.concatenate([jnp.zeros_like(csum[:, :1]), csum], axis=1)
+
+
+def survival_eval(
+    cum: jax.Array,  # (n, B+1) from survival_cumulative
+    total: jax.Array,  # (n,)
+    nodes: jax.Array,  # (...,) int32
+    r: jax.Array,  # (...,) int32 elapsed times
+) -> jax.Array:
+    """Empirical S_i(r) = 1 - F_hat(r), elementwise over broadcasted args.
+
+    Conventions: S(r <= 0) = 1; nodes with no samples yet return 1
+    (optimistic prior — a walk is presumed alive absent any evidence).
+    """
+    bins = cum.shape[1] - 1
+    r_cl = jnp.clip(r, 0, bins)
+    tot = total[nodes]
+    seen_mass = cum[nodes, r_cl]
+    s = 1.0 - seen_mass / jnp.maximum(tot, 1.0)
+    s = jnp.where(tot > 0, s, 1.0)
+    return jnp.where(r <= 0, 1.0, s)
+
+
+def analytic_survival_eval(
+    pi: jax.Array,  # (n,) stationary distribution (geometric rate q_i = pi_i)
+    nodes: jax.Array,
+    r: jax.Array,
+) -> jax.Array:
+    """Analytic geometric survival S_i(r) = (1 - pi_i)^r (footnote 5)."""
+    q = pi[nodes]
+    s = jnp.exp(jnp.log1p(-q) * r.astype(jnp.float32))
+    return jnp.where(r <= 0, 1.0, s)
+
+
+def theta_hat(
+    last_seen: jax.Array,  # (n, C) int32
+    cum: jax.Array,  # (n, B+1)
+    total: jax.Array,  # (n,)
+    t: jax.Array,  # scalar int32 current time
+    pos: jax.Array,  # (W,) node of each visiting walk
+    track: jax.Array,  # (W,) column owned by each walk
+    *,
+    pi: jax.Array | None = None,  # if set, use analytic survival instead
+) -> jax.Array:
+    """Eq. (1): theta_hat for every walk slot's current node, vectorized.
+
+    Returns (W,) theta values; caller masks by which walks were "chosen"
+    by their node. The visiting walk's own column is excluded (it
+    contributes the deterministic 1/2 offset).
+    """
+    W = pos.shape[0]
+    C = last_seen.shape[1]
+    ls = last_seen[pos]  # (W, C)
+    elapsed = t - ls  # (W, C)
+    nodes_b = jnp.broadcast_to(pos[:, None], (W, C))
+    if pi is not None:
+        s = analytic_survival_eval(pi, nodes_b, elapsed)
+    else:
+        s = survival_eval(cum, total, nodes_b, elapsed)
+    cols = jnp.arange(C)[None, :]
+    mask = (ls != NEVER) & (cols != track[:, None])
+    return 0.5 + jnp.sum(jnp.where(mask, s, 0.0), axis=1)
+
+
+def node_sums_compare(
+    last_seen: jax.Array,  # (n, C)
+    hist: jax.Array,  # (n, B)
+    total: jax.Array,  # (n,)
+    t: jax.Array,
+) -> jax.Array:
+    """sum_c S_i(t - L_{i,c}) per node via the TPU compare-accumulate
+    formulation (no gather): cum_i(r) = sum_b hist[i,b] [r > b].
+
+    Same math as kernels/theta_survival.py; exists in pure jnp both as
+    the kernel oracle and as a measurable CPU/XLA variant.
+    """
+    B = hist.shape[1]
+    valid = last_seen != NEVER
+    r = jnp.where(valid, t - last_seen, 0)  # (n, C)
+    bidx = jnp.arange(B, dtype=jnp.int32)
+    over = (r[:, :, None] > bidx[None, None, :]) & valid[:, :, None]
+    cnt = jnp.sum(over.astype(jnp.float32), axis=1)  # (n, B)
+    mass = jnp.sum(cnt * hist, axis=1)
+    n_valid = jnp.sum(valid, axis=1).astype(jnp.float32)
+    s = n_valid - mass / jnp.maximum(total, 1.0)
+    return jnp.where(total > 0, s, n_valid)
+
+
+def theta_hat_from_node_sums(node_sums: jax.Array, pos: jax.Array) -> jax.Array:
+    """theta for a visiting walk = node_sum - 1 (own fresh column, S=1)
+    + 1/2 (deterministic self term) = node_sum - 1/2.
+
+    Valid only AFTER last_seen[pos, track] was updated to t.
+    """
+    return node_sums[pos] - 0.5

@@ -1,0 +1,81 @@
+"""Threat models (Section II): burst, probabilistic and Byzantine failures.
+
+The protocol makes no assumption about failures; these models exist to
+*challenge* it, mirroring the paper's evaluation:
+  1) burst: D walks fail simultaneously at scheduled times (Figs. 1, 4-6);
+  2) probabilistic: each walk independently dies w.p. p_f per step (Fig. 2);
+  3) Byzantine: one node follows a 2-state Markov chain and, while in the
+     Byz state, deterministically terminates every incoming walk (Fig. 3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class FailureConfig:
+    burst_times: Tuple[int, ...] = ()
+    burst_sizes: Tuple[int, ...] = ()
+    p_fail: float = 0.0
+    p_fail_start: int = 0  # probabilistic failures begin at this step
+    byzantine_node: int = -1  # -1 disables
+    p_byz: float = 0.0  # state-flip probability per step
+    byz_start: bool = True  # start in the Byz (terminating) state
+    byz_start_time: int = 0  # node behaves honestly before this step
+
+    def __post_init__(self):
+        if len(self.burst_times) != len(self.burst_sizes):
+            raise ValueError("burst_times and burst_sizes must align")
+
+
+def apply_probabilistic_failures(
+    active: jax.Array, t: jax.Array, cfg: FailureConfig, key: jax.Array
+) -> jax.Array:
+    if cfg.p_fail <= 0.0:
+        return active
+    die = (jax.random.uniform(key, active.shape) < cfg.p_fail) & (
+        t >= cfg.p_fail_start
+    )
+    return active & ~die
+
+
+def apply_burst_failures(
+    active: jax.Array, t: jax.Array, cfg: FailureConfig, key: jax.Array
+) -> jax.Array:
+    """Kill `size` uniformly random active walks at each scheduled time."""
+    for i, (bt, bs) in enumerate(zip(cfg.burst_times, cfg.burst_sizes)):
+        k = jax.random.fold_in(key, i)
+        score = jax.random.uniform(k, active.shape)
+        score = jnp.where(active, score, jnp.inf)
+        # rank among active walks by random score
+        rank = jnp.sum(score[:, None] > score[None, :], axis=1)
+        kill = active & (rank < bs) & (t == bt)
+        active = active & ~kill
+    return active
+
+
+def step_byzantine(
+    active: jax.Array,
+    pos: jax.Array,
+    t: jax.Array,
+    byz_state: jax.Array,  # scalar bool (True = Byz / terminating)
+    cfg: FailureConfig,
+    key: jax.Array,
+):
+    """Advance the 2-state chain and kill walks sitting on the Byz node.
+
+    The node behaves honestly before ``byz_start_time`` — the paper's
+    standing assumption that walks circulate failure-free long enough to
+    build return-time statistics before the first failure event.
+    """
+    if cfg.byzantine_node < 0:
+        return active, byz_state
+    armed = t >= cfg.byz_start_time
+    flip = (jax.random.uniform(key, ()) < cfg.p_byz) & armed
+    byz_state = jnp.logical_xor(byz_state, flip)
+    kill = active & byz_state & armed & (pos == cfg.byzantine_node)
+    return active & ~kill, byz_state

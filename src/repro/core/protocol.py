@@ -1,0 +1,149 @@
+"""Decision rules: DECAFORK, DECAFORK+ and the MISSINGPERSON baseline.
+
+All rules are pure functions of (estimates, thresholds, PRNG key) returning
+boolean event masks; the simulator executes the resulting forks and
+terminations via the slot machinery in ``walkers.py``. Rules fire only for
+"chosen" walks — per paper footnote 6, a node visited by several walks
+runs the procedure for exactly one of them (we pick the lowest slot index).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.estimator import NEVER
+
+ALGORITHMS = ("none", "missingperson", "decafork", "decafork+")
+
+
+@dataclasses.dataclass(frozen=True)
+class ProtocolConfig:
+    """Static protocol parameters (hashable -> usable as a jit static arg)."""
+
+    algorithm: str = "decafork"
+    z0: int = 10  # target number of walks Z_0
+    max_walks: int = 40  # walk slot capacity W (>= z0)
+    eps: float = 2.0  # forking threshold (theta_hat < eps)
+    eps2: float = 5.75  # termination threshold (theta_hat > eps2), DECAFORK+
+    eps_mp: float = 300.0  # MISSINGPERSON timeout
+    fork_prob: float | None = None  # p; defaults to 1/z0
+    rt_bins: int = 1024  # return-time histogram resolution
+    protocol_start: int = 0  # no fork/terminate decisions before this step
+    analytic_survival: bool = False  # footnote 5: geometric survival from pi
+    estimator_impl: str = "gather"  # 'gather' | 'compare' | 'pallas'
+    # ---- beyond-paper: self-calibrating thresholds ----------------------
+    # The paper hand-tunes eps per graph (Fig. 4 uses eps in {1.85,2,2.1})
+    # and its Irwin-Hall rule ignores the inspection-paradox bias
+    # (EXPERIMENTS.md "Estimator bias"). With auto_eps every node records
+    # its own theta-hat distribution during the warmup phase and sets its
+    # fork/terminate thresholds as LOCAL quantiles of that distribution —
+    # decentralized (Rule 1), bias-inclusive, and graph-agnostic.
+    auto_eps: bool = False
+    eps_quantile: float = 0.05  # fork below this warmup quantile
+    eps2_quantile: float = 0.995  # terminate above this warmup quantile
+    theta_bin_width: float = 0.25
+    auto_min_samples: int = 50  # fall back to eps/eps2 below this count
+
+    def __post_init__(self):
+        if self.algorithm not in ALGORITHMS:
+            raise ValueError(f"unknown algorithm {self.algorithm!r}")
+        if self.max_walks < self.z0:
+            raise ValueError("max_walks must be >= z0")
+
+    @property
+    def p(self) -> float:
+        return self.fork_prob if self.fork_prob is not None else 1.0 / self.z0
+
+
+def choose_walks(pos: jax.Array, active: jax.Array, n_nodes: int) -> jax.Array:
+    """Footnote 6: per node, select the single lowest-index visiting walk.
+
+    Returns (W,) bool mask of walks that run the protocol this step.
+    """
+    W = pos.shape[0]
+    slots = jnp.arange(W, dtype=jnp.int32)
+    cand = jnp.where(active, slots, W)
+    best = jnp.full((n_nodes,), W, jnp.int32).at[pos].min(cand, mode="drop")
+    return active & (best[pos] == slots)
+
+
+def decafork_decisions(
+    theta: jax.Array,  # (W,) theta-hat per walk
+    chosen: jax.Array,  # (W,) bool
+    key: jax.Array,
+    cfg: ProtocolConfig,
+    enabled: jax.Array,  # scalar bool: t >= protocol_start
+    eps: jax.Array | float | None = None,  # per-walk override (auto_eps)
+    eps2: jax.Array | float | None = None,
+):
+    """DECAFORK fork mask (and DECAFORK+ termination mask)."""
+    eps = cfg.eps if eps is None else eps
+    eps2 = cfg.eps2 if eps2 is None else eps2
+    k_fork, k_term = jax.random.split(key)
+    u_fork = jax.random.uniform(k_fork, theta.shape)
+    fork = chosen & (theta < eps) & (u_fork < cfg.p) & enabled
+    if cfg.algorithm == "decafork+":
+        u_term = jax.random.uniform(k_term, theta.shape)
+        term = chosen & (theta > eps2) & (u_term < cfg.p) & enabled
+        # eps < eps2 makes these disjoint, but guard anyway
+        term = term & ~fork
+    else:
+        term = jnp.zeros_like(fork)
+    return fork, term
+
+
+def theta_quantile_thresholds(
+    theta_hist: jax.Array,  # (n, TB) per-node warmup theta-hat histogram
+    pos: jax.Array,  # (W,) node per walk
+    cfg: ProtocolConfig,
+):
+    """Per-walk (eps, eps2) from the visiting node's own theta-hat
+    distribution (auto_eps mode). Nodes with too few warmup samples fall
+    back to the configured global thresholds."""
+    rows = theta_hist[pos]  # (W, TB)
+    total = jnp.sum(rows, axis=1, keepdims=True)
+    cdf = jnp.cumsum(rows, axis=1) / jnp.maximum(total, 1.0)
+    TB = rows.shape[1]
+    centers = (jnp.arange(TB, dtype=jnp.float32) + 0.5) * cfg.theta_bin_width
+    big = jnp.float32(1e9)
+
+    def quantile(q):
+        ok = cdf >= q
+        idx = jnp.argmax(ok, axis=1)  # first bin reaching the quantile
+        return centers[idx]
+
+    eps_local = quantile(cfg.eps_quantile)
+    eps2_local = quantile(cfg.eps2_quantile)
+    have = total[:, 0] >= cfg.auto_min_samples
+    eps = jnp.where(have, eps_local, cfg.eps)
+    eps2 = jnp.where(have, eps2_local, cfg.eps2)
+    del big
+    return eps, eps2
+
+
+def missingperson_decisions(
+    last_seen: jax.Array,  # (n, C) int32
+    pos: jax.Array,  # (W,)
+    track: jax.Array,  # (W,)
+    chosen: jax.Array,  # (W,)
+    t: jax.Array,
+    key: jax.Array,
+    cfg: ProtocolConfig,
+    enabled: jax.Array,
+) -> jax.Array:
+    """MISSINGPERSON: (W, Z0) mask of replacement-fork events.
+
+    Event (k, l) means: the node visited by walk k deems initial id l
+    missing (unseen for > eps_mp) and forks a duplicate of k carrying
+    identifier l "in replacement of RW l".
+    """
+    W = pos.shape[0]
+    z0 = cfg.z0
+    ls = last_seen[pos, :z0]  # (W, z0)
+    stale = (t - ls) > cfg.eps_mp
+    ids = jnp.arange(z0)[None, :]
+    not_self = ids != track[:, None]
+    u = jax.random.uniform(key, (W, z0))
+    return chosen[:, None] & stale & not_self & (u < cfg.p) & enabled

@@ -1,0 +1,304 @@
+"""Fully-jitted multi-walk simulator (the paper's evaluation engine).
+
+One synchronous round (time t -> t+1):
+  1. every live walk hops to a uniform random neighbor;
+  2. failures strike (probabilistic, burst, Byzantine — Section II);
+  3. each node visited by >= 1 surviving walk "chooses one" (footnote 6),
+     records return-time samples for *all* visitors, updates last-seen;
+  4. the chosen walk's node computes theta-hat (Eq. 1) and runs the
+     protocol: DECAFORK fork / DECAFORK+ fork-or-terminate /
+     MISSINGPERSON timeout replacement;
+  5. forks/terminations execute through the slot machinery.
+
+The whole trajectory runs under one ``lax.scan``; vmap over PRNG keys gives
+the 50-seed ensembles of the paper's figures in a single compiled call.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import estimator as est
+from repro.core import failures as flr
+from repro.core import protocol as prt
+from repro.core import walkers as wlk
+from repro.graphs.generators import Graph
+from repro.graphs.spectral import stationary_distribution
+from repro.utils.prng import fold_in_time
+
+
+class SimState(NamedTuple):
+    t: jax.Array  # scalar int32
+    walks: wlk.WalkState
+    last_seen: jax.Array  # (n, W) int32
+    rts: est.ReturnTimeState
+    byz_state: jax.Array  # scalar bool
+    key: jax.Array
+    theta_hist: jax.Array  # (n, TB) warmup theta-hat histogram (auto_eps)
+
+
+class StepOutputs(NamedTuple):
+    z: jax.Array  # live walk count after the step
+    forks: jax.Array  # forks executed this step
+    terms: jax.Array  # deliberate terminations this step
+    failures: jax.Array  # walks lost to the threat model this step
+    theta_mean: jax.Array  # mean theta-hat over chosen walks (diagnostic)
+    fork_parent: jax.Array  # (W,) parent slot of a walk forked into s, else -1
+    terminated: jax.Array  # (W,) walks deliberately terminated this step
+
+
+def init_state(n: int, pcfg: prt.ProtocolConfig, fcfg: flr.FailureConfig, key: jax.Array) -> SimState:
+    W = pcfg.max_walks
+    k_init, k_run = jax.random.split(key)
+    walks = wlk.init_walks(pcfg.z0, W, n, k_init)
+    if pcfg.algorithm == "missingperson":
+        # paper: L_{i,l}(0) = 0 for all initial ids at every node
+        last_seen = jnp.where(
+            jnp.arange(W)[None, :] < pcfg.z0,
+            jnp.zeros((n, W), jnp.int32),
+            est.NEVER,
+        )
+    else:
+        last_seen = jnp.full((n, W), est.NEVER, jnp.int32)
+        # the starting node of each initial walk has seen it at t=0
+        last_seen = last_seen.at[walks.pos, jnp.arange(W)].max(
+            jnp.where(walks.active, 0, est.NEVER)
+        )
+    tb = _theta_bins(pcfg)
+    return SimState(
+        t=jnp.int32(0),
+        walks=walks,
+        last_seen=last_seen,
+        rts=est.init_return_time_state(n, pcfg.rt_bins),
+        byz_state=jnp.asarray(fcfg.byz_start),
+        key=k_run,
+        theta_hist=jnp.zeros((n, tb), jnp.float32),
+    )
+
+
+def _theta_bins(pcfg: prt.ProtocolConfig) -> int:
+    # theta-hat <= 0.5 + (slots - 1); one extra bin absorbs the tail
+    return int((pcfg.max_walks + 1) / pcfg.theta_bin_width) + 1
+
+
+def protocol_step(
+    state: SimState,
+    pcfg: prt.ProtocolConfig,
+    fcfg: flr.FailureConfig,
+    neighbors: jax.Array,
+    degrees: jax.Array,
+    pi: jax.Array | None,
+):
+    """One synchronous round; returns (next state, per-step outputs)."""
+    t = state.t
+    key = state.key
+    k_move = fold_in_time(key, t, 0)
+    k_pfail = fold_in_time(key, t, 1)
+    k_burst = fold_in_time(key, t, 2)
+    k_byz = fold_in_time(key, t, 3)
+    k_dec = fold_in_time(key, t, 4)
+
+    ws = state.walks
+    n_before = jnp.sum(ws.active)
+
+    # 1. movement
+    ws = wlk.move_walks(ws, neighbors, degrees, k_move)
+
+    # 2. threat models
+    active = flr.apply_probabilistic_failures(ws.active, t, fcfg, k_pfail)
+    active = flr.apply_burst_failures(active, t, fcfg, k_burst)
+    active, byz_state = flr.step_byzantine(
+        active, ws.pos, t, state.byz_state, fcfg, k_byz
+    )
+    ws = ws._replace(active=active)
+    n_failed = n_before - jnp.sum(active)
+
+    # 3. observations: return samples + last-seen updates for ALL visitors
+    last_seen = state.last_seen
+    prev = last_seen[ws.pos, ws.track]  # (W,)
+    r = t - prev
+    valid = ws.active & (prev != est.NEVER) & (r >= 1)
+    rts = est.record_returns(state.rts, ws.pos, r, valid)
+    upd = jnp.where(ws.active, t, est.NEVER)
+    last_seen = last_seen.at[ws.pos, ws.track].max(upd, mode="drop")
+
+    # 4. estimation + decisions for chosen walks
+    chosen = prt.choose_walks(ws.pos, ws.active, degrees.shape[0])
+    enabled = t >= pcfg.protocol_start
+    theta_hist = state.theta_hist
+    if pcfg.algorithm in ("decafork", "decafork+"):
+        if pcfg.estimator_impl == "gather" or pi is not None:
+            cum = est.survival_cumulative(rts)
+            theta = est.theta_hat(
+                last_seen, cum, rts.total, t, ws.pos, ws.track, pi=pi
+            )
+        elif pcfg.estimator_impl == "compare":
+            sums = est.node_sums_compare(last_seen, rts.hist, rts.total, t)
+            theta = est.theta_hat_from_node_sums(sums, ws.pos)
+        elif pcfg.estimator_impl == "pallas":
+            from repro.kernels import theta_sums_pallas
+
+            sums = theta_sums_pallas(last_seen, rts.hist, rts.total, t)
+            theta = est.theta_hat_from_node_sums(sums, ws.pos)
+        else:
+            raise ValueError(pcfg.estimator_impl)
+        # beyond-paper: per-node self-calibrated thresholds (auto_eps)
+        if pcfg.auto_eps:
+            warmup = ~enabled
+            b = jnp.clip(
+                (theta / pcfg.theta_bin_width).astype(jnp.int32),
+                0,
+                theta_hist.shape[1] - 1,
+            )
+            w = (chosen & warmup).astype(jnp.float32)
+            theta_hist = theta_hist.at[ws.pos, b].add(w, mode="drop")
+            eps_w, eps2_w = prt.theta_quantile_thresholds(theta_hist, ws.pos, pcfg)
+            fork_mask, term_mask = prt.decafork_decisions(
+                theta, chosen, k_dec, pcfg, enabled, eps=eps_w, eps2=eps2_w
+            )
+        else:
+            fork_mask, term_mask = prt.decafork_decisions(
+                theta, chosen, k_dec, pcfg, enabled
+            )
+        ws = wlk.execute_terminations(ws, term_mask)
+        n_terms = jnp.sum(term_mask)
+        ws, last_seen, n_forks, fork_parent = wlk.execute_forks(
+            ws, last_seen, fork_mask, ws.pos, None, t
+        )
+        theta_mean = jnp.sum(jnp.where(chosen, theta, 0.0)) / jnp.maximum(
+            jnp.sum(chosen), 1
+        )
+    elif pcfg.algorithm == "missingperson":
+        ev = prt.missingperson_decisions(
+            last_seen, ws.pos, ws.track, chosen, t, k_dec, pcfg, enabled
+        )  # (W, z0)
+        W, z0 = ev.shape
+        ev_mask = ev.reshape(-1)
+        ev_origin = jnp.broadcast_to(ws.pos[:, None], (W, z0)).reshape(-1)
+        ev_track = jnp.broadcast_to(
+            jnp.arange(z0, dtype=jnp.int32)[None, :], (W, z0)
+        ).reshape(-1)
+        ev_parent = jnp.broadcast_to(
+            jnp.arange(W, dtype=jnp.int32)[:, None], (W, z0)
+        ).reshape(-1)
+        ws, last_seen, n_forks, fork_parent = wlk.execute_forks(
+            ws, last_seen, ev_mask, ev_origin, ev_track, t, ev_parent
+        )
+        n_terms = jnp.int32(0)
+        term_mask = jnp.zeros((W,), bool)
+        theta_mean = jnp.float32(0.0)
+    else:  # 'none': plain multi-RW system without self-regulation
+        n_forks = jnp.int32(0)
+        n_terms = jnp.int32(0)
+        theta_mean = jnp.float32(0.0)
+        fork_parent = jnp.full((ws.pos.shape[0],), -1, jnp.int32)
+        term_mask = jnp.zeros_like(ws.active)
+
+    new_state = SimState(
+        t=t + 1,
+        walks=ws,
+        last_seen=last_seen,
+        rts=rts,
+        byz_state=byz_state,
+        key=key,
+        theta_hist=theta_hist,
+    )
+    out = StepOutputs(
+        z=jnp.sum(ws.active),
+        forks=n_forks,
+        terms=n_terms,
+        failures=n_failed,
+        theta_mean=theta_mean,
+        fork_parent=fork_parent,
+        terminated=term_mask,
+    )
+    return new_state, out
+
+
+@functools.partial(jax.jit, static_argnames=("pcfg", "fcfg", "steps", "n"))
+def _run(key, neighbors, degrees, pi, pcfg, fcfg, steps, n):
+    state = init_state(n, pcfg, fcfg, key)
+
+    def body(s, _):
+        return protocol_step(s, pcfg, fcfg, neighbors, degrees, pi)
+
+    return jax.lax.scan(body, state, None, length=steps)
+
+
+def _graph_arrays(graph: Graph, pcfg: prt.ProtocolConfig):
+    neighbors = jnp.asarray(graph.neighbors)
+    degrees = jnp.asarray(graph.degrees)
+    pi = (
+        jnp.asarray(stationary_distribution(graph), jnp.float32)
+        if pcfg.analytic_survival
+        else None
+    )
+    return neighbors, degrees, pi
+
+
+def run_simulation(
+    graph: Graph,
+    pcfg: prt.ProtocolConfig,
+    fcfg: flr.FailureConfig,
+    steps: int,
+    key: jax.Array | int = 0,
+):
+    """Run one trajectory; returns (final SimState, StepOutputs over time)."""
+    if isinstance(key, int):
+        key = jax.random.key(key)
+    neighbors, degrees, pi = _graph_arrays(graph, pcfg)
+    return _run(key, neighbors, degrees, pi, pcfg, fcfg, steps, graph.n)
+
+
+def run_ensemble(
+    graph: Graph,
+    pcfg: prt.ProtocolConfig,
+    fcfg: flr.FailureConfig,
+    steps: int,
+    seeds: int,
+    base_key: jax.Array | int = 0,
+):
+    """vmap over seeds: StepOutputs with leading (seeds,) axis."""
+    if isinstance(base_key, int):
+        base_key = jax.random.key(base_key)
+    keys = jax.random.split(base_key, seeds)
+    neighbors, degrees, pi = _graph_arrays(graph, pcfg)
+
+    @jax.jit
+    def fn(ks):
+        return jax.vmap(
+            lambda k: _run(k, neighbors, degrees, pi, pcfg, fcfg, steps, graph.n)[1]
+        )(ks)
+
+    return fn(keys)
+
+
+# ---------------------------------------------------------------------------
+# Trajectory metrics (used by benchmarks and integration tests)
+# ---------------------------------------------------------------------------
+
+
+def reaction_time(z, z0: int, failure_time: int) -> int:
+    """Steps from `failure_time` until Z_t first returns to >= z0 (-1: never)."""
+    import numpy as np
+
+    z = np.asarray(z)
+    post = z[failure_time:]
+    hits = np.nonzero(post >= z0)[0]
+    return int(hits[0]) if hits.size else -1
+
+
+def max_overshoot(z, z0: int) -> int:
+    import numpy as np
+
+    return int(np.max(np.asarray(z)) - z0)
+
+
+def survived(z) -> bool:
+    """Resilience objective: at least one walk alive at all times."""
+    import numpy as np
+
+    return bool((np.asarray(z) > 0).all())

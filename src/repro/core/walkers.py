@@ -1,0 +1,107 @@
+"""Walk-slot state machine: movement, forking, termination.
+
+Fixed-shape formulation of a dynamic population: the system owns
+``max_walks`` slots; a slot is a walk iff ``active[slot]``. Forking
+allocates a free slot (events beyond capacity are dropped — a documented
+truncation of the paper's unbounded walk population); termination frees
+the slot. ``track[slot]`` names the column of the per-node ``last_seen``
+table the walk writes to: for DECAFORK each slot owns its own column
+(fresh identity per fork, cleared on slot reuse); for MISSINGPERSON the
+track is the *initial id* in [Z_0] being replaced, so replacements share
+the identity of the walk they replace — exactly the paper's semantics.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.estimator import NEVER
+
+
+class WalkState(NamedTuple):
+    pos: jax.Array  # (W,) int32 current node
+    active: jax.Array  # (W,) bool
+    track: jax.Array  # (W,) int32 last_seen column owned by this walk
+
+
+def init_walks(z0: int, max_walks: int, n_nodes: int, key: jax.Array) -> WalkState:
+    """Start Z_0 walks at uniformly random nodes (footnote 4 variant)."""
+    pos0 = jax.random.randint(key, (max_walks,), 0, n_nodes, dtype=jnp.int32)
+    slots = jnp.arange(max_walks, dtype=jnp.int32)
+    return WalkState(pos=pos0, active=slots < z0, track=slots)
+
+
+def move_walks(ws: WalkState, neighbors: jax.Array, degrees: jax.Array, key: jax.Array) -> WalkState:
+    """One synchronous hop: each active walk moves to a uniform neighbor."""
+    W = ws.pos.shape[0]
+    u = jax.random.uniform(key, (W,))
+    deg = degrees[ws.pos]
+    idx = jnp.minimum((u * deg).astype(jnp.int32), deg - 1)
+    nxt = neighbors[ws.pos, idx]
+    return ws._replace(pos=jnp.where(ws.active, nxt, ws.pos))
+
+
+def execute_terminations(ws: WalkState, term: jax.Array) -> WalkState:
+    return ws._replace(active=ws.active & ~term)
+
+
+def execute_forks(
+    ws: WalkState,
+    last_seen: jax.Array,  # (n, C)
+    ev_mask: jax.Array,  # (E,) bool fork events
+    ev_origin: jax.Array,  # (E,) int32 node the fork leaves from
+    ev_track: jax.Array | None,  # (E,) int32 identity, or None -> own slot
+    t: jax.Array,
+    ev_parent: jax.Array | None = None,  # (E,) parent walk slot per event
+):
+    """Allocate free slots to fork events (capacity-capped, drop overflow).
+
+    Returns (new WalkState, new last_seen, n_forks_executed, fork_parent)
+    where fork_parent[s] is the parent slot of a walk forked into slot s
+    this call (-1 otherwise) — the hook the learning layer uses to
+    duplicate the parent's model replica (DECAFORK's "identical copy").
+    """
+    W = ws.pos.shape[0]
+    slots = jnp.arange(W, dtype=jnp.int32)
+    free = ~ws.active
+    n_free = jnp.sum(free)
+    # rank r-th free slot / r-th event; match them up
+    free_rank = jnp.cumsum(free) - 1  # rank of each slot among free ones
+    ev_rank = jnp.cumsum(ev_mask) - 1  # rank of each event
+    ev_ok = ev_mask & (ev_rank < n_free)
+    rank_to_slot = (
+        jnp.zeros((W,), jnp.int32)
+        .at[jnp.where(free, free_rank, W)]
+        .set(slots, mode="drop")
+    )
+    ev_slot = rank_to_slot[jnp.clip(ev_rank, 0, W - 1)]  # valid where ev_ok
+    safe_slot = jnp.where(ev_ok, ev_slot, W)  # W = drop
+
+    if ev_parent is None:
+        ev_parent = jnp.arange(ev_mask.shape[0], dtype=jnp.int32)
+    fork_parent = (
+        jnp.full((W,), -1, jnp.int32).at[safe_slot].set(ev_parent, mode="drop")
+    )
+    active = ws.active.at[safe_slot].set(True, mode="drop")
+    pos = ws.pos.at[safe_slot].set(ev_origin, mode="drop")
+    if ev_track is None:
+        # DECAFORK: fresh identity = the slot itself; clear the stale column
+        track = ws.track.at[safe_slot].set(ev_slot, mode="drop")
+        fresh = jnp.zeros((W,), bool).at[safe_slot].set(True, mode="drop")
+        col_origin = jnp.zeros((W,), jnp.int32).at[safe_slot].set(ev_origin, mode="drop")
+        last_seen = jnp.where(fresh[None, :], NEVER, last_seen)
+        # the forking node has, by construction, just seen the new walk
+        last_seen = last_seen.at[col_origin, slots].add(
+            jnp.where(fresh, t - NEVER, 0).astype(last_seen.dtype)
+        )
+    else:
+        # MISSINGPERSON: replacement carries the missing walk's identity
+        track = ws.track.at[safe_slot].set(ev_track, mode="drop")
+    return (
+        WalkState(pos=pos, active=active, track=track),
+        last_seen,
+        jnp.sum(ev_ok),
+        fork_parent,
+    )

@@ -1,0 +1,15 @@
+from repro.data.synthetic import (
+    SyntheticTask,
+    make_markov_task,
+    sample_batch,
+    node_batches,
+    random_batch_like,
+)
+
+__all__ = [
+    "SyntheticTask",
+    "make_markov_task",
+    "sample_batch",
+    "node_batches",
+    "random_batch_like",
+]

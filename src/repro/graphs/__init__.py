@@ -1,0 +1,39 @@
+from repro.graphs.generators import (
+    Graph,
+    complete_graph,
+    erdos_renyi_graph,
+    power_law_graph,
+    random_regular_graph,
+    ring_graph,
+    torus_graph,
+    make_graph,
+    GRAPH_FAMILIES,
+)
+from repro.graphs.spectral import (
+    stationary_distribution,
+    expected_return_times,
+    return_rate_estimate,
+    arrival_rate_estimate,
+    spectral_gap,
+    mixing_time_bound,
+    cover_time_estimate,
+)
+
+__all__ = [
+    "Graph",
+    "complete_graph",
+    "erdos_renyi_graph",
+    "power_law_graph",
+    "random_regular_graph",
+    "ring_graph",
+    "torus_graph",
+    "make_graph",
+    "GRAPH_FAMILIES",
+    "stationary_distribution",
+    "expected_return_times",
+    "return_rate_estimate",
+    "arrival_rate_estimate",
+    "spectral_gap",
+    "mixing_time_bound",
+    "cover_time_estimate",
+]

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the system's three compute hot loops:
+
+  theta_survival — the DECAFORK estimator sweep (the paper's hot-spot)
+  flash_attention — payload attention (causal + sliding-window, GQA)
+  ssd_scan — Mamba-2 intra-chunk SSD block
+
+Each kernel has a pure-jnp oracle in ref.py and interpret-mode allclose
+sweeps in tests/.
+"""
+from repro.kernels.ops import attention_pallas, ssd_pallas, theta_sums_pallas
+
+__all__ = ["attention_pallas", "ssd_pallas", "theta_sums_pallas"]

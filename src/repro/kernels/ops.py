@@ -1,0 +1,74 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+These adapt model-layer layouts to kernel layouts and provide the
+drop-in replacements the model code selects via ``cfg.use_pallas``:
+
+  attention_pallas(q, k, v, window)   <-> layers.blocked_causal_attention
+  theta_sums_pallas(...)              <-> kernels.ref.theta_sums_ref
+  ssd_pallas(x, dt, a, b, c, chunk)   <-> ssm.ssd_chunked
+
+On this CPU container the kernels always run with interpret=True; on a
+real TPU pass interpret=False (the default flips on TPU platforms).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ssd_scan import ssd_intra_chunk
+from repro.kernels.theta_survival import theta_sums
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def attention_pallas(q, k, v, window: int = 0, interpret: bool | None = None):
+    """q: (B, S, H, D); k/v: (B, S, KV, D) — model layout."""
+    if interpret is None:
+        interpret = _default_interpret()
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    out = flash_attention(qt, kt, vt, window=window, interpret=interpret)
+    return jnp.swapaxes(out, 1, 2)
+
+
+def theta_sums_pallas(last_seen, hist, total, t, interpret: bool | None = None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return theta_sums(last_seen, hist, total, t, interpret=interpret)
+
+
+def ssd_pallas(x, dt, a, b_in, c_in, chunk: int = 128, interpret: bool | None = None):
+    """Drop-in for repro.models.ssm.ssd_chunked (returns y, final_state)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    B, L, H, P = x.shape
+    N = b_in.shape[-1]
+    if L % chunk:
+        raise ValueError("L must divide the chunk size")
+    nc = L // chunk
+    da = (dt * a).reshape(B, nc, chunk, H)
+    da_cs = jnp.cumsum(da, axis=2)
+    xdt = (x * dt[..., None]).reshape(B, nc, chunk, H, P)
+    bc = b_in.reshape(B, nc, chunk, N)
+    cc = c_in.reshape(B, nc, chunk, N)
+
+    y_intra, states = ssd_intra_chunk(xdt, da_cs, bc, cc, interpret=interpret)
+
+    # inter-chunk recurrence (log-depth, jnp)
+    gs = jnp.exp(da_cs[:, :, -1])  # (B, nc, H)
+
+    def combine(left, right):
+        g1, s1 = left
+        g2, s2 = right
+        return g1 * g2, s1 * g2[..., None, None] + s2
+
+    g_run, s_run = jax.lax.associative_scan(combine, (gs, states), axis=1)
+    s_prev = jnp.concatenate([jnp.zeros_like(s_run[:, :1]), s_run[:, :-1]], axis=1)
+    in_decay = jnp.exp(da_cs)  # (B, nc, Q, H)
+    y_inter = jnp.einsum("bcqn,bcqh,bchpn->bcqhp", cc, in_decay, s_prev)
+    y = (y_intra + y_inter).reshape(B, L, H, P).astype(x.dtype)
+    return y, s_run[:, -1]

@@ -1,0 +1,84 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def theta_sums_ref(
+    last_seen: jax.Array,  # (n, W) int32, -1 = never seen
+    hist: jax.Array,  # (n, B) f32 return-time histogram
+    total: jax.Array,  # (n,) f32
+    t: jax.Array,  # scalar int32
+) -> jax.Array:
+    """sum_c S_i(t - last_seen[i,c]) over seen columns, for every node.
+
+    S_i(r) = 1 - cum_i(r)/total_i with cum_i(r) = #samples <= r;
+    total_i = 0 -> S = 1 (optimistic prior), matching
+    repro.core.estimator.survival_eval.
+    """
+    n, W = last_seen.shape
+    B = hist.shape[1]
+    valid = last_seen >= 0
+    r = jnp.where(valid, t - last_seen, 0)  # (n, W)
+    cum = jnp.concatenate(
+        [jnp.zeros((n, 1), hist.dtype), jnp.cumsum(hist, axis=1)], axis=1
+    )
+    rc = jnp.clip(r, 0, B)
+    mass = jnp.take_along_axis(cum, rc, axis=1)  # (n, W)
+    tot = jnp.maximum(total, 1.0)[:, None]
+    s = 1.0 - mass / tot
+    s = jnp.where(total[:, None] > 0, s, 1.0)
+    s = jnp.where(r <= 0, 1.0, s)
+    return jnp.sum(jnp.where(valid, s, 0.0), axis=1)
+
+
+def mha_ref(
+    q: jax.Array,  # (B, S, H, D)
+    k: jax.Array,  # (B, S, KV, D)
+    v: jax.Array,  # (B, S, KV, D)
+    window: int = 0,
+    causal: bool = True,
+) -> jax.Array:
+    """Naive full-materialization GQA attention."""
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, D)
+    scores = jnp.einsum(
+        "bqkgd,btkd->bkgqt", qg.astype(jnp.float32), k.astype(jnp.float32)
+    ) / jnp.sqrt(jnp.float32(D))
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqt,btkd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, S, H, D).astype(q.dtype)
+
+
+def ssd_chunk_ref(
+    x: jax.Array,  # (B, Q, H, P) one chunk of dt-weighted inputs (x*dt)
+    da_cs: jax.Array,  # (B, Q, H) in-chunk cumulative log-decay (negative)
+    b_in: jax.Array,  # (B, Q, N)
+    c_in: jax.Array,  # (B, Q, N)
+):
+    """Intra-chunk SSD: (y_intra (B,Q,H,P), state (B,H,P,N)).
+
+    y_intra[q] = sum_{t<=q} (C_q . B_t) exp(da_cs[q]-da_cs[t]) x_t
+    state     = sum_t B_t exp(da_total - da_cs[t]) x_t
+    """
+    Q = x.shape[1]
+    diff = da_cs[:, :, None, :] - da_cs[:, None, :, :]  # (B,Q,Q,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.exp(jnp.where(tri[None, :, :, None], diff, -1e30))
+    scores = jnp.einsum("bqn,btn->bqt", c_in, b_in)
+    y = jnp.einsum("bqt,bqth,bthp->bqhp", scores, decay, x.astype(jnp.float32))
+    da_total = da_cs[:, -1]  # (B,H)
+    decay_out = jnp.exp(da_total[:, None, :] - da_cs)  # (B,Q,H)
+    state = jnp.einsum("btn,bth,bthp->bhpn", b_in, decay_out, x.astype(jnp.float32))
+    return y, state

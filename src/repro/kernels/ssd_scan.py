@@ -1,0 +1,84 @@
+"""Pallas TPU kernel for the Mamba-2 SSD intra-chunk block.
+
+The SSD algorithm splits the selective-scan into (i) a quadratic
+intra-chunk part — two small matmuls plus an elementwise decay mask, MXU
+food — and (ii) a tiny inter-chunk linear recurrence. This kernel
+computes (i) plus each chunk's outgoing state; the recurrence and the
+cross-chunk correction stay in jnp (log-depth associative scan over
+(B, nc, H, P, N) states — bandwidth-trivial).
+
+Grid: (batch, chunks). VMEM per program holds one chunk:
+  x (Q, H, P) dt-weighted inputs, da_cs (Q, H), B/C (Q, N), plus the
+  (Q, Q, H) decay tensor — Q=128, H<=8-per-shard, P=64, N=128 keeps the
+  footprint ~1.5 MiB. Heads beyond the VMEM budget split over the grid in
+  ops.py by folding H into the batch axis.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(x_ref, dacs_ref, b_ref, c_ref, y_ref, st_ref):
+    x = x_ref[0].astype(jnp.float32)  # (Q, H, P)
+    da = dacs_ref[0].astype(jnp.float32)  # (Q, H)
+    b_in = b_ref[0].astype(jnp.float32)  # (Q, N)
+    c_in = c_ref[0].astype(jnp.float32)  # (Q, N)
+    Q, H, P = x.shape
+
+    diff = da[:, None, :] - da[None, :, :]  # (Q, Q, H)
+    qi = jax.lax.broadcasted_iota(jnp.int32, (Q, Q, H), 0)
+    ti = jax.lax.broadcasted_iota(jnp.int32, (Q, Q, H), 1)
+    decay = jnp.exp(jnp.where(ti <= qi, diff, -1e30))  # (Q, Q, H)
+
+    scores = c_in @ b_in.T  # (Q, Q) MXU
+    w = scores[:, :, None] * decay  # (Q, Q, H)
+    # y[q,h,p] = sum_t w[q,t,h] x[t,h,p]
+    y = jnp.einsum("qth,thp->qhp", w, x)
+
+    da_total = da[-1:, :]  # (1, H)
+    decay_out = jnp.exp(da_total - da)  # (Q, H)
+    xw = x * decay_out[:, :, None]  # (Q, H, P)
+    # state[h,p,n] = sum_t b[t,n] xw[t,h,p]
+    st = jnp.einsum("tn,thp->hpn", b_in, xw)
+
+    y_ref[0] = y.astype(y_ref.dtype)
+    st_ref[0] = st.astype(st_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_intra_chunk(
+    x: jax.Array,  # (B, nc, Q, H, P) dt-weighted inputs
+    da_cs: jax.Array,  # (B, nc, Q, H) in-chunk cumulative log-decay
+    b_in: jax.Array,  # (B, nc, Q, N)
+    c_in: jax.Array,  # (B, nc, Q, N)
+    *,
+    interpret: bool = True,
+):
+    """Returns (y_intra (B,nc,Q,H,P) f32, states (B,nc,H,P,N) f32)."""
+    B, nc, Q, H, P = x.shape
+    N = b_in.shape[-1]
+    grid = (B, nc)
+    y, st = pl.pallas_call(
+        _ssd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, None, Q, H, P), lambda b, c: (b, c, 0, 0, 0)),
+            pl.BlockSpec((1, None, Q, H), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, None, Q, N), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, None, Q, N), lambda b, c: (b, c, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, None, Q, H, P), lambda b, c: (b, c, 0, 0, 0)),
+            pl.BlockSpec((1, None, H, P, N), lambda b, c: (b, c, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, nc, Q, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((B, nc, H, P, N), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, da_cs, b_in, c_in)
+    return y, st

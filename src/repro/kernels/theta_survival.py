@@ -1,0 +1,90 @@
+"""Pallas TPU kernel for the DECAFORK estimator sweep (the paper's only
+dense compute hot-spot).
+
+Every protocol round each visited node evaluates
+    sum_c S_i(t - last_seen[i, c])
+over its walk-tracking columns. At production scale (n ~ 10^5 nodes per
+shard, W walk slots, B histogram bins) this is an O(n * W * B) sweep.
+
+TPU adaptation (DESIGN.md §3): a GPU implementation would gather
+``cum[i, r_c]`` per (node, column) — scattered random access. TPUs hate
+gathers, so we restate the gather as a *compare-and-accumulate*:
+
+    cum_i(r) = sum_b hist[i,b] * [r > b]
+ => sum_c cum_i(r_c) = sum_b hist[i,b] * #{c : r_c > b}
+
+i.e. build per-node bin counts with a broadcasted compare against an iota
+over bins (pure VPU work on VMEM tiles), then contract counts against the
+histogram — a dense reduction the VPU/MXU pipeline streams at full tilt.
+No gather survives.
+
+Block layout: grid over node tiles; each program holds
+  last_seen (bn, W) int32 | hist (bn, B) f32 | total (bn, 1) f32
+in VMEM. The (bn, W, B) compare intermediate sizes VMEM: bn=8, W=64,
+B=1024 -> 2 MiB f32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BLOCK_NODES = 8
+
+
+def _theta_kernel(t_ref, ls_ref, hist_ref, tot_ref, out_ref):
+    t = t_ref[0, 0]
+    ls = ls_ref[...]  # (bn, W) int32
+    hist = hist_ref[...]  # (bn, B) f32
+    tot = tot_ref[...]  # (bn, 1) f32
+    bn, W = ls.shape
+    B = hist.shape[1]
+
+    valid = ls >= 0
+    r = jnp.where(valid, t - ls, 0)  # (bn, W)
+    bidx = jax.lax.broadcasted_iota(jnp.int32, (bn, W, B), 2)
+    over = (r[:, :, None] > bidx) & valid[:, :, None]  # (bn, W, B)
+    cnt = jnp.sum(over.astype(jnp.float32), axis=1)  # (bn, B)
+    mass = jnp.sum(cnt * hist, axis=1, keepdims=True)  # (bn, 1)
+    n_valid = jnp.sum(valid.astype(jnp.float32), axis=1, keepdims=True)
+    tot_safe = jnp.maximum(tot, 1.0)
+    s = n_valid - mass / tot_safe
+    s = jnp.where(tot > 0, s, n_valid)
+    out_ref[...] = s
+
+
+@functools.partial(jax.jit, static_argnames=("block_nodes", "interpret"))
+def theta_sums(
+    last_seen: jax.Array,  # (n, W) int32
+    hist: jax.Array,  # (n, B) f32
+    total: jax.Array,  # (n,) f32
+    t: jax.Array,  # scalar int32
+    *,
+    block_nodes: int = DEFAULT_BLOCK_NODES,
+    interpret: bool = True,
+) -> jax.Array:
+    """sum_c S_i(t - last_seen[i,c]) for every node i; (n,) f32."""
+    n, W = last_seen.shape
+    B = hist.shape[1]
+    bn = min(block_nodes, n)
+    if n % bn:
+        raise ValueError(f"n={n} must be a multiple of block_nodes={bn}")
+    grid = (n // bn,)
+    t_arr = jnp.asarray(t, jnp.int32).reshape(1, 1)
+    out = pl.pallas_call(
+        _theta_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),  # t (broadcast)
+            pl.BlockSpec((bn, W), lambda i: (i, 0)),  # last_seen tile
+            pl.BlockSpec((bn, B), lambda i: (i, 0)),  # hist tile
+            pl.BlockSpec((bn, 1), lambda i: (i, 0)),  # total tile
+        ],
+        out_specs=pl.BlockSpec((bn, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        interpret=interpret,
+    )(t_arr, last_seen, hist, total[:, None])
+    return out[:, 0]

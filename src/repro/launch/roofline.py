@@ -1,0 +1,172 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), all in seconds (TPU v5e constants):
+
+  compute    = HLO_FLOPs / (chips * 197e12)           [bf16 MXU peak]
+  memory     = HLO_bytes / (chips * 819e9)            [HBM bandwidth]
+  collective = collective_bytes / (chips * 50e9)      [per-link ICI]
+
+``cost_analysis()`` supplies per-device FLOPs / bytes-accessed, but XLA
+counts a while-loop body ONCE, so for layer-scanned models the dry-run
+also lowers a single-block step and this module combines
+    total = full_graph + (L - 1) * block .
+Collective bytes are not in cost_analysis at all: we parse the
+post-SPMD HLO text and sum result sizes of every collective op
+(all-reduce counted twice — ring reduce-scatter + all-gather).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict
+
+# ---- TPU v5e hardware constants (per chip) --------------------------------
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "fp8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(tok: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(tok):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device ICI bytes by collective kind, parsed from compiled HLO.
+
+    Counts the *result* size of each collective op (start/done pairs are
+    deduplicated by only counting `-start` when both forms appear);
+    all-reduce is weighted 2x for the ring reduce-scatter + all-gather.
+    """
+    out = {k: 0.0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    op_re = re.compile(
+        r"^((?:\([^)]*\))|(?:\w+\[[^\]]*\](?:\{[^}]*\})?))\s+%?([\w-]+)\("
+    )
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "=" not in s:
+            continue
+        rhs = s.split("=", 1)[1].lstrip()
+        m = op_re.match(rhs)
+        if not m:
+            continue
+        opname = m.group(2)
+        base = opname[:-6] if opname.endswith("-start") else opname
+        if base not in _COLLECTIVES:
+            continue
+        if opname.endswith("-done"):
+            continue
+        nbytes = _shape_bytes(m.group(1))
+        w = 2.0 if base == "all-reduce" else 1.0
+        out[base] += w * nbytes
+        counts[base] += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["ops"] = float(sum(counts.values()))
+    return out
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    flops: float  # per-device
+    hbm_bytes: float  # per-device
+    coll_bytes: float  # per-device
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float  # analytic 6*N*D (global)
+    useful_ratio: float  # model_flops / (flops * chips)
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def combine_scan_costs(full: dict, block: dict | None, num_layers: int) -> dict:
+    """total = full + (L-1) * block (cost_analysis counts scan bodies once)."""
+    if block is None:
+        return dict(full)
+    out = {}
+    for k in ("flops", "bytes accessed"):
+        out[k] = full.get(k, 0.0) + (num_layers - 1) * block.get(k, 0.0)
+    return out
+
+
+def combine_scan_collectives(full_coll: dict, block_coll: dict | None, num_layers: int) -> float:
+    total = full_coll.get("total", 0.0)
+    if block_coll is not None:
+        total += (num_layers - 1) * block_coll.get("total", 0.0)
+    return total
+
+
+def analyze(
+    costs: dict,
+    coll_total: float,
+    n_chips: int,
+    model_flops: float,
+) -> RooflineReport:
+    flops = float(costs.get("flops", 0.0))
+    hbm = float(costs.get("bytes accessed", 0.0))
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hbm / HBM_BW
+    coll_s = coll_total / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    bottleneck = max(terms, key=terms.get)
+    total_flops = flops * n_chips
+    return RooflineReport(
+        flops=flops,
+        hbm_bytes=hbm,
+        coll_bytes=coll_total,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=coll_s,
+        bottleneck=bottleneck,
+        model_flops=model_flops,
+        useful_ratio=(model_flops / total_flops) if total_flops else 0.0,
+    )
+
+
+def analytic_model_flops(cfg, batch: int, seq: int, mode: str) -> float:
+    """MODEL_FLOPS = 6*N*D (train) / 2*N*D (forward), N = active params."""
+    n_active = active_param_count(cfg)
+    tokens = batch * seq if mode in ("train", "prefill") else batch * 1
+    mult = 6.0 if mode == "train" else 2.0
+    return mult * n_active * tokens
+
+
+def active_param_count(cfg) -> int:
+    """Active (per-token) parameter count: MoE counts top-k + shared only."""
+    n = cfg.param_count()
+    if cfg.arch_type != "moe":
+        return n
+    d, e, fe, L = cfg.d_model, cfg.moe_num_experts, cfg.moe_d_ff, cfg.num_layers
+    all_routed = L * e * 3 * d * fe
+    active_routed = L * cfg.moe_top_k * 3 * d * fe
+    return n - all_routed + active_routed

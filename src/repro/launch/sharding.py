@@ -1,0 +1,220 @@
+"""Divisibility-aware sharding policy (DESIGN.md §5).
+
+One declarative rule table maps parameter names to PartitionSpec
+templates; every templated dimension is checked for divisibility against
+the mesh and falls back to replication when it doesn't divide (hymba's 25
+heads, mamba2's 50280 vocab, ...). Parameters under the stacked
+``layers/`` prefix get a leading unsharded layer dimension automatically.
+
+Conventions (MaxText-style):
+  vocab, heads, d_ff, experts  -> 'model'
+  batch                        -> ('pod','data')   [replicated if B=1]
+  sequence                     -> unsharded, except the decode KV ring of
+                                  batch-1 long-context, which shards its
+                                  window over the data axes instead.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import data_axes
+from repro.utils.tree import tree_flatten_with_paths
+
+M = "model"
+
+# name -> {ndim: spec template}
+PARAM_RULES: Dict[str, Dict[int, tuple]] = {
+    "embed": {2: (M, None), 3: (None, M, None)},
+    "unembed": {2: (None, M), 3: (None, None, M)},
+    "vision_proj": {2: (None, M)},
+    # attention
+    "wq": {3: (None, M, None)},
+    "wk": {3: (None, M, None)},
+    "wv": {3: (None, M, None)},
+    "wo": {3: (M, None, None)},
+    # MLA
+    "wdq": {2: (None, M)},
+    "wuq": {3: (None, M, None)},
+    "wdkv": {2: (None, None)},
+    "wkr": {2: (None, None)},
+    "wuk": {3: (None, M, None)},
+    "wuv": {3: (None, M, None)},
+    # swiglu (2-D) and moe experts (3-D, expert-parallel)
+    "gate": {2: (None, M), 3: (M, None, None)},
+    "up": {2: (None, M), 3: (M, None, None)},
+    "down": {2: (M, None), 3: (M, None, None)},
+    "router": {2: (None, None)},
+    # ssm
+    "in_proj": {2: (None, M)},
+    "conv_w": {2: (None, M)},
+    "out_proj": {2: (M, None)},
+}
+
+
+def _check_divisible(spec: tuple, shape: tuple, mesh) -> P:
+    fixed = []
+    for dim, ax in enumerate(spec):
+        if ax is None:
+            fixed.append(None)
+            continue
+        axes = (ax,) if isinstance(ax, str) else tuple(ax)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        if shape[dim] % size == 0 and shape[dim] >= size:
+            fixed.append(ax)
+        else:
+            fixed.append(None)
+    return P(*fixed)
+
+
+def spec_for_param(path: str, shape: tuple, mesh) -> P:
+    name = path.split("/")[-1]
+    rule = PARAM_RULES.get(name)
+    in_stack = "/layers/" in f"/{path}/"
+    nd = len(shape) - (1 if in_stack else 0)
+    if rule is None or nd not in rule:
+        return P()  # replicate (norm scales, small vectors, A_log, ...)
+    template = rule[nd]
+    if in_stack:
+        template = (None,) + tuple(template)
+    return _check_divisible(tuple(template), shape, mesh)
+
+
+def _add_fsdp(spec: P, path: str, shape: tuple, mesh) -> P:
+    """ZeRO/FSDP extension (EXPERIMENTS.md §Perf-1): additionally shard
+    the largest still-replicated dim of every >=2-D parameter over the
+    data axes, so parameter/optimizer state divides by the full chip
+    count instead of the model axis alone. GSPMD turns this into
+    per-layer weight all-gathers + gradient reduce-scatters."""
+    dp = data_axes(mesh)
+    size = 1
+    for a in dp:
+        size *= mesh.shape[a]
+    nd = len(shape)
+    full = tuple(spec) + (None,) * (nd - len(tuple(spec)))
+    in_stack = "/layers/" in f"/{path}/"
+    start = 1 if in_stack else 0
+    if nd - start < 2:
+        return P(*full)  # skip 1-D (norms, biases): negligible bytes
+    best = None
+    for i in range(start, nd):
+        if full[i] is None and shape[i] % size == 0 and shape[i] >= size:
+            if best is None or shape[i] > shape[best]:
+                best = i
+    if best is None:
+        return P(*full)
+    new = list(full)
+    new[best] = dp if len(dp) > 1 else dp[0]
+    return P(*new)
+
+
+def params_shardings(param_shapes: Any, mesh, fsdp: bool = False) -> Any:
+    flat = tree_flatten_with_paths(param_shapes)
+    specs = []
+    for p, l in flat:
+        spec = spec_for_param(p, tuple(l.shape), mesh)
+        if fsdp:
+            spec = _add_fsdp(spec, p, tuple(l.shape), mesh)
+        specs.append(NamedSharding(mesh, spec))
+    treedef = jax.tree.structure(param_shapes)
+    return jax.tree.unflatten(treedef, specs)
+
+
+def opt_shardings(opt_shapes: Any, mesh, params_sh: Any, fsdp: bool = False) -> Any:
+    """Moments mirror parameter shardings; scalars replicate."""
+
+    def one(path, leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        # path like 'mu/<param path>' or 'nu/...'
+        sub = path.split("/", 1)[1] if "/" in path else path
+        spec = spec_for_param(sub, tuple(leaf.shape), mesh)
+        if fsdp:
+            spec = _add_fsdp(spec, sub, tuple(leaf.shape), mesh)
+        return NamedSharding(mesh, spec)
+
+    flat = tree_flatten_with_paths(opt_shapes)
+    specs = [one(p, l) for p, l in flat]
+    return jax.tree.unflatten(jax.tree.structure(opt_shapes), specs)
+
+
+def batch_shardings(batch_spec_tree: Any, mesh) -> Any:
+    """Shard the leading batch dim over (pod, data) where divisible."""
+    dp = data_axes(mesh)
+    size = 1
+    for a in dp:
+        size *= mesh.shape[a]
+
+    def one(leaf):
+        if leaf.ndim >= 1 and leaf.shape[0] % size == 0 and leaf.shape[0] >= size:
+            return NamedSharding(mesh, P(dp, *([None] * (leaf.ndim - 1))))
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(one, batch_spec_tree)
+
+
+def cache_shardings(cache_shapes: Any, mesh, cfg) -> Any:
+    """Decode-cache shardings.
+
+    Layer-stacked leaves are (L, B, ...). Batch shards over (pod,data)
+    when divisible; for batch-1 long-context the KV ring/time dimension
+    shards over the data axes instead; KV heads / compressed dims shard
+    over 'model' when divisible.
+    """
+    dp = data_axes(mesh)
+    dsize = 1
+    for a in dp:
+        dsize *= mesh.shape[a]
+    msize = mesh.shape["model"]
+
+    def one(path: str, leaf):
+        name = path.split("/")[-1]
+        shp = tuple(leaf.shape)
+        if name in ("k", "v"):  # (L, B, T, KV, hd)
+            b_ok = shp[1] % dsize == 0
+            kv_ax = M if shp[3] % msize == 0 else None
+            if b_ok:
+                return NamedSharding(mesh, P(None, dp, None, kv_ax, None))
+            t_ax = dp if shp[2] % dsize == 0 else None
+            return NamedSharding(mesh, P(None, None, t_ax, kv_ax, None))
+        if name in ("ckv", "krope"):  # (L, B, T, r)
+            b_ok = shp[1] % dsize == 0
+            if b_ok:
+                return NamedSharding(mesh, P(None, dp, None, None))
+            t_ax = dp if shp[2] % dsize == 0 else None
+            return NamedSharding(mesh, P(None, None, t_ax, None))
+        if name == "state":  # (L, B, H, P, N)
+            b_ok = shp[1] % dsize == 0
+            h_ax = M if shp[2] % msize == 0 else None
+            return NamedSharding(mesh, P(None, dp if b_ok else None, h_ax, None, None))
+        if name == "conv":  # (L, B, K-1, conv_dim)
+            b_ok = shp[1] % dsize == 0
+            c_ax = M if shp[3] % msize == 0 else None
+            return NamedSharding(mesh, P(None, dp if b_ok else None, None, c_ax))
+        if name == "cache_positions":  # (B, T)
+            if shp[0] % dsize == 0:
+                return NamedSharding(mesh, P(dp, None))
+            t_ax = dp if shp[1] % dsize == 0 else None
+            return NamedSharding(mesh, P(None, t_ax))
+        if name == "next_pos":  # (B,)
+            ax = dp if shp[0] % dsize == 0 else None
+            return NamedSharding(mesh, P(ax))
+        return NamedSharding(mesh, P())
+
+    flat = tree_flatten_with_paths(cache_shapes)
+    specs = [one(p, l) for p, l in flat]
+    return jax.tree.unflatten(jax.tree.structure(cache_shapes), specs)
+
+
+def with_shardings(shapes: Any, shardings: Any) -> Any:
+    """Attach shardings to ShapeDtypeStructs (for AOT .lower())."""
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes,
+        shardings,
+    )

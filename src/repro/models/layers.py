@@ -1,0 +1,205 @@
+"""Shared neural layers: RMSNorm, RoPE / M-RoPE, SwiGLU, GQA attention.
+
+Attention is implemented as *statically* unrolled q-block attention with
+static causal KV slicing. Two reasons:
+  1. exact FLOP accounting — XLA's ``cost_analysis`` counts a while-loop
+     body once, so ``lax.scan``-based flash attention would corrupt the
+     roofline terms (we verified this empirically);
+  2. bounded transients — a q-block of 512 keeps the score buffer at
+     (B, H, 512, kv_len) instead of (B, H, S, S), which is what makes the
+     405B × 4k train step fit in HBM without a Pallas dependency.
+The Pallas flash kernel in ``repro/kernels`` is the TPU-optimized version
+of exactly this computation (same oracle), switchable via cfg.use_pallas.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Q_BLOCK = 512  # static query block for blocked attention
+
+
+# ---------------------------------------------------------------------------
+# Norm / MLP
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d: int, dtype) -> jax.Array:
+    return jnp.ones((d,), dtype)
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dt) * scale
+
+
+def swiglu_init(key, d: int, f: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = 1.0 / math.sqrt(d)
+    s_out = 1.0 / math.sqrt(f)
+    return {
+        "gate": (jax.random.normal(k1, (d, f)) * s_in).astype(dtype),
+        "up": (jax.random.normal(k2, (d, f)) * s_in).astype(dtype),
+        "down": (jax.random.normal(k3, (f, d)) * s_out).astype(dtype),
+    }
+
+
+def swiglu(params, x: jax.Array) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, params["gate"])
+    u = jnp.einsum("...d,df->...f", x, params["up"])
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, params["down"])
+
+
+# ---------------------------------------------------------------------------
+# RoPE (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    """(head_dim/2,) inverse frequencies."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S) int32."""
+    half = x.shape[-1] // 2
+    freqs = rope_frequencies(x.shape[-1], theta)  # (half,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array, positions3: jax.Array, theta: float, sections: tuple
+) -> jax.Array:
+    """Qwen2-VL multimodal RoPE.
+
+    positions3: (3, B, S) — temporal / height / width coordinate streams.
+    The half-head-dim frequency bands are split into ``sections`` chunks;
+    band j uses the coordinate stream assigned to its chunk.
+    """
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, "mrope sections must sum to head_dim/2"
+    freqs = rope_frequencies(x.shape[-1], theta)  # (half,)
+    # select the position stream per frequency band
+    sel = jnp.repeat(
+        jnp.arange(3), jnp.asarray(sections), total_repeat_length=half
+    )  # (half,) in {0,1,2}
+    pos = positions3.astype(jnp.float32)  # (3, B, S)
+    pos_per_band = jnp.take(pos, sel, axis=0)  # (half, B, S)
+    ang = jnp.moveaxis(pos_per_band, 0, -1) * freqs  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention (train/prefill: blocked; decode: cached single query)
+# ---------------------------------------------------------------------------
+
+
+def attention_init(key, cfg, dtype):
+    d, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    so = 1.0 / math.sqrt(H * hd)
+    return {
+        "wq": (jax.random.normal(k1, (d, H, hd)) * s).astype(dtype),
+        "wk": (jax.random.normal(k2, (d, KV, hd)) * s).astype(dtype),
+        "wv": (jax.random.normal(k3, (d, KV, hd)) * s).astype(dtype),
+        "wo": (jax.random.normal(k4, (H, hd, d)) * so).astype(dtype),
+    }
+
+
+def _block_attend(q, k, v, q_offset: int, kv_offset: int, window: int):
+    """Attend one q block against a kv slice with causal (+window) mask.
+
+    q: (B, Tq, KV, G, hd); k/v: (B, Tk, KV, hd). Offsets are the absolute
+    positions of element 0 of each slice. Returns (out, row_max, row_sum)
+    for online-softmax combination — callers that pass the full causal kv
+    range can use the softmaxed output directly.
+    """
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    scores = jnp.einsum(
+        "bqkgd,btkd->bkgqt", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale  # (B, KV, G, Tq, Tk)
+    qpos = q_offset + jnp.arange(q.shape[1])[:, None]
+    kpos = kv_offset + jnp.arange(k.shape[1])[None, :]
+    mask = kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqt,btkd->bqkgd", probs.astype(v.dtype), v)
+    return out
+
+
+def blocked_causal_attention(
+    q: jax.Array,  # (B, S, H, hd)
+    k: jax.Array,  # (B, S, KV, hd)
+    v: jax.Array,  # (B, S, KV, hd)
+    window: int = 0,
+    q_block: int = Q_BLOCK,
+) -> jax.Array:
+    """Statically-unrolled q-block causal attention with exact KV slicing.
+
+    For q block i, only kv[0 : (i+1)*q_block] (or the sliding window slice)
+    is touched — static slices, so compiled FLOPs match the causal cost.
+    """
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    vd = v.shape[-1]  # may differ from hd (MLA: q/k carry extra rope dims)
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, hd)
+    if S <= q_block:
+        out = _block_attend(qg, k, v, 0, 0, window)
+        return out.reshape(B, S, H, vd)
+    assert S % q_block == 0, "sequence must be a multiple of the q block"
+    outs = []
+    for i in range(S // q_block):
+        q_i = qg[:, i * q_block : (i + 1) * q_block]
+        end = (i + 1) * q_block
+        start = 0 if window <= 0 else max(0, end - window - q_block)
+        o = _block_attend(
+            q_i, k[:, start:end], v[:, start:end], i * q_block, start, window
+        )
+        outs.append(o)
+    return jnp.concatenate(outs, axis=1).reshape(B, S, H, vd)
+
+
+def decode_attention(
+    q: jax.Array,  # (B, 1, H, hd)
+    k_cache: jax.Array,  # (B, T, KV, hd)  (ring buffer if windowed)
+    v_cache: jax.Array,  # (B, T, KV, hd)
+    cache_positions: jax.Array,  # (B, T) int32 absolute positions, -1 = empty
+    pos: jax.Array,  # (B,) current absolute position
+    window: int = 0,
+) -> jax.Array:
+    """Single-token attention against a (possibly ring-buffer) KV cache."""
+    B, _, H, hd = q.shape
+    KV = k_cache.shape[2]
+    vd = v_cache.shape[-1]
+    G = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, KV, G, hd)
+    scores = jnp.einsum(
+        "bkgd,btkd->bkgt", qg.astype(jnp.float32), k_cache.astype(jnp.float32)
+    ) * scale
+    valid = (cache_positions >= 0) & (cache_positions <= pos[:, None])
+    if window > 0:
+        valid &= cache_positions > (pos[:, None] - window)
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", probs.astype(v_cache.dtype), v_cache)
+    return out.reshape(B, 1, H, vd)

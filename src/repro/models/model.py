@@ -1,0 +1,231 @@
+"""Public model API: init / loss / train forward / prefill / decode.
+
+A ``Model`` wraps a ``ModelConfig`` and exposes pure functions suitable for
+``jax.jit`` + pjit sharding:
+
+  init(key)                          -> params
+  loss(params, batch)                -> (scalar, metrics)     [train_4k]
+  prefill(params, batch)             -> (last_logits, cache)  [prefill_32k]
+  decode_step(params, cache, batch)  -> (logits, cache)       [decode_*]
+
+Batches are dicts of arrays (see ``batch_spec``); the decoder stack runs
+under ``lax.scan`` over stacked layer params, optionally rematerialized.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import (
+    VISION_EMBED_DIM,
+    block_apply_decode,
+    block_apply_full,
+    block_init,
+    embed_init,
+    embed_tokens,
+    logits_from_h,
+    make_pos_info,
+)
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------------ init
+    def init(self, key: jax.Array):
+        cfg = self.cfg
+        k_emb, k_layers = jax.random.split(key)
+        layer_keys = jax.random.split(k_layers, cfg.num_layers)
+        layers = jax.vmap(lambda k: block_init(k, cfg))(layer_keys)
+        params = embed_init(k_emb, cfg)
+        params["layers"] = layers
+        return params
+
+    def init_shapes(self):
+        """ShapeDtypeStruct pytree of params without allocating (dry-run)."""
+        return jax.eval_shape(lambda: self.init(jax.random.key(0)))
+
+    # --------------------------------------------------------------- helpers
+    def _embed_batch(self, params, batch) -> jax.Array:
+        cfg = self.cfg
+        h = embed_tokens(params, cfg, batch["tokens"])
+        if cfg.arch_type == "vlm":
+            vis = jnp.einsum(
+                "btv,vd->btd", batch["vision_embeds"].astype(h.dtype), params["vision_proj"]
+            )
+            h = jnp.concatenate([vis, h], axis=1)
+        return h
+
+    def _stack_full(self, params, h, pos_info, collect_cache: bool):
+        cfg = self.cfg
+
+        def _sp(x):
+            if not cfg.seq_sharded_residual:
+                return x
+            # Megatron-SP: the saved inter-layer residual is sequence-
+            # sharded over 'model'; GSPMD inserts AG/RS around the block.
+            from jax.sharding import PartitionSpec as P
+
+            U = P.UNCONSTRAINED
+            return jax.lax.with_sharding_constraint(x, P(U, "model", U))
+
+        def body(carry, lp):
+            x, aux = carry
+            x = _sp(x)
+            x, a, cache_entry = block_apply_full(lp, x, cfg, pos_info, collect_cache)
+            x = _sp(x)
+            return (x, aux + a), cache_entry
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        (h, aux), caches = jax.lax.scan(body, (h, jnp.float32(0.0)), params["layers"])
+        return h, aux, caches
+
+    # ------------------------------------------------------------------ train
+    def forward_logits(self, params, batch) -> jax.Array:
+        h = self._embed_batch(params, batch)
+        pos_info = make_pos_info(self.cfg, h.shape[0], h.shape[1])
+        h, _, _ = self._stack_full(params, h, pos_info, collect_cache=False)
+        if self.cfg.arch_type == "vlm":
+            h = h[:, self.cfg.vision_tokens :]
+        return logits_from_h(params, self.cfg, h)
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        h = self._embed_batch(params, batch)
+        pos_info = make_pos_info(cfg, h.shape[0], h.shape[1])
+        h, aux, _ = self._stack_full(params, h, pos_info, collect_cache=False)
+        if cfg.arch_type == "vlm":
+            h = h[:, cfg.vision_tokens :]
+        logits = logits_from_h(params, cfg, h)
+        labels = batch["labels"]
+        lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+        gold = jnp.take_along_axis(
+            logits.astype(jnp.float32), labels[..., None], axis=-1
+        )[..., 0]
+        ce = jnp.mean(lse - gold)
+        total = ce + aux
+        return total, {"ce": ce, "aux": aux}
+
+    # ---------------------------------------------------------------- prefill
+    def prefill(self, params, batch):
+        """Full-sequence forward; returns (last-position logits, cache)."""
+        cfg = self.cfg
+        h = self._embed_batch(params, batch)
+        B, S = h.shape[0], h.shape[1]
+        pos_info = make_pos_info(cfg, B, S)
+        h, _, caches = self._stack_full(params, h, pos_info, collect_cache=True)
+        last = logits_from_h(params, cfg, h[:, -1:])
+        cache = {"layers": caches}
+        if cfg.arch_type not in ("ssm",):
+            cache["cache_positions"] = jnp.broadcast_to(
+                jnp.arange(S, dtype=jnp.int32), (B, S)
+            )
+        cache["next_pos"] = jnp.full((B,), S, jnp.int32)
+        return last, cache
+
+    # ----------------------------------------------------------------- decode
+    def cache_len(self, seq_len: int) -> int:
+        w = self.cfg.sliding_window
+        return min(seq_len, w) if w > 0 else seq_len
+
+    def init_cache(self, batch_size: int, seq_len: int):
+        """Zeroed decode cache sized for a context of `seq_len` tokens."""
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        T = self.cache_len(seq_len)
+        L, B = cfg.num_layers, batch_size
+        layers: Dict[str, Any] = {}
+        if cfg.arch_type != "ssm":
+            if cfg.use_mla:
+                layers["ckv"] = jnp.zeros((L, B, T, cfg.kv_lora_rank), dt)
+                layers["krope"] = jnp.zeros((L, B, T, cfg.rope_head_dim), dt)
+            else:
+                kv, hd = cfg.num_kv_heads, cfg.head_dim
+                layers["k"] = jnp.zeros((L, B, T, kv, hd), dt)
+                layers["v"] = jnp.zeros((L, B, T, kv, hd), dt)
+        if cfg.arch_type in ("ssm", "hybrid"):
+            hs, p, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+            conv_dim = cfg.ssm_d_inner + 2 * n
+            layers["state"] = jnp.zeros((L, B, hs, p, n), jnp.float32)
+            layers["conv"] = jnp.zeros((L, B, cfg.ssm_conv - 1, conv_dim), dt)
+        cache: Dict[str, Any] = {"layers": layers, "next_pos": jnp.zeros((B,), jnp.int32)}
+        if cfg.arch_type != "ssm":
+            cache["cache_positions"] = jnp.full((B, T), -1, jnp.int32)
+        return cache
+
+    def decode_step(self, params, cache, batch):
+        """One-token decode. batch: {'tokens': (B,1[,nq])}; returns
+        (logits (B,1,V[,nq]), updated cache)."""
+        cfg = self.cfg
+        pos = cache["next_pos"]  # (B,)
+        h = embed_tokens(params, cfg, batch["tokens"])
+        pos_info: Dict[str, Any] = {"pos": pos}
+        new_cache = dict(cache)
+        if cfg.arch_type != "ssm":
+            T = cache["cache_positions"].shape[1]
+            slot = pos % T
+            bidx = jnp.arange(pos.shape[0])
+            cache_positions = cache["cache_positions"].at[bidx, slot].set(pos)
+            pos_info["cache_positions"] = cache_positions
+            new_cache["cache_positions"] = cache_positions
+
+        def body(x, xs):
+            lp, cache_l = xs
+            x, new_cache_l = block_apply_decode(lp, x, cfg, cache_l, pos_info)
+            return x, new_cache_l
+
+        h, new_layer_caches = jax.lax.scan(
+            body, h, (params["layers"], cache["layers"])
+        )
+        new_cache["layers"] = new_layer_caches
+        new_cache["next_pos"] = pos + 1
+        logits = logits_from_h(params, cfg, h)
+        return logits, new_cache
+
+
+@functools.lru_cache(maxsize=64)
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)
+
+
+# ---------------------------------------------------------------------------
+# Batch specs (ShapeDtypeStructs for jit lowering / synthetic data shapes)
+# ---------------------------------------------------------------------------
+
+
+def batch_spec(cfg: ModelConfig, batch_size: int, seq_len: int, mode: str):
+    """ShapeDtypeStruct dict for `mode` in {'train','prefill','decode'}."""
+    i32 = jnp.int32
+    f32 = jnp.float32
+    if mode in ("train", "prefill"):
+        if cfg.num_codebooks:
+            toks = jax.ShapeDtypeStruct((batch_size, seq_len, cfg.num_codebooks), i32)
+            labels = jax.ShapeDtypeStruct((batch_size, seq_len, cfg.num_codebooks), i32)
+        elif cfg.arch_type == "vlm":
+            text = seq_len - cfg.vision_tokens
+            toks = jax.ShapeDtypeStruct((batch_size, text), i32)
+            labels = jax.ShapeDtypeStruct((batch_size, text), i32)
+        else:
+            toks = jax.ShapeDtypeStruct((batch_size, seq_len), i32)
+            labels = jax.ShapeDtypeStruct((batch_size, seq_len), i32)
+        batch = {"tokens": toks}
+        if mode == "train":
+            batch["labels"] = labels
+        if cfg.arch_type == "vlm":
+            batch["vision_embeds"] = jax.ShapeDtypeStruct(
+                (batch_size, cfg.vision_tokens, VISION_EMBED_DIM), f32
+            )
+        return batch
+    if mode == "decode":
+        if cfg.num_codebooks:
+            toks = jax.ShapeDtypeStruct((batch_size, 1, cfg.num_codebooks), i32)
+        else:
+            toks = jax.ShapeDtypeStruct((batch_size, 1), i32)
+        return {"tokens": toks}
+    raise ValueError(mode)

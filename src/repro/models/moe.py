@@ -1,0 +1,244 @@
+"""Mixture-of-Experts layer (capacity-based, GShard semantics) and MLA.
+
+Dispatch is sort-based rather than one-hot-einsum based: a (tokens, experts,
+capacity) dispatch tensor at 1M tokens x 160 experts would be ~10^13
+elements, so we instead argsort the (token, expert) assignment pairs,
+compute each pair's rank within its expert, and scatter into per-expert
+capacity buffers — O(T k d) memory, and the expert FFN runs as one batched
+(E, C, d) x (E, d, f) einsum whose FLOPs are exactly the *active* compute
+(what the MoE roofline should count). Tokens over capacity are dropped
+(standard GShard behavior, capacity_factor controls slack).
+
+Sharding: expert-major weights shard the E axis over the 'model' mesh axis
+(expert parallelism); GSPMD inserts the token all-to-all around the
+scatter/gather. deepseek-v2's MLA is implemented alongside: low-rank
+compressed KV (cached as c_kv + shared rope key), naive decompression on
+the forward path — the absorbed-matmul variant is a perf option exercised
+in the hillclimb.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Routed experts
+# ---------------------------------------------------------------------------
+
+
+def moe_init(key, cfg, dtype):
+    d, e, fe = cfg.d_model, cfg.moe_num_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    s_in = 1.0 / math.sqrt(d)
+    s_out = 1.0 / math.sqrt(fe)
+    params = {
+        "router": (jax.random.normal(ks[0], (d, e)) * s_in).astype(jnp.float32),
+        "gate": (jax.random.normal(ks[1], (e, d, fe)) * s_in).astype(dtype),
+        "up": (jax.random.normal(ks[2], (e, d, fe)) * s_in).astype(dtype),
+        "down": (jax.random.normal(ks[3], (e, fe, d)) * s_out).astype(dtype),
+    }
+    if cfg.moe_num_shared:
+        from repro.models.layers import swiglu_init
+
+        params["shared"] = swiglu_init(
+            ks[4], d, cfg.moe_num_shared * fe, dtype
+        )
+    return params
+
+
+def moe_capacity(tokens: int, cfg) -> int:
+    cap = int(
+        math.ceil(tokens * cfg.moe_top_k / cfg.moe_num_experts * cfg.capacity_factor)
+    )
+    return max(8, -(-cap // 8) * 8)  # round up to a multiple of 8
+
+
+def moe_apply(params, x: jax.Array, cfg):
+    """x: (B, S, d) -> (y: (B, S, d), aux_loss: scalar).
+
+    With ``cfg.moe_groups > 1`` dispatch runs independently per token
+    group (EXPERIMENTS.md §Perf-2): groups align with the batch shards,
+    so the argsort/scatter stay device-local and the only cross-device
+    traffic left is the unavoidable token<->expert all-to-all around the
+    expert einsum. ``moe_groups = 0`` is the global-sort baseline.
+    """
+    B, S, d = x.shape
+    T = B * S
+    if cfg.moe_groups > 1 and T % cfg.moe_groups == 0:
+        G = cfg.moe_groups
+        tg = T // G
+        xg = x.reshape(G, tg, d)
+        cg = moe_capacity(tg, cfg)
+        y, aux = jax.vmap(lambda xx: _moe_tokens(params, xx, cfg, cg))(xg)
+        y = y.reshape(B, S, d)
+        aux_total = jnp.mean(aux)
+    else:
+        y, aux_total = _moe_tokens(
+            params, x.reshape(T, d), cfg, moe_capacity(T, cfg)
+        )
+        y = y.reshape(B, S, d)
+    if cfg.moe_num_shared:
+        from repro.models.layers import swiglu
+
+        y = y + swiglu(params["shared"], x)
+    return y, aux_total
+
+
+def _moe_tokens(params, xf: jax.Array, cfg, C: int):
+    """Sort-based dispatch + expert FFN + combine for flat tokens (T, d)."""
+    T, d = xf.shape
+    k = cfg.moe_top_k
+    E = cfg.moe_num_experts
+
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)  # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+
+    # ---- load-balance auxiliary loss (Switch-style) -----------------------
+    me = jnp.mean(probs, axis=0)  # (E,)
+    onehot_top1 = jax.nn.one_hot(expert_idx[:, 0], E, dtype=jnp.float32)
+    ce = jnp.mean(onehot_top1, axis=0)
+    aux = E * jnp.sum(me * ce) * cfg.router_aux_weight
+
+    # ---- sort-based dispatch ----------------------------------------------
+    flat_e = expert_idx.reshape(T * k)
+    flat_tok = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    flat_gate = gate_vals.reshape(T * k)
+    order = jnp.argsort(flat_e, stable=True)
+    e_sorted = flat_e[order]
+    tok_sorted = flat_tok[order]
+    gate_sorted = flat_gate[order]
+    counts = jnp.bincount(flat_e, length=E)  # (E,)
+    starts = jnp.cumsum(counts) - counts
+    rank = jnp.arange(T * k, dtype=jnp.int32) - starts[e_sorted]
+    keep = rank < C
+    slot = jnp.where(keep, rank, C)  # C = out-of-range -> dropped
+
+    buf = jnp.zeros((E, C, d), xf.dtype)
+    buf = buf.at[e_sorted, slot].set(xf[tok_sorted], mode="drop")
+
+    # ---- expert FFN: batched over experts (active FLOPs only) -------------
+    g = jnp.einsum("ecd,edf->ecf", buf, params["gate"])
+    u = jnp.einsum("ecd,edf->ecf", buf, params["up"])
+    h = jax.nn.silu(g) * u
+    out_buf = jnp.einsum("ecf,efd->ecd", h, params["down"])
+
+    # ---- combine ------------------------------------------------------------
+    gathered = out_buf[e_sorted, jnp.minimum(slot, C - 1)]  # (T*k, d)
+    gathered = jnp.where(keep[:, None], gathered, 0.0)
+    y = jnp.zeros((T, d), xf.dtype).at[tok_sorted].add(
+        gathered * gate_sorted[:, None].astype(xf.dtype)
+    )
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention, deepseek-v2)
+# ---------------------------------------------------------------------------
+
+
+def mla_init(key, cfg, dtype):
+    d, H, hd = cfg.d_model, cfg.num_heads, cfg.head_dim
+    r, rr, qr = cfg.kv_lora_rank, cfg.rope_head_dim, cfg.q_lora_rank
+    ks = jax.random.split(key, 8)
+    s = 1.0 / math.sqrt(d)
+    params = {
+        "wdkv": (jax.random.normal(ks[0], (d, r)) * s).astype(dtype),
+        "wkr": (jax.random.normal(ks[1], (d, rr)) * s).astype(dtype),
+        "kv_norm": jnp.ones((r,), dtype),
+        "wuk": (jax.random.normal(ks[2], (r, H, hd)) / math.sqrt(r)).astype(dtype),
+        "wuv": (jax.random.normal(ks[3], (r, H, hd)) / math.sqrt(r)).astype(dtype),
+        "wo": (
+            jax.random.normal(ks[4], (H, hd, d)) / math.sqrt(H * hd)
+        ).astype(dtype),
+    }
+    if qr:
+        params["wdq"] = (jax.random.normal(ks[5], (d, qr)) * s).astype(dtype)
+        params["q_norm"] = jnp.ones((qr,), dtype)
+        params["wuq"] = (
+            jax.random.normal(ks[6], (qr, H, hd + rr)) / math.sqrt(qr)
+        ).astype(dtype)
+    else:
+        params["wq"] = (
+            jax.random.normal(ks[7], (d, H, hd + rr)) * s
+        ).astype(dtype)
+    return params
+
+
+def mla_project_q(params, x, cfg):
+    """-> q_nope (B,S,H,hd), q_rope (B,S,H,rr)."""
+    from repro.models.layers import rmsnorm
+
+    hd, rr = cfg.head_dim, cfg.rope_head_dim
+    if cfg.q_lora_rank:
+        cq = jnp.einsum("bsd,dr->bsr", x, params["wdq"])
+        cq = rmsnorm(cq, params["q_norm"], cfg.norm_eps)
+        q = jnp.einsum("bsr,rhe->bshe", cq, params["wuq"])
+    else:
+        q = jnp.einsum("bsd,dhe->bshe", x, params["wq"])
+    return q[..., :hd], q[..., hd:]
+
+
+def mla_compress_kv(params, x, cfg):
+    """-> c_kv (B,S,r) normalized, k_rope (B,S,rr)."""
+    from repro.models.layers import rmsnorm
+
+    ckv = jnp.einsum("bsd,dr->bsr", x, params["wdkv"])
+    ckv = rmsnorm(ckv, params["kv_norm"], cfg.norm_eps)
+    kr = jnp.einsum("bsd,dr->bsr", x, params["wkr"])
+    return ckv, kr
+
+
+def mla_decompress(params, ckv):
+    """Naive path: -> k_nope (B,T,H,hd), v (B,T,H,hd)."""
+    k = jnp.einsum("btr,rhe->bthe", ckv, params["wuk"])
+    v = jnp.einsum("btr,rhe->bthe", ckv, params["wuv"])
+    return k, v
+
+
+def mla_decode_absorbed(
+    params,
+    q_nope,  # (B, 1, H, hd)
+    q_rope,  # (B, 1, H, rr) — rope already applied
+    ckv_cache,  # (B, T, r)
+    kr_cache,  # (B, T, rr) — rope already applied at insert time
+    valid,  # (B, T) bool cache-slot mask
+    cfg,
+):
+    """Absorbed-matmul MLA decode (EXPERIMENTS.md §Perf-3).
+
+    Instead of rematerializing K/V = W_uk c, W_uv c over the whole cache
+    (H x hd = 16384 floats per cached token), fold W_uk into the query
+    and W_uv into the output:
+
+        score_h(t) = (W_uk_h^T q_h) . c_t + q_rope_h . k_rope_t
+        out_h      = W_uv_h^T (sum_t p_h(t) c_t)
+
+    HBM per token drops from O(T * H * hd) to O(T * (r + rr)) — a
+    (H*hd)/(r+rr) = 28x reduction for deepseek-v2 — at lower FLOPs too.
+    """
+    import math as _math
+
+    hd, rr = cfg.head_dim, cfg.rope_head_dim
+    scale = 1.0 / _math.sqrt(hd + rr)
+    # q~ = W_uk^T q : (B, H, r)
+    q_abs = jnp.einsum("bhe,rhe->bhr", q_nope[:, 0], params["wuk"])
+    scores = jnp.einsum(
+        "bhr,btr->bht", q_abs.astype(jnp.float32), ckv_cache.astype(jnp.float32)
+    )
+    scores += jnp.einsum(
+        "bhe,bte->bht",
+        q_rope[:, 0].astype(jnp.float32),
+        kr_cache.astype(jnp.float32),
+    )
+    scores = jnp.where(valid[:, None, :], scores * scale, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bht,btr->bhr", p, ckv_cache.astype(jnp.float32))  # (B,H,r)
+    out = jnp.einsum("bhr,rhe->bhe", ctx, params["wuv"].astype(jnp.float32))
+    return out[:, None].astype(ckv_cache.dtype)  # (B, 1, H, hd)

@@ -1,0 +1,216 @@
+"""Mamba-2 (SSD — state-space duality) blocks, train scan + decode step.
+
+The selective state-space recurrence
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t,    y_t = C_t h_t + D x_t
+is computed chunkwise (SSD): quadratic attention-like compute inside
+chunks of length Q, a cross-chunk state recurrence between them. The
+cross-chunk recurrence uses ``jax.lax.associative_scan`` (statically
+unrolled log-depth tree) rather than ``lax.scan`` so the compiled HLO
+carries the true FLOP count for the roofline (XLA cost analysis counts a
+while-loop body once — verified empirically).
+
+Single-group (G=1) B/C as in mamba2-1.3b; Hymba reuses these functions
+with its own (smaller) state size. The Pallas ``ssd_scan`` kernel mirrors
+the intra-chunk computation; ``use_pallas`` switches it in on TPU.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+SSD_CHUNK = 256
+
+
+def ssm_init(key, cfg, dtype):
+    d = cfg.d_model
+    di = cfg.ssm_d_inner
+    n = cfg.ssm_state
+    hs = cfg.ssm_heads
+    conv_dim = di + 2 * n
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    return {
+        "in_proj": (
+            jax.random.normal(ks[0], (d, 2 * di + 2 * n + hs)) * s
+        ).astype(dtype),
+        "conv_w": (
+            jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim)) / math.sqrt(cfg.ssm_conv)
+        ).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(
+            jnp.linspace(1.0, 16.0, hs, dtype=jnp.float32)
+        ),  # A = -exp(a_log)
+        "d_skip": jnp.ones((hs,), jnp.float32),
+        "dt_bias": jnp.full((hs,), math.log(math.e - 1), jnp.float32),
+        "gate_norm": jnp.ones((di,), dtype),
+        "out_proj": (
+            jax.random.normal(ks[2], (di, d)) / math.sqrt(di)
+        ).astype(dtype),
+    }
+
+
+def _split_in_proj(cfg, zxbcdt):
+    di, n, hs = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : di + di + 2 * n]
+    dt = zxbcdt[..., di + di + 2 * n :]
+    return z, xbc, dt
+
+
+def causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal 1-D conv; xbc: (B, L, Cd), w: (K, Cd)."""
+    K = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc)
+    for i in range(K):  # K = 4: static unroll, exact FLOPs
+        out = out + pad[:, i : i + xbc.shape[1]] * w[K - 1 - i]
+    return jax.nn.silu(out + b)
+
+
+def ssd_chunked(
+    x: jax.Array,  # (B, L, H, P) head inputs
+    dt: jax.Array,  # (B, L, H) softplus'd step sizes
+    a: jax.Array,  # (H,) negative continuous-time decay
+    b_in: jax.Array,  # (B, L, N) input projections (G=1)
+    c_in: jax.Array,  # (B, L, N) output projections (G=1)
+    chunk: int = SSD_CHUNK,
+    return_state: bool = False,
+):
+    """Chunkwise SSD; returns y (B, L, H, P) (without D skip / gating).
+
+    With ``return_state`` also returns the final SSM state (B, H, P, N)
+    so prefill can seed the decode cache.
+    """
+    B, L, H, P = x.shape
+    N = b_in.shape[-1]
+    if L % chunk:
+        raise ValueError(f"L={L} must be a multiple of chunk={chunk}")
+    nc = L // chunk
+    xc = x.reshape(B, nc, chunk, H, P)
+    dtc = dt.reshape(B, nc, chunk, H)
+    bc = b_in.reshape(B, nc, chunk, N)
+    cc = c_in.reshape(B, nc, chunk, N)
+
+    da = dtc * a  # (B, nc, Q, H) log-decay increments (negative)
+    da_cs = jnp.cumsum(da, axis=2)  # inclusive cumsum within chunk
+    da_total = da_cs[:, :, -1]  # (B, nc, H)
+
+    xdt = xc * dtc[..., None]  # dt-weighted inputs
+
+    # ---- intra-chunk (quadratic) -----------------------------------------
+    # L_mat[q, t] = exp(da_cs[q] - da_cs[t]) for q >= t
+    diff = da_cs[:, :, :, None, :] - da_cs[:, :, None, :, :]  # (B,nc,Q,Q,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    # mask BEFORE exp: masked entries have diff > 0 -> exp overflows and
+    # the where backward would emit 0 * inf = NaN
+    decay = jnp.exp(jnp.where(tri[None, None, :, :, None], diff, -1e30))
+    scores = jnp.einsum("bcqn,bctn->bcqt", cc, bc)  # (B,nc,Q,Q)
+    y_intra = jnp.einsum(
+        "bcqt,bcqth,bcthp->bcqhp", scores, decay, xdt.astype(jnp.float32)
+    )
+
+    # ---- chunk states -------------------------------------------------------
+    decay_out = jnp.exp(da_total[:, :, None, :] - da_cs)  # (B,nc,Q,H)
+    states = jnp.einsum(
+        "bctn,bcth,bcthp->bchpn", bc, decay_out, xdt.astype(jnp.float32)
+    )  # (B,nc,H,P,N)
+
+    # ---- inter-chunk recurrence via associative scan ------------------------
+    # pairs (g, s): s_running = s_prev * g + s
+    gs = jnp.exp(da_total)  # (B,nc,H)
+
+    def combine(left, right):
+        g1, s1 = left
+        g2, s2 = right
+        return g1 * g2, s1 * g2[..., None, None] + s2
+
+    g_run, s_run = jax.lax.associative_scan(combine, (gs, states), axis=1)
+    # state entering chunk c = running state after chunk c-1
+    s_prev = jnp.concatenate(
+        [jnp.zeros_like(s_run[:, :1]), s_run[:, :-1]], axis=1
+    )  # (B,nc,H,P,N)
+
+    in_decay = jnp.exp(da_cs)  # decay from chunk start to position q
+    y_inter = jnp.einsum("bcqn,bcqh,bchpn->bcqhp", cc, in_decay, s_prev)
+
+    y = (y_intra + y_inter).astype(x.dtype)
+    y = y.reshape(B, L, H, P)
+    if return_state:
+        return y, s_run[:, -1]  # (B, H, P, N)
+    return y
+
+
+def ssm_forward_train(params, x: jax.Array, cfg, return_cache: bool = False):
+    """Full mamba2 mixer for a training/prefill sequence; x: (B, L, d).
+
+    With ``return_cache`` also returns {'state', 'conv'} for decoding.
+    """
+    di, n, hs, p = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    from repro.models.layers import rmsnorm
+
+    zxbcdt = jnp.einsum("bld,de->ble", x, params["in_proj"])
+    z, xbc_raw, dt = _split_in_proj(cfg, zxbcdt)
+    xbc = causal_conv(xbc_raw, params["conv_w"], params["conv_b"])
+    xs = xbc[..., :di].reshape(*x.shape[:2], hs, p)
+    b_in = xbc[..., di : di + n]
+    c_in = xbc[..., di + n :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["a_log"])
+    chunk = min(getattr(cfg, "ssd_chunk", 0) or SSD_CHUNK, x.shape[1])
+    if getattr(cfg, "use_pallas", False):
+        from repro.kernels import ssd_pallas
+
+        y, state = ssd_pallas(xs, dt, a, b_in, c_in, chunk=chunk)
+    else:
+        y, state = ssd_chunked(xs, dt, a, b_in, c_in, chunk=chunk, return_state=True)
+    y = y + (params["d_skip"][None, None, :, None] * xs.astype(jnp.float32)).astype(
+        y.dtype
+    )
+    y = y.reshape(*x.shape[:2], di)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(y, params["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("ble,ed->bld", y, params["out_proj"])
+    if return_cache:
+        k = params["conv_w"].shape[0]
+        conv_cache = xbc_raw[:, -(k - 1) :]  # raw pre-conv window
+        return out, {"state": state.astype(jnp.float32), "conv": conv_cache}
+    return out
+
+
+def ssm_decode_step(params, x: jax.Array, state, conv_cache, cfg):
+    """Single-token recurrent update.
+
+    x: (B, 1, d); state: (B, H, P, N); conv_cache: (B, K-1, conv_dim).
+    Returns (y (B,1,d), new_state, new_conv_cache).
+    """
+    di, n, hs, p = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    from repro.models.layers import rmsnorm
+
+    zxbcdt = jnp.einsum("bld,de->ble", x, params["in_proj"])
+    z, xbc, dt = _split_in_proj(cfg, zxbcdt)
+    xbc_t = xbc[:, 0]  # (B, conv_dim)
+    # conv over the cached window: window[k] holds x_{t-K+1+k}, while
+    # conv_w[j] multiplies lag j — flip to align (matches causal_conv)
+    window = jnp.concatenate([conv_cache, xbc_t[:, None]], axis=1)  # (B,K,Cd)
+    conv_out = (
+        jnp.einsum("bkc,kc->bc", window, params["conv_w"][::-1]) + params["conv_b"]
+    )
+    conv_out = jax.nn.silu(conv_out)
+    new_conv_cache = window[:, 1:]
+
+    xs = conv_out[:, :di].reshape(-1, hs, p)  # (B,H,P)
+    b_in = conv_out[:, di : di + n]  # (B,N)
+    c_in = conv_out[:, di + n :]  # (B,N)
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    a = -jnp.exp(params["a_log"])  # (H,)
+    g = jnp.exp(dtv * a)  # (B,H)
+    xdt = xs.astype(jnp.float32) * dtv[..., None]
+    new_state = state * g[..., None, None] + jnp.einsum("bhp,bn->bhpn", xdt, b_in)
+    y = jnp.einsum("bhpn,bn->bhp", new_state, c_in)
+    y = y + params["d_skip"][None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(-1, 1, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(y, params["gate_norm"], cfg.norm_eps)
+    return jnp.einsum("ble,ed->bld", y, params["out_proj"]), new_state, new_conv_cache

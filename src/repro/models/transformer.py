@@ -1,0 +1,339 @@
+"""Decoder stacks for all six architecture families.
+
+Layer parameters are stacked on a leading (L, ...) axis and the stack runs
+under ``lax.scan`` (small HLO, fast multi-pod compiles; the roofline
+pipeline corrects for XLA's count-the-body-once cost analysis by lowering
+``block_fn`` separately and scaling by L — see launch/roofline.py).
+
+Three entry points per model, matching the assigned input shapes:
+  train:   full-sequence forward + CE loss           (train_4k)
+  prefill: full-sequence forward, returns KV/SSM cache (prefill_32k)
+  decode:  one token against the cache               (decode_32k, long_500k)
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    apply_mrope,
+    apply_rope,
+    attention_init,
+    blocked_causal_attention,
+    decode_attention,
+    rmsnorm,
+    rmsnorm_init,
+    swiglu,
+    swiglu_init,
+)
+
+VISION_EMBED_DIM = 1024  # stub ViT output width (assignment carve-out)
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Block init
+# ---------------------------------------------------------------------------
+
+
+def block_init(key, cfg: ModelConfig):
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 6)
+    p: Dict[str, Any] = {}
+    if cfg.arch_type == "ssm":
+        p["norm"] = rmsnorm_init(cfg.d_model, dt)
+        p["ssm"] = ssm_lib.ssm_init(ks[0], cfg, dt)
+        return p
+    p["attn_norm"] = rmsnorm_init(cfg.d_model, dt)
+    p["mlp_norm"] = rmsnorm_init(cfg.d_model, dt)
+    if cfg.use_mla:
+        p["attn"] = moe_lib.mla_init(ks[0], cfg, dt)
+    else:
+        p["attn"] = attention_init(ks[0], cfg, dt)
+    if cfg.arch_type == "hybrid":
+        p["ssm"] = ssm_lib.ssm_init(ks[1], cfg, dt)
+        p["attn_branch_norm"] = rmsnorm_init(cfg.d_model, dt)
+        p["ssm_branch_norm"] = rmsnorm_init(cfg.d_model, dt)
+    if cfg.arch_type == "moe":
+        p["moe"] = moe_lib.moe_init(ks[2], cfg, dt)
+    else:
+        p["mlp"] = swiglu_init(ks[3], cfg.d_model, cfg.d_ff, dt)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Attention paths (full-sequence and decode)
+# ---------------------------------------------------------------------------
+
+
+def _rope_q_k(cfg, q, k, pos_info):
+    if cfg.mrope:
+        q = apply_mrope(q, pos_info["positions3"], cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, pos_info["positions3"], cfg.rope_theta, cfg.mrope_sections)
+    else:
+        q = apply_rope(q, pos_info["positions"], cfg.rope_theta)
+        k = apply_rope(k, pos_info["positions"], cfg.rope_theta)
+    return q, k
+
+
+def attn_full(lp, x, cfg: ModelConfig, pos_info, window: int):
+    """Full-sequence GQA attention; returns (out, (k, v)) for cache fill."""
+    q = jnp.einsum("bsd,dhk->bshk", x, lp["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, lp["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, lp["wv"])
+    q, k = _rope_q_k(cfg, q, k, pos_info)
+    if cfg.use_pallas:
+        from repro.kernels import attention_pallas
+
+        out = attention_pallas(q, k, v, window=window)
+    else:
+        out = blocked_causal_attention(q, k, v, window=window)
+    return jnp.einsum("bshk,hkd->bsd", out, lp["wo"]), (k, v)
+
+
+def attn_decode(lp, x, cfg: ModelConfig, cache, pos_info):
+    """x: (B,1,d). cache: {'k','v'} ring buffers + shared positions."""
+    pos = pos_info["pos"]  # (B,)
+    q = jnp.einsum("bsd,dhk->bshk", x, lp["wq"])
+    k_new = jnp.einsum("bsd,dhk->bshk", x, lp["wk"])
+    v_new = jnp.einsum("bsd,dhk->bshk", x, lp["wv"])
+    if cfg.mrope:
+        # decode happens in the text region: all three coordinate streams
+        # advance together as i - vision_tokens + grid (see make_pos_info)
+        g = max(int(math.ceil(math.sqrt(max(cfg.vision_tokens, 1)))), 1)
+        pos_txt = pos - cfg.vision_tokens + g
+        p3 = jnp.broadcast_to(pos_txt[None, :, None], (3, pos.shape[0], 1))
+        q = apply_mrope(q, p3, cfg.rope_theta, cfg.mrope_sections)
+        k_new = apply_mrope(k_new, p3, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        q = apply_rope(q, pos[:, None], cfg.rope_theta)
+        k_new = apply_rope(k_new, pos[:, None], cfg.rope_theta)
+    T = cache["k"].shape[1]
+    slot = pos % T  # ring-buffer insert
+    bidx = jnp.arange(pos.shape[0])
+    k_cache = cache["k"].at[bidx, slot].set(k_new[:, 0])
+    v_cache = cache["v"].at[bidx, slot].set(v_new[:, 0])
+    # cache_positions are shared across layers and updated once per step
+    cache_pos = pos_info["cache_positions"]
+    out = decode_attention(
+        q, k_cache, v_cache, cache_pos, pos, window=cfg.sliding_window
+    )
+    out = jnp.einsum("bshk,hkd->bsd", out, lp["wo"])
+    return out, {"k": k_cache, "v": v_cache}
+
+
+def mla_full(lp, x, cfg: ModelConfig, pos_info):
+    q_nope, q_rope = moe_lib.mla_project_q(lp, x, cfg)
+    ckv, kr = moe_lib.mla_compress_kv(lp, x, cfg)
+    k_nope, v = moe_lib.mla_decompress(lp, ckv)
+    pos = pos_info["positions"]
+    q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
+    kr = apply_rope(kr[:, :, None, :], pos, cfg.rope_theta)  # (B,S,1,rr)
+    kr_b = jnp.broadcast_to(kr, (*k_nope.shape[:3], kr.shape[-1]))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, kr_b], axis=-1)
+    out = blocked_causal_attention(q, k, v, window=0)
+    return jnp.einsum("bshk,hkd->bsd", out, lp["wo"]), (ckv, kr[:, :, 0, :])
+
+
+def mla_decode(lp, x, cfg: ModelConfig, cache, pos_info):
+    pos = pos_info["pos"]
+    q_nope, q_rope = moe_lib.mla_project_q(lp, x, cfg)
+    ckv_new, kr_new = moe_lib.mla_compress_kv(lp, x, cfg)
+    q_rope = apply_rope(q_rope, pos[:, None], cfg.rope_theta)
+    kr_new = apply_rope(kr_new[:, :, None, :], pos[:, None], cfg.rope_theta)[:, :, 0]
+    T = cache["ckv"].shape[1]
+    slot = pos % T
+    bidx = jnp.arange(pos.shape[0])
+    ckv = cache["ckv"].at[bidx, slot].set(ckv_new[:, 0])
+    kr = cache["krope"].at[bidx, slot].set(kr_new[:, 0])
+    cache_pos = pos_info["cache_positions"]
+    if cfg.mla_absorb:
+        # absorbed-matmul path (EXPERIMENTS.md §Perf-3)
+        valid = (cache_pos >= 0) & (cache_pos <= pos[:, None])
+        if cfg.sliding_window > 0:
+            valid &= cache_pos > (pos[:, None] - cfg.sliding_window)
+        out = moe_lib.mla_decode_absorbed(lp, q_nope, q_rope, ckv, kr, valid, cfg)
+    else:
+        # naive decompression of the whole compressed cache (§Perf-3 baseline)
+        k_nope, v = moe_lib.mla_decompress(lp, ckv)
+        kr_b = jnp.broadcast_to(kr[:, :, None, :], (*k_nope.shape[:3], kr.shape[-1]))
+        k = jnp.concatenate([k_nope, kr_b], axis=-1)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = decode_attention(q, k, v, cache_pos, pos, window=0)
+    return jnp.einsum("bshk,hkd->bsd", out, lp["wo"]), {"ckv": ckv, "krope": kr}
+
+
+# ---------------------------------------------------------------------------
+# Block apply — full sequence (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def block_apply_full(lp, x, cfg: ModelConfig, pos_info, collect_cache: bool):
+    """Returns (x', aux_loss, cache_entry_or_None)."""
+    aux = jnp.float32(0.0)
+    cache_entry = {} if collect_cache else None
+    if cfg.arch_type == "ssm":
+        h = rmsnorm(x, lp["norm"], cfg.norm_eps)
+        if collect_cache:
+            y, sc = ssm_lib.ssm_forward_train(lp["ssm"], h, cfg, return_cache=True)
+            cache_entry.update(sc)
+        else:
+            y = ssm_lib.ssm_forward_train(lp["ssm"], h, cfg)
+        return x + y, aux, cache_entry
+
+    h = rmsnorm(x, lp["attn_norm"], cfg.norm_eps)
+    if cfg.use_mla:
+        attn_out, (ckv, kr) = mla_full(lp["attn"], h, cfg, pos_info)
+        if collect_cache:
+            cache_entry.update({"ckv": ckv, "krope": kr})
+    else:
+        attn_out, (k, v) = attn_full(lp["attn"], h, cfg, pos_info, cfg.sliding_window)
+        if collect_cache:
+            cache_entry.update({"k": k, "v": v})
+    if cfg.arch_type == "hybrid":
+        if collect_cache:
+            ssm_out, sc = ssm_lib.ssm_forward_train(lp["ssm"], h, cfg, return_cache=True)
+            cache_entry.update(sc)
+        else:
+            ssm_out = ssm_lib.ssm_forward_train(lp["ssm"], h, cfg)
+        mixed = 0.5 * (
+            rmsnorm(attn_out, lp["attn_branch_norm"], cfg.norm_eps)
+            + rmsnorm(ssm_out, lp["ssm_branch_norm"], cfg.norm_eps)
+        )
+        x = x + mixed
+    else:
+        x = x + attn_out
+
+    h2 = rmsnorm(x, lp["mlp_norm"], cfg.norm_eps)
+    if cfg.arch_type == "moe":
+        y, aux = moe_lib.moe_apply(lp["moe"], h2, cfg)
+        x = x + y
+    else:
+        x = x + swiglu(lp["mlp"], h2)
+    return x, aux, cache_entry
+
+
+# ---------------------------------------------------------------------------
+# Block apply — decode (one token, cached)
+# ---------------------------------------------------------------------------
+
+
+def block_apply_decode(lp, x, cfg: ModelConfig, cache_l, pos_info):
+    """Returns (x', new_cache_l)."""
+    new_cache = dict(cache_l)
+    if cfg.arch_type == "ssm":
+        h = rmsnorm(x, lp["norm"], cfg.norm_eps)
+        y, st, cc = ssm_lib.ssm_decode_step(
+            lp["ssm"], h, cache_l["state"], cache_l["conv"], cfg
+        )
+        new_cache["state"], new_cache["conv"] = st, cc
+        return x + y, new_cache
+
+    h = rmsnorm(x, lp["attn_norm"], cfg.norm_eps)
+    if cfg.use_mla:
+        attn_out, kv_cache = mla_decode(lp["attn"], h, cfg, cache_l, pos_info)
+    else:
+        attn_out, kv_cache = attn_decode(lp["attn"], h, cfg, cache_l, pos_info)
+    new_cache.update(kv_cache)
+    if cfg.arch_type == "hybrid":
+        y, st, cc = ssm_lib.ssm_decode_step(
+            lp["ssm"], h, cache_l["state"], cache_l["conv"], cfg
+        )
+        new_cache["state"], new_cache["conv"] = st, cc
+        mixed = 0.5 * (
+            rmsnorm(attn_out, lp["attn_branch_norm"], cfg.norm_eps)
+            + rmsnorm(y, lp["ssm_branch_norm"], cfg.norm_eps)
+        )
+        x = x + mixed
+    else:
+        x = x + attn_out
+
+    h2 = rmsnorm(x, lp["mlp_norm"], cfg.norm_eps)
+    if cfg.arch_type == "moe":
+        y2, _ = moe_lib.moe_apply(lp["moe"], h2, cfg)
+        x = x + y2
+    else:
+        x = x + swiglu(lp["mlp"], h2)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / heads
+# ---------------------------------------------------------------------------
+
+
+def embed_init(key, cfg: ModelConfig):
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 4)
+    s = 0.02
+    p: Dict[str, Any] = {"final_norm": rmsnorm_init(cfg.d_model, dt)}
+    if cfg.num_codebooks:
+        p["embed"] = (
+            jax.random.normal(ks[0], (cfg.num_codebooks, cfg.vocab_size, cfg.d_model))
+            * s
+        ).astype(dt)
+        p["unembed"] = (
+            jax.random.normal(ks[1], (cfg.num_codebooks, cfg.d_model, cfg.vocab_size))
+            * s
+        ).astype(dt)
+    else:
+        p["embed"] = (
+            jax.random.normal(ks[0], (cfg.vocab_size, cfg.d_model)) * s
+        ).astype(dt)
+        if not cfg.tie_embeddings:
+            p["unembed"] = (
+                jax.random.normal(ks[1], (cfg.d_model, cfg.vocab_size)) * s
+            ).astype(dt)
+    if cfg.arch_type == "vlm":
+        p["vision_proj"] = (
+            jax.random.normal(ks[2], (VISION_EMBED_DIM, cfg.d_model))
+            / math.sqrt(VISION_EMBED_DIM)
+        ).astype(dt)
+    return p
+
+
+def embed_tokens(p, cfg: ModelConfig, tokens: jax.Array) -> jax.Array:
+    if cfg.num_codebooks:
+        # tokens: (B, S, nq) — sum codebook embeddings (MusicGen)
+        parts = [p["embed"][q][tokens[..., q]] for q in range(cfg.num_codebooks)]
+        return sum(parts)
+    return p["embed"][tokens]
+
+
+def logits_from_h(p, cfg: ModelConfig, h: jax.Array) -> jax.Array:
+    h = rmsnorm(h, p["final_norm"], cfg.norm_eps)
+    if cfg.num_codebooks:
+        return jnp.einsum("bsd,qdv->bsqv", h, p["unembed"])
+    w = p["embed"].T if cfg.tie_embeddings else p["unembed"]
+    return jnp.einsum("bsd,dv->bsv", h, w)
+
+
+# ---------------------------------------------------------------------------
+# Position streams
+# ---------------------------------------------------------------------------
+
+
+def make_pos_info(cfg: ModelConfig, batch_size: int, seq_len: int):
+    pos = jnp.broadcast_to(jnp.arange(seq_len, dtype=jnp.int32), (batch_size, seq_len))
+    info = {"positions": pos}
+    if cfg.mrope:
+        tv = cfg.vision_tokens
+        g = max(int(math.ceil(math.sqrt(max(tv, 1)))), 1)
+        i = jnp.arange(seq_len, dtype=jnp.int32)
+        is_vis = i < tv
+        t = jnp.where(is_vis, 0, i - tv + g)
+        hh = jnp.where(is_vis, i // g, i - tv + g)
+        ww = jnp.where(is_vis, i % g, i - tv + g)
+        p3 = jnp.stack([t, hh, ww])  # (3, S)
+        info["positions3"] = jnp.broadcast_to(p3[:, None, :], (3, batch_size, seq_len))
+    return info

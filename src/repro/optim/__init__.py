@@ -1,0 +1,29 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    OptState,
+    adamw,
+    sgd,
+    cosine_schedule,
+    constant_schedule,
+)
+from repro.optim.rw_sgd import (
+    ReplicaSet,
+    init_replicas,
+    fork_replica,
+    local_sgd_step,
+    replica_train_step,
+)
+
+__all__ = [
+    "Optimizer",
+    "OptState",
+    "adamw",
+    "sgd",
+    "cosine_schedule",
+    "constant_schedule",
+    "ReplicaSet",
+    "init_replicas",
+    "fork_replica",
+    "local_sgd_step",
+    "replica_train_step",
+]

@@ -1,0 +1,119 @@
+"""Functional optimizers (no external deps): SGD(+momentum), AdamW.
+
+State mirrors the parameter pytree leaf-for-leaf, so the sharding policy
+applied to params applies verbatim to optimizer slots — which is exactly
+what the dry-run does.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: object  # pytree like params (or () for plain SGD)
+    nu: object  # pytree like params (or () for SGD)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable  # (grads, state, params) -> (new_params, new_state)
+
+
+def constant_schedule(lr: float) -> Callable:
+    return lambda step: jnp.float32(lr)
+
+
+def cosine_schedule(lr: float, warmup: int, total: int, min_ratio: float = 0.1):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(step / max(warmup, 1), 1.0)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.float32(lr) * warm * (min_ratio + (1 - min_ratio) * cos)
+
+    return fn
+
+
+def _cast_like(x, ref):
+    return x.astype(ref.dtype)
+
+
+def sgd(lr, momentum: float = 0.0) -> Optimizer:
+    sched = lr if callable(lr) else constant_schedule(lr)
+
+    def init(params):
+        mu = jax.tree.map(jnp.zeros_like, params) if momentum else ()
+        return OptState(step=jnp.zeros((), jnp.int32), mu=mu, nu=())
+
+    def update(grads, state, params):
+        lr_t = sched(state.step)
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g, state.mu, grads)
+            upd = mu
+        else:
+            mu = ()
+            upd = grads
+        new_params = jax.tree.map(
+            lambda p, u: p - _cast_like(lr_t * u, p), params, upd
+        )
+        return new_params, OptState(step=state.step + 1, mu=mu, nu=())
+
+    return Optimizer(init=init, update=update)
+
+
+def adamw(
+    lr,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    moment_dtype=jnp.float32,
+) -> Optimizer:
+    """AdamW. ``moment_dtype=bfloat16`` halves optimizer HBM (the ZeRO-2
+    companion used by the llama3-405b fit hillclimb, EXPERIMENTS.md
+    §Perf-1); accumulation still happens in float32."""
+    sched = lr if callable(lr) else constant_schedule(lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+        return OptState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree.map(zeros, params),
+            nu=jax.tree.map(zeros, params),
+        )
+
+    def update(grads, state, params):
+        step = state.step + 1
+        lr_t = sched(state.step)
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd_leaf(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+            v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+            mhat = m32 / c1
+            vhat = v32 / c2
+            delta = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                delta = delta + weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype)
+            return m32.astype(moment_dtype), v32.astype(moment_dtype), new_p
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_m = tdef.flatten_up_to(state.mu)
+        flat_v = tdef.flatten_up_to(state.nu)
+        flat_p = tdef.flatten_up_to(params)
+        out = [upd_leaf(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        mu = tdef.unflatten([o[0] for o in out])
+        nu = tdef.unflatten([o[1] for o in out])
+        new_params = tdef.unflatten([o[2] for o in out])
+        return new_params, OptState(step=step, mu=mu, nu=nu)
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,98 @@
+"""Random-walk SGD: the paper's learning algorithm (Section I).
+
+Each live walk carries a model replica; the currently visited node takes a
+local (mini-batch) SGD step on *its own* data shard and forwards the
+replica. Replicas live in a fixed-capacity stack with a leading walk-slot
+axis — forking a walk is a slot-to-slot copy of (params, opt moments),
+which is exactly DECAFORK's "identical duplicate" semantics, and
+termination simply deactivates the slot.
+
+``replica_train_step`` vectorizes the per-walk local step with ``vmap``
+so one jitted call advances every live replica simultaneously (the
+synchronous-round semantics of the simulator).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ReplicaSet(NamedTuple):
+    params: Any  # pytree, leaves (W, ...)
+    opt_state: Any  # pytree, leaves (W, ...)
+    steps: jax.Array  # (W,) int32 local step counters
+
+
+def init_replicas(init_fn: Callable, opt_init: Callable, key, max_walks: int) -> ReplicaSet:
+    """All slots start from the same initialization (footnote 4: one node
+    creates the Z_0 walks — they share the initial model)."""
+    params = init_fn(key)
+    opt_state = opt_init(params)
+    stack = lambda t: jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (max_walks,) + x.shape), t
+    )
+    return ReplicaSet(
+        params=stack(params),
+        opt_state=stack(opt_state),
+        steps=jnp.zeros((max_walks,), jnp.int32),
+    )
+
+
+def fork_replica(rs: ReplicaSet, src: jax.Array, dst: jax.Array, do: jax.Array) -> ReplicaSet:
+    """Copy slot src -> dst where `do` (bool scalar or (E,) events) holds."""
+    src = jnp.atleast_1d(src)
+    dst = jnp.atleast_1d(dst)
+    do = jnp.atleast_1d(do)
+    safe_dst = jnp.where(do, dst, rs.steps.shape[0])  # out-of-range -> drop
+
+    def copy(leaf):
+        return leaf.at[safe_dst].set(leaf[src], mode="drop")
+
+    return ReplicaSet(
+        params=jax.tree.map(copy, rs.params),
+        opt_state=jax.tree.map(copy, rs.opt_state),
+        steps=rs.steps.at[safe_dst].set(rs.steps[src], mode="drop"),
+    )
+
+
+def local_sgd_step(loss_fn: Callable, optimizer, params, opt_state, batch):
+    """One node-local update: plain SGD/Adam on the node's mini-batch."""
+    (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+    new_params, new_opt = optimizer.update(grads, opt_state, params)
+    return new_params, new_opt, loss, metrics
+
+
+def replica_train_step(loss_fn: Callable, optimizer):
+    """vmapped per-walk local step over the slot axis.
+
+    Returns f(rs, batches, active) -> (new rs, (W,) losses); inactive
+    slots pass through unchanged.
+    """
+
+    def one(params, opt_state, batch, active):
+        new_p, new_o, loss, _ = local_sgd_step(loss_fn, optimizer, params, opt_state, batch)
+        sel = lambda a, b: jax.tree.map(
+            lambda x, y: jnp.where(
+                jnp.reshape(active, (1,) * x.ndim), x, y
+            ),
+            a,
+            b,
+        )
+        return sel(new_p, params), sel(new_o, opt_state), jnp.where(active, loss, 0.0)
+
+    vone = jax.vmap(one, in_axes=(0, 0, 0, 0))
+
+    def step(rs: ReplicaSet, batches, active):
+        new_params, new_opt, losses = vone(rs.params, rs.opt_state, batches, active)
+        return (
+            ReplicaSet(
+                params=new_params,
+                opt_state=new_opt,
+                steps=rs.steps + active.astype(jnp.int32),
+            ),
+            losses,
+        )
+
+    return step

@@ -1,0 +1,16 @@
+from repro.utils.tree import (
+    tree_bytes,
+    tree_count,
+    tree_flatten_with_paths,
+    tree_zeros_like,
+)
+from repro.utils.prng import fold_in_time, split_like
+
+__all__ = [
+    "tree_bytes",
+    "tree_count",
+    "tree_flatten_with_paths",
+    "tree_zeros_like",
+    "fold_in_time",
+    "split_like",
+]

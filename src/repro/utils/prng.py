@@ -1,0 +1,19 @@
+"""Deterministic PRNG helpers.
+
+Every stochastic component (walk movement, failure injection, fork coin
+flips) folds the global step counter into its key so that simulations are
+bit-reproducible regardless of how the step loop is structured.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def fold_in_time(key: jax.Array, t, tag: int = 0) -> jax.Array:
+    """Fold step counter (and a component tag) into a key."""
+    key = jax.random.fold_in(key, tag)
+    return jax.random.fold_in(key, t)
+
+
+def split_like(key: jax.Array, n: int):
+    return jax.random.split(key, n)

@@ -1,0 +1,38 @@
+"""Small pytree utilities used across the framework."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_count(tree) -> int:
+    """Total number of scalar parameters in a pytree."""
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    """Total bytes of a pytree (dtype-aware)."""
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_zeros_like(tree):
+    return jax.tree_util.tree_map(jnp.zeros_like, tree)
+
+
+def tree_flatten_with_paths(tree):
+    """Return [(path_string, leaf)] for a pytree, '/'-joined key paths."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        keys = []
+        for p in path:
+            if hasattr(p, "key"):
+                keys.append(str(p.key))
+            elif hasattr(p, "idx"):
+                keys.append(str(p.idx))
+            elif hasattr(p, "name"):
+                keys.append(str(p.name))
+            else:
+                keys.append(str(p))
+        out.append(("/".join(keys), leaf))
+    return out

@@ -1,0 +1,10 @@
+import os
+import sys
+
+# src-layout import path (mirrors PYTHONPATH=src)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+# keep smoke tests on the single real device; dryrun.py sets its own flags
+jax.config.update("jax_platforms", "cpu")

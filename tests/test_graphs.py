@@ -1,0 +1,96 @@
+import numpy as np
+import pytest
+
+from repro.graphs import (
+    GRAPH_FAMILIES,
+    complete_graph,
+    erdos_renyi_graph,
+    expected_return_times,
+    make_graph,
+    power_law_graph,
+    random_regular_graph,
+    ring_graph,
+    spectral_gap,
+    stationary_distribution,
+    torus_graph,
+)
+from repro.graphs.generators import is_connected_adj
+
+
+@pytest.mark.parametrize("n,d", [(20, 3), (50, 4), (100, 8)])
+def test_random_regular(n, d):
+    g = random_regular_graph(n, d, seed=1)
+    g.validate()
+    assert (g.degrees == d).all()
+    assert g.num_edges == n * d // 2
+
+
+def test_regular_rejects_bad_args():
+    with pytest.raises(ValueError):
+        random_regular_graph(9, 3)  # odd n*d
+    with pytest.raises(ValueError):
+        random_regular_graph(4, 5)  # d >= n
+
+
+@pytest.mark.parametrize(
+    "maker",
+    [
+        lambda: erdos_renyi_graph(60, seed=2),
+        lambda: complete_graph(12),
+        lambda: power_law_graph(80, m=3, seed=3),
+        lambda: ring_graph(17),
+        lambda: torus_graph(4, 5),
+    ],
+)
+def test_families_valid(maker):
+    g = maker()
+    g.validate()
+
+
+def test_make_graph_dispatch():
+    for fam in ("regular", "erdos_renyi", "complete", "power_law", "ring"):
+        g = make_graph(fam, 24, seed=0, degree=4, m=2)
+        assert g.n == 24
+        assert is_connected_adj(g.adjacency())
+    with pytest.raises(KeyError):
+        make_graph("nope", 10)
+
+
+def test_stationary_and_kac():
+    g = random_regular_graph(40, 4, seed=5)
+    pi = stationary_distribution(g)
+    np.testing.assert_allclose(pi.sum(), 1.0)
+    # regular graph: uniform stationary, E[R] = n
+    np.testing.assert_allclose(pi, 1.0 / 40)
+    np.testing.assert_allclose(expected_return_times(g), 40.0)
+
+
+def test_spectral_gap_positive():
+    g = random_regular_graph(60, 6, seed=6)
+    gap = spectral_gap(g)
+    assert 0.0 < gap <= 2.0
+    # complete graph has the largest gap
+    assert spectral_gap(complete_graph(20)) > spectral_gap(ring_graph(20))
+
+
+def test_empirical_return_time_matches_kac():
+    """Simulate a single walk and check mean return time ~ n (Kac)."""
+    import jax
+    import jax.numpy as jnp
+
+    g = random_regular_graph(30, 4, seed=7)
+    nbrs = jnp.asarray(g.neighbors)
+    degs = jnp.asarray(g.degrees)
+
+    def step(carry, k):
+        posn, = carry
+        u = jax.random.uniform(k, ())
+        idx = jnp.minimum((u * degs[posn]).astype(jnp.int32), degs[posn] - 1)
+        nxt = nbrs[posn, idx]
+        return (nxt,), nxt
+
+    keys = jax.random.split(jax.random.key(0), 30000)
+    _, path = jax.lax.scan(step, (jnp.int32(0),), keys)
+    visits = np.nonzero(np.asarray(path) == 0)[0]
+    mean_rt = np.diff(visits).mean()
+    assert abs(mean_rt - 30.0) / 30.0 < 0.15

@@ -1,0 +1,168 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import attention_pallas, ssd_pallas, theta_sums_pallas
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.theta_survival import theta_sums
+
+KEY = jax.random.key(42)
+
+
+# ---------------------------------------------------------------------------
+# theta_survival
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,W,B", [(8, 4, 16), (32, 16, 64), (64, 40, 128), (16, 7, 33)])
+def test_theta_shapes(n, W, B):
+    k1, k2 = jax.random.split(jax.random.fold_in(KEY, n * W))
+    ls = jax.random.randint(k1, (n, W), -1, 60, dtype=jnp.int32)
+    hist = (jax.random.uniform(k2, (n, B)) * 3).astype(jnp.float32)
+    # some nodes with zero samples
+    hist = hist.at[0].set(0.0)
+    total = hist.sum(1)
+    t = jnp.int32(70)
+    got = theta_sums_pallas(ls, hist, total, t)
+    want = ref.theta_sums_ref(ls, hist, total, t)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_theta_block_size_invariance():
+    k1, k2 = jax.random.split(KEY)
+    ls = jax.random.randint(k1, (16, 8), -1, 30, dtype=jnp.int32)
+    hist = (jax.random.uniform(k2, (16, 32)) * 2).astype(jnp.float32)
+    total = hist.sum(1)
+    a = theta_sums(ls, hist, total, jnp.int32(40), block_nodes=4, interpret=True)
+    b = theta_sums(ls, hist, total, jnp.int32(40), block_nodes=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+def test_theta_all_never_seen():
+    ls = jnp.full((8, 4), -1, jnp.int32)
+    hist = jnp.ones((8, 16), jnp.float32)
+    got = theta_sums_pallas(ls, hist, hist.sum(1), jnp.int32(10))
+    np.testing.assert_allclose(np.asarray(got), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("S,H,KV,D", [(128, 4, 4, 32), (256, 8, 2, 64), (256, 6, 1, 32)])
+@pytest.mark.parametrize("window", [0, 96])
+def test_flash_vs_ref(S, H, KV, D, window):
+    k = jax.random.fold_in(KEY, S * H + window)
+    q = jax.random.normal(jax.random.fold_in(k, 0), (2, S, H, D), jnp.float32)
+    kk = jax.random.normal(jax.random.fold_in(k, 1), (2, S, KV, D), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(k, 2), (2, S, KV, D), jnp.float32)
+    got = attention_pallas(q, kk, v, window=window)
+    want = ref.mha_ref(q, kk, v, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_flash_bf16():
+    k = jax.random.fold_in(KEY, 77)
+    q = jax.random.normal(jax.random.fold_in(k, 0), (1, 128, 4, 32), jnp.bfloat16)
+    kk = jax.random.normal(jax.random.fold_in(k, 1), (1, 128, 2, 32), jnp.bfloat16)
+    v = jax.random.normal(jax.random.fold_in(k, 2), (1, 128, 2, 32), jnp.bfloat16)
+    got = attention_pallas(q, kk, v)
+    want = ref.mha_ref(q, kk, v)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=3e-2, atol=3e-2
+    )
+
+
+def test_flash_matches_model_blocked_attention():
+    """Kernel == the jnp blocked attention the models actually run."""
+    from repro.models.layers import blocked_causal_attention
+
+    k = jax.random.fold_in(KEY, 99)
+    q = jax.random.normal(jax.random.fold_in(k, 0), (2, 256, 8, 32), jnp.float32)
+    kk = jax.random.normal(jax.random.fold_in(k, 1), (2, 256, 4, 32), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(k, 2), (2, 256, 4, 32), jnp.float32)
+    for w in (0, 64):
+        a = attention_pallas(q, kk, v, window=w)
+        b = blocked_causal_attention(q, kk, v, window=w, q_block=128)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-4)
+
+
+def test_flash_rejects_bad_shapes():
+    q = jnp.zeros((1, 4, 128, 32))
+    k = jnp.zeros((1, 3, 128, 32))
+    with pytest.raises(ValueError):
+        flash_attention(q, k, k)
+
+
+# ---------------------------------------------------------------------------
+# ssd intra-chunk
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("L,H,P,N,chunk", [(128, 2, 16, 8, 64), (256, 4, 32, 16, 128)])
+def test_ssd_vs_chunked(L, H, P, N, chunk):
+    from repro.models.ssm import ssd_chunked
+
+    k = jax.random.fold_in(KEY, L * H)
+    B = 2
+    x = jax.random.normal(jax.random.fold_in(k, 0), (B, L, H, P))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(k, 1), (B, L, H)))
+    a = -jnp.exp(jax.random.normal(jax.random.fold_in(k, 2), (H,)))
+    b_in = jax.random.normal(jax.random.fold_in(k, 3), (B, L, N))
+    c_in = jax.random.normal(jax.random.fold_in(k, 4), (B, L, N))
+    y_ref, st_ref = ssd_chunked(x, dt, a, b_in, c_in, chunk=chunk, return_state=True)
+    y_got, st_got = ssd_pallas(x, dt, a, b_in, c_in, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y_got), np.asarray(y_ref), rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(st_got), np.asarray(st_ref), rtol=3e-4, atol=3e-4)
+
+
+def test_ssd_vs_naive_recurrence():
+    """Both chunked paths == the literal h_t = g h_{t-1} + dt B x recurrence."""
+    from repro.models.ssm import ssd_chunked
+
+    B, L, H, P, N = 1, 64, 2, 8, 4
+    k = jax.random.fold_in(KEY, 1234)
+    x = jax.random.normal(jax.random.fold_in(k, 0), (B, L, H, P))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(k, 1), (B, L, H)))
+    a = -jnp.exp(jax.random.normal(jax.random.fold_in(k, 2), (H,)))
+    b_in = jax.random.normal(jax.random.fold_in(k, 3), (B, L, N))
+    c_in = jax.random.normal(jax.random.fold_in(k, 4), (B, L, N))
+
+    h = np.zeros((B, H, P, N))
+    ys = []
+    for t in range(L):
+        g = np.exp(np.asarray(dt[:, t]) * np.asarray(a))  # (B,H)
+        xdt = np.asarray(x[:, t]) * np.asarray(dt[:, t])[..., None]
+        h = h * g[..., None, None] + np.einsum("bhp,bn->bhpn", xdt, np.asarray(b_in[:, t]))
+        ys.append(np.einsum("bhpn,bn->bhp", h, np.asarray(c_in[:, t])))
+    want = np.stack(ys, axis=1)  # (B,L,H,P)
+
+    got = np.asarray(ssd_chunked(x, dt, a, b_in, c_in, chunk=16))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    got_k, _ = ssd_pallas(x, dt, a, b_in, c_in, chunk=16)
+    np.testing.assert_allclose(np.asarray(got_k), want, rtol=1e-4, atol=1e-4)
+
+
+def test_pallas_estimator_in_simulation():
+    """estimator_impl='pallas' (interpret mode) drives the same protocol
+    trajectory as the gather path inside a real simulation."""
+    from repro.core.failures import FailureConfig
+    from repro.core.protocol import ProtocolConfig
+    from repro.core.simulator import run_simulation
+    from repro.graphs import random_regular_graph
+
+    g = random_regular_graph(16, 4, seed=2)
+    fcfg = FailureConfig(burst_times=(120,), burst_sizes=(2,))
+    zs = {}
+    for impl in ("gather", "pallas"):
+        pcfg = ProtocolConfig(
+            algorithm="decafork", z0=4, max_walks=8, eps=1.2,
+            protocol_start=60, rt_bins=64, estimator_impl=impl,
+        )
+        _, outs = run_simulation(g, pcfg, fcfg, steps=200, key=9)
+        zs[impl] = np.asarray(outs.z)
+    np.testing.assert_array_equal(zs["gather"], zs["pallas"])

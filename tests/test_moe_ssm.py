@@ -1,0 +1,167 @@
+"""MoE dispatch semantics and SSM details beyond the smoke tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import moe as moe_lib
+
+
+@pytest.fixture()
+def cfg():
+    return get_smoke_config("dbrx_132b")  # 4 experts top-2, no shared
+
+
+def test_moe_matches_dense_reference(cfg):
+    """With generous capacity, sort-based dispatch == per-token dense mix."""
+    key = jax.random.key(0)
+    params = moe_lib.moe_init(key, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 16, cfg.d_model))
+    y, aux = moe_lib.moe_apply(params, x, cfg)
+
+    # dense reference: every token through its top-k experts explicitly
+    xf = np.asarray(x).reshape(-1, cfg.d_model)
+    logits = xf @ np.asarray(params["router"])
+    probs = np.exp(logits - logits.max(-1, keepdims=True))
+    probs = probs / probs.sum(-1, keepdims=True)
+    top = np.argsort(-probs, axis=-1)[:, : cfg.moe_top_k]
+    ref = np.zeros_like(xf)
+    for t in range(xf.shape[0]):
+        g = probs[t, top[t]]
+        g = g / g.sum()
+        for j, e in enumerate(top[t]):
+            gate = np.asarray(params["gate"][e])
+            up = np.asarray(params["up"][e])
+            down = np.asarray(params["down"][e])
+            h = (xf[t] @ gate)
+            h = h / (1 + np.exp(-h)) * (xf[t] @ up)
+            ref[t] += g[j] * (h @ down)
+    np.testing.assert_allclose(
+        np.asarray(y).reshape(-1, cfg.d_model), ref, rtol=2e-3, atol=2e-3
+    )
+    assert float(aux) > 0
+
+
+def test_moe_capacity_drops_tokens(cfg):
+    """With capacity_factor ~ 0, most tokens drop -> near-zero output."""
+    import dataclasses
+
+    tight = dataclasses.replace(cfg, capacity_factor=1e-6)
+    key = jax.random.key(0)
+    params = moe_lib.moe_init(key, tight, jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (4, 64, tight.d_model))
+    y, _ = moe_lib.moe_apply(params, x, tight)
+    y_full, _ = moe_lib.moe_apply(params, x, cfg)
+    # tight capacity must produce strictly smaller output energy
+    assert float(jnp.sum(y**2)) < float(jnp.sum(y_full**2))
+
+
+def test_moe_capacity_rounding():
+    cfg = get_smoke_config("dbrx_132b")
+    assert moe_lib.moe_capacity(1024, cfg) % 8 == 0
+    assert moe_lib.moe_capacity(1, cfg) == 8  # floor
+
+
+def test_mla_shapes():
+    cfg = get_smoke_config("deepseek_v2_236b")
+    key = jax.random.key(0)
+    p = moe_lib.mla_init(key, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 8, cfg.d_model))
+    qn, qr = moe_lib.mla_project_q(p, x, cfg)
+    assert qn.shape == (2, 8, cfg.num_heads, cfg.head_dim)
+    assert qr.shape == (2, 8, cfg.num_heads, cfg.rope_head_dim)
+    ckv, kr = moe_lib.mla_compress_kv(p, x, cfg)
+    assert ckv.shape == (2, 8, cfg.kv_lora_rank)
+    assert kr.shape == (2, 8, cfg.rope_head_dim)
+    k, v = moe_lib.mla_decompress(p, ckv)
+    assert k.shape == v.shape == (2, 8, cfg.num_heads, cfg.head_dim)
+
+
+def test_ssm_decode_state_evolution():
+    """Decode state must change with inputs and decay without them."""
+    from repro.models import ssm as ssm_lib
+
+    cfg = get_smoke_config("mamba2_1_3b")
+    key = jax.random.key(0)
+    p = ssm_lib.ssm_init(key, cfg, jnp.float32)
+    B = 2
+    state = jnp.zeros((B, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state))
+    conv = jnp.zeros((B, cfg.ssm_conv - 1, cfg.ssm_d_inner + 2 * cfg.ssm_state))
+    x = jax.random.normal(jax.random.fold_in(key, 1), (B, 1, cfg.d_model))
+    y1, st1, cv1 = ssm_lib.ssm_decode_step(p, x, state, conv, cfg)
+    assert float(jnp.abs(st1).sum()) > 0
+    y2, st2, _ = ssm_lib.ssm_decode_step(p, jnp.zeros_like(x), st1, cv1, cfg)
+    # zero input: state decays toward zero (|g| < 1)
+    assert float(jnp.abs(st2).sum()) < float(jnp.abs(st1).sum()) * 1.5
+
+
+def test_mrope_sections_sum():
+    from repro.models.layers import apply_mrope
+
+    cfg = get_smoke_config("qwen2_vl_2b")
+    assert sum(cfg.mrope_sections) == cfg.head_dim // 2
+    x = jnp.ones((1, 4, 2, cfg.head_dim))
+    p3 = jnp.zeros((3, 1, 4), jnp.int32)
+    out = apply_mrope(x, p3, 10000.0, cfg.mrope_sections)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x), atol=1e-6)  # pos 0 = identity
+
+
+def test_grouped_moe_matches_global():
+    """§Perf-2 path: shard-local grouped dispatch == global dispatch
+    (dropless capacity)."""
+    import dataclasses
+
+    cfg = dataclasses.replace(
+        get_smoke_config("dbrx_132b"), capacity_factor=4.0
+    )
+    key = jax.random.key(0)
+    p = moe_lib.moe_init(key, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (4, 16, cfg.d_model))
+    y0, _ = moe_lib.moe_apply(p, x, cfg)
+    y1, _ = moe_lib.moe_apply(p, x, dataclasses.replace(cfg, moe_groups=4))
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), rtol=2e-4, atol=2e-4)
+
+
+def test_absorbed_mla_matches_naive_decode():
+    """§Perf-3 path: absorbed-matmul MLA decode == naive decompression."""
+    import dataclasses
+
+    from repro.models.model import Model
+
+    cfg = get_smoke_config("deepseek_v2_236b")
+    m = Model(cfg)
+    key = jax.random.key(0)
+    params = m.init(key)
+    toks = jax.random.randint(jax.random.fold_in(key, 2), (2, 8), 0, cfg.vocab_size)
+
+    def replay(cfgx):
+        mm = Model(cfgx)
+        c = mm.init_cache(2, 12)
+        dec = jax.jit(mm.decode_step)
+        outs = []
+        for i in range(8):
+            lg, c = dec(params, c, {"tokens": toks[:, i : i + 1]})
+            outs.append(np.asarray(lg[:, 0], np.float32))
+        return np.stack(outs, 1)
+
+    naive = replay(cfg)
+    absorbed = replay(dataclasses.replace(cfg, mla_absorb=True))
+    np.testing.assert_allclose(absorbed, naive, rtol=3e-3, atol=3e-3)
+
+
+def test_ssd_chunk_override_equivalent():
+    """§Perf ssd_chunk knob changes tiling, not math."""
+    import dataclasses
+
+    from repro.models import ssm as ssm_lib
+
+    cfg = get_smoke_config("mamba2_1_3b")
+    key = jax.random.key(0)
+    p = ssm_lib.ssm_init(key, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 128, cfg.d_model))
+    y0 = ssm_lib.ssm_forward_train(p, x, cfg)
+    y1 = ssm_lib.ssm_forward_train(
+        p, x, dataclasses.replace(cfg, ssd_chunk=32)
+    )
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), rtol=5e-4, atol=5e-4)

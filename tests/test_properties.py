@@ -1,0 +1,117 @@
+"""Hypothesis property-based tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import estimator as est
+from repro.core import walkers as wlk
+from repro.core.irwin_hall import irwin_hall_cdf, scaled_irwin_hall_cdf
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(
+    k=st.integers(1, 30),
+    x=st.floats(-1.0, 31.0, allow_nan=False),
+)
+@settings(**SETTINGS)
+def test_irwin_hall_is_cdf(k, x):
+    v = float(irwin_hall_cdf(x, k))
+    assert 0.0 <= v <= 1.0
+    assert float(irwin_hall_cdf(x - 0.25, k)) <= v + 1e-9  # monotone
+    if x <= 0:
+        assert v == 0.0
+    if x >= k:
+        assert v > 1.0 - 1e-6  # grid path (k > 25) interpolates near 1
+
+
+@given(
+    k=st.integers(1, 10),
+    support=st.floats(1e-3, 1.0),
+    x=st.floats(0.0, 10.0),
+)
+@settings(**SETTINGS)
+def test_scaled_irwin_hall_support(k, support, x):
+    v = float(scaled_irwin_hall_cdf(x, k, support))
+    assert 0.0 <= v <= 1.0
+    if x >= k * support:
+        assert v > 1.0 - 1e-9
+
+
+@given(data=st.data())
+@settings(**SETTINGS)
+def test_survival_bounds_and_monotonicity(data):
+    n = data.draw(st.integers(1, 8))
+    bins = data.draw(st.integers(2, 32))
+    seed = data.draw(st.integers(0, 2**30))
+    key = jax.random.key(seed)
+    hist = (jax.random.uniform(key, (n, bins)) * 4).astype(jnp.float32)
+    state = est.ReturnTimeState(hist=hist, total=hist.sum(1))
+    cum = est.survival_cumulative(state)
+    rs = jnp.arange(bins + 4, dtype=jnp.int32)
+    for i in range(n):
+        v = np.asarray(est.survival_eval(cum, state.total, jnp.full_like(rs, i), rs))
+        assert (v >= -1e-6).all() and (v <= 1 + 1e-6).all()
+        assert (np.diff(v) <= 1e-6).all()
+
+
+@given(data=st.data())
+@settings(**SETTINGS)
+def test_fork_allocation_invariants(data):
+    """Never exceeds capacity, never double-assigns a slot, preserves
+    existing walks."""
+    W = data.draw(st.integers(2, 16))
+    seed = data.draw(st.integers(0, 2**30))
+    key = jax.random.key(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    active = jax.random.uniform(k1, (W,)) < 0.5
+    ev = jax.random.uniform(k2, (W,)) < 0.5
+    pos = jax.random.randint(k3, (W,), 0, 5, dtype=jnp.int32)
+    ws = wlk.WalkState(pos=pos, active=active, track=jnp.arange(W, dtype=jnp.int32))
+    ls = jnp.zeros((5, W), jnp.int32)
+    new_ws, _, n_forks, _fp = wlk.execute_forks(ws, ls, ev, pos, None, jnp.int32(3))
+    n_free = int((~active).sum())
+    n_ev = int(ev.sum())
+    assert int(n_forks) == min(n_free, n_ev)
+    # old actives survive
+    assert bool(jnp.all(new_ws.active | ~active | ~active))
+    assert int(new_ws.active.sum()) == int(active.sum()) + int(n_forks)
+
+
+@given(data=st.data())
+@settings(**SETTINGS)
+def test_theta_identity_between_impls(data):
+    """gather- and compare-based node estimators agree on random states."""
+    seed = data.draw(st.integers(0, 2**30))
+    n = data.draw(st.sampled_from([4, 8]))
+    W = data.draw(st.integers(1, 6))
+    bins = data.draw(st.sampled_from([8, 16]))
+    t = data.draw(st.integers(0, 50))
+    key = jax.random.key(seed)
+    k1, k2 = jax.random.split(key)
+    ls = jax.random.randint(k1, (n, W), -1, max(t, 1), dtype=jnp.int32)
+    hist = jnp.round(jax.random.uniform(k2, (n, bins)) * 3)
+    total = hist.sum(1)
+    a = est.node_sums_compare(ls, hist, total, jnp.int32(t))
+    from repro.kernels.ref import theta_sums_ref
+
+    b = theta_sums_ref(ls, hist, total, jnp.int32(t))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+@given(
+    n=st.integers(6, 40).filter(lambda v: v % 2 == 0),
+    d=st.integers(3, 5),
+    seed=st.integers(0, 100),
+)
+@settings(max_examples=10, deadline=None)
+def test_regular_graph_properties(n, d, seed):
+    from repro.graphs import random_regular_graph
+
+    if d >= n:
+        return
+    g = random_regular_graph(n, d, seed=seed)
+    assert (g.degrees == d).all()
+    a = g.adjacency()
+    assert (a == a.T).all() and not a.diagonal().any()

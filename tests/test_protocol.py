@@ -1,0 +1,123 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import protocol as prt
+from repro.core import walkers as wlk
+from repro.core.estimator import NEVER
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        prt.ProtocolConfig(algorithm="bogus")
+    with pytest.raises(ValueError):
+        prt.ProtocolConfig(z0=10, max_walks=5)
+    cfg = prt.ProtocolConfig(z0=10)
+    assert cfg.p == 0.1
+
+
+def test_choose_walks_dedup():
+    pos = jnp.array([3, 3, 5, 3, 7], jnp.int32)
+    active = jnp.array([False, True, True, True, True])
+    chosen = prt.choose_walks(pos, active, 10)
+    # node 3: slots 1,3 active -> slot 1 chosen; node 5: slot 2; node 7: slot 4
+    np.testing.assert_array_equal(
+        np.asarray(chosen), [False, True, True, False, True]
+    )
+
+
+def test_decafork_decisions_threshold():
+    cfg = prt.ProtocolConfig(algorithm="decafork+", z0=4, max_walks=8,
+                             eps=2.0, eps2=5.0, fork_prob=1.0)
+    theta = jnp.array([1.0, 3.0, 6.0, 1.0])
+    chosen = jnp.array([True, True, True, False])
+    fork, term = prt.decafork_decisions(
+        theta, chosen, jax.random.key(0), cfg, jnp.asarray(True)
+    )
+    np.testing.assert_array_equal(np.asarray(fork), [True, False, False, False])
+    np.testing.assert_array_equal(np.asarray(term), [False, False, True, False])
+    # disabled -> nothing fires
+    fork, term = prt.decafork_decisions(
+        theta, chosen, jax.random.key(0), cfg, jnp.asarray(False)
+    )
+    assert not np.asarray(fork).any() and not np.asarray(term).any()
+
+
+def test_decafork_probability_scaling():
+    cfg = prt.ProtocolConfig(algorithm="decafork", z0=10, max_walks=16, eps=5.0)
+    theta = jnp.zeros((2000,))
+    chosen = jnp.ones((2000,), bool)
+    fork, _ = prt.decafork_decisions(
+        theta, chosen, jax.random.key(1), cfg, jnp.asarray(True)
+    )
+    rate = float(jnp.mean(fork))
+    assert abs(rate - 0.1) < 0.03  # p = 1/Z0
+
+
+def test_missingperson_flags():
+    cfg = prt.ProtocolConfig(
+        algorithm="missingperson", z0=3, max_walks=6, eps_mp=10.0, fork_prob=1.0
+    )
+    n, W = 4, 6
+    last_seen = jnp.zeros((n, W), jnp.int32)
+    # walk 0 at node 2; id 1 last seen at t=0 (stale), id 2 seen at t=15
+    last_seen = last_seen.at[2, 2].set(15)
+    pos = jnp.array([2, 0, 0, 0, 0, 0], jnp.int32)
+    track = jnp.arange(W, dtype=jnp.int32)
+    chosen = jnp.array([True] + [False] * 5)
+    ev = prt.missingperson_decisions(
+        last_seen, pos, track, chosen, jnp.int32(20), jax.random.key(0), cfg,
+        jnp.asarray(True),
+    )
+    ev = np.asarray(ev)
+    assert ev.shape == (W, 3)
+    assert ev[0, 1]  # id 1 stale -> replacement fork
+    assert not ev[0, 0]  # own id excluded
+    assert not ev[0, 2]  # id 2 fresh (20-15 <= 10)
+    assert not ev[1:].any()  # only the chosen walk's node acts
+
+
+def test_execute_forks_capacity_and_tracks():
+    ws = wlk.WalkState(
+        pos=jnp.array([1, 2, 3, 0], jnp.int32),
+        active=jnp.array([True, True, True, False]),
+        track=jnp.arange(4, dtype=jnp.int32),
+    )
+    last_seen = jnp.full((5, 4), 7, jnp.int32)
+    # two fork events but only one free slot -> one executes
+    ev = jnp.array([True, True, False, False])
+    new_ws, new_ls, n, fp = wlk.execute_forks(ws, last_seen, ev, ws.pos, None, jnp.int32(9))
+    assert int(n) == 1
+    assert bool(new_ws.active[3])
+    assert int(new_ws.pos[3]) == 1  # forked from walk 0's node
+    assert int(new_ws.track[3]) == 3  # fresh identity = slot
+    ls = np.asarray(new_ls)
+    assert ls[1, 3] == 9  # origin node recorded the new walk
+    assert (ls[[0, 2, 3, 4], 3] == NEVER).all()  # rest of column cleared
+
+
+def test_execute_forks_missingperson_identity():
+    ws = wlk.WalkState(
+        pos=jnp.array([4, 0, 0], jnp.int32),
+        active=jnp.array([True, False, False]),
+        track=jnp.array([0, 1, 2], jnp.int32),
+    )
+    last_seen = jnp.full((5, 3), 11, jnp.int32)
+    ev = jnp.array([True, False, False])
+    tracks = jnp.array([2, 0, 0], jnp.int32)  # replacement carries id 2
+    new_ws, new_ls, n, fp = wlk.execute_forks(ws, last_seen, ev, ws.pos, tracks, jnp.int32(12))
+    assert int(n) == 1
+    assert int(new_ws.track[1]) == 2
+    # MISSINGPERSON does NOT clear the identity column
+    assert (np.asarray(new_ls) == 11).all()
+
+
+def test_terminations():
+    ws = wlk.WalkState(
+        pos=jnp.zeros(3, jnp.int32),
+        active=jnp.array([True, True, True]),
+        track=jnp.arange(3, dtype=jnp.int32),
+    )
+    out = wlk.execute_terminations(ws, jnp.array([False, True, False]))
+    np.testing.assert_array_equal(np.asarray(out.active), [True, False, True])

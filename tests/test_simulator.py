@@ -1,0 +1,98 @@
+import jax
+import numpy as np
+import pytest
+
+from repro.core.failures import FailureConfig
+from repro.core.protocol import ProtocolConfig
+from repro.core.simulator import (
+    max_overshoot,
+    reaction_time,
+    run_ensemble,
+    run_simulation,
+    survived,
+)
+from repro.graphs import random_regular_graph
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return random_regular_graph(64, 6, seed=11)
+
+
+def test_reproducible(graph):
+    pcfg = ProtocolConfig(algorithm="decafork", z0=6, max_walks=24, eps=1.8,
+                          protocol_start=300, rt_bins=256)
+    fcfg = FailureConfig(burst_times=(600,), burst_sizes=(3,))
+    _, a = run_simulation(graph, pcfg, fcfg, steps=1000, key=5)
+    _, b = run_simulation(graph, pcfg, fcfg, steps=1000, key=5)
+    np.testing.assert_array_equal(np.asarray(a.z), np.asarray(b.z))
+
+
+def test_no_protocol_collapses(graph):
+    pcfg = ProtocolConfig(algorithm="none", z0=6, max_walks=24)
+    fcfg = FailureConfig(p_fail=0.01)
+    _, outs = run_simulation(graph, pcfg, fcfg, steps=2000, key=0)
+    z = np.asarray(outs.z)
+    assert z[-1] == 0  # catastrophic failure without self-regulation
+    assert not survived(z)
+
+
+def test_burst_kills_exact_count(graph):
+    pcfg = ProtocolConfig(algorithm="none", z0=8, max_walks=16)
+    fcfg = FailureConfig(burst_times=(100,), burst_sizes=(5,))
+    _, outs = run_simulation(graph, pcfg, fcfg, steps=200, key=1)
+    z = np.asarray(outs.z)
+    assert z[99] == 8 and z[100] == 3
+    assert int(np.asarray(outs.failures).sum()) == 5
+
+
+def test_decafork_recovers(graph):
+    pcfg = ProtocolConfig(algorithm="decafork", z0=6, max_walks=24, eps=1.2,
+                          protocol_start=400, rt_bins=256)
+    fcfg = FailureConfig(burst_times=(800,), burst_sizes=(3,))
+    _, outs = run_simulation(graph, pcfg, fcfg, steps=2500, key=3)
+    z = np.asarray(outs.z)
+    z_pre = int(z[799])
+    assert z_pre >= 6  # held (or exceeded) the target before the burst
+    assert int(z[800]) == z_pre - 3  # burst kills exactly 3
+    rt = reaction_time(z, 6, 800)
+    assert 0 <= rt < 1200
+    assert survived(z)
+    assert max_overshoot(z, 6) <= 10
+
+
+def test_walk_count_bounded_by_capacity(graph):
+    pcfg = ProtocolConfig(algorithm="missingperson", z0=6, max_walks=12,
+                          eps_mp=20.0, protocol_start=0)
+    fcfg = FailureConfig()
+    _, outs = run_simulation(graph, pcfg, fcfg, steps=500, key=4)
+    assert np.asarray(outs.z).max() <= 12
+
+
+def test_ensemble_shape_and_variation(graph):
+    pcfg = ProtocolConfig(algorithm="decafork", z0=6, max_walks=16, eps=1.8,
+                          protocol_start=300, rt_bins=256)
+    fcfg = FailureConfig(burst_times=(600,), burst_sizes=(3,))
+    outs = run_ensemble(graph, pcfg, fcfg, steps=900, seeds=4)
+    z = np.asarray(outs.z)
+    assert z.shape == (4, 900)
+    # different seeds -> different trajectories
+    assert not (z[0] == z[1]).all()
+
+
+def test_byzantine_gating(graph):
+    pcfg = ProtocolConfig(algorithm="none", z0=6, max_walks=8)
+    fcfg = FailureConfig(byzantine_node=0, p_byz=0.0, byz_start=True,
+                         byz_start_time=300)
+    _, outs = run_simulation(graph, pcfg, fcfg, steps=600, key=6)
+    z = np.asarray(outs.z)
+    assert (z[:299] == 6).all()  # honest before onset
+    assert z[-1] < 6  # kills once armed
+
+
+def test_metrics_helpers():
+    z = np.array([5, 5, 2, 3, 4, 5, 6])
+    assert reaction_time(z, 5, 2) == 3
+    assert reaction_time(np.array([5, 1, 1]), 5, 1) == -1
+    assert max_overshoot(z, 5) == 1
+    assert survived(z) and not survived(np.array([1, 0, 2]))

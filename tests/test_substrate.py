@@ -1,0 +1,121 @@
+"""Optimizers, RW-SGD replicas, data pipeline, checkpointing."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import make_markov_task, node_batches, sample_batch
+from repro.optim import adamw, cosine_schedule, fork_replica, init_replicas, sgd
+from repro.optim.rw_sgd import replica_train_step
+
+
+def _quadratic(params, batch):
+    loss = jnp.sum((params["w"] - 3.0) ** 2) + jnp.sum((params["b"] + 1.0) ** 2)
+    return loss, {}
+
+
+@pytest.mark.parametrize("opt", [sgd(0.1), sgd(0.05, momentum=0.9), adamw(0.3)])
+def test_optimizers_converge(opt):
+    params = {"w": jnp.zeros((4,)), "b": jnp.zeros((2,))}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = jax.grad(lambda p: _quadratic(p, None)[0])(params)
+        params, state = opt.update(grads, state, params)
+    np.testing.assert_allclose(np.asarray(params["w"]), 3.0, atol=3e-2)
+    np.testing.assert_allclose(np.asarray(params["b"]), -1.0, atol=3e-2)
+
+
+def test_cosine_schedule():
+    s = cosine_schedule(1.0, warmup=10, total=100)
+    assert float(s(jnp.int32(0))) == 0.0
+    np.testing.assert_allclose(float(s(jnp.int32(10))), 1.0, rtol=1e-5)
+    assert float(s(jnp.int32(100))) <= 0.11
+
+
+def test_adamw_bf16_params():
+    params = {"w": jnp.ones((4,), jnp.bfloat16)}
+    opt = adamw(0.01)
+    state = opt.init(params)
+    assert state.mu["w"].dtype == jnp.float32  # moments in f32
+    grads = {"w": jnp.ones((4,), jnp.bfloat16)}
+    new_params, _ = opt.update(grads, state, params)
+    assert new_params["w"].dtype == jnp.bfloat16
+    assert float(new_params["w"][0]) < 1.0
+
+
+def test_replica_fork_and_step():
+    init_fn = lambda key: {"w": jax.random.normal(key, (3,))}
+    opt = sgd(0.1)
+    rs = init_replicas(init_fn, opt.init, jax.random.key(0), max_walks=4)
+    assert rs.params["w"].shape == (4, 3)
+
+    def loss_fn(params, batch):
+        return jnp.sum((params["w"] - batch) ** 2), {}
+
+    step = replica_train_step(loss_fn, opt)
+    batches = jnp.stack([jnp.full((3,), float(i)) for i in range(4)])
+    active = jnp.array([True, True, False, False])
+    rs2, losses = step(rs, batches, active)
+    # active replicas moved toward their targets, inactive untouched
+    assert not np.allclose(rs2.params["w"][0], rs.params["w"][0])
+    np.testing.assert_array_equal(rs2.params["w"][2], rs.params["w"][2])
+    assert float(losses[2]) == 0.0
+    np.testing.assert_array_equal(np.asarray(rs2.steps), [1, 1, 0, 0])
+
+    # fork slot 0 -> slot 3 (DECAFORK duplicate semantics)
+    rs3 = fork_replica(rs2, jnp.int32(0), jnp.int32(3), jnp.asarray(True))
+    np.testing.assert_array_equal(rs3.params["w"][3], rs2.params["w"][0])
+    # no-op fork when do=False
+    rs4 = fork_replica(rs2, jnp.int32(0), jnp.int32(3), jnp.asarray(False))
+    np.testing.assert_array_equal(rs4.params["w"][3], rs2.params["w"][3])
+
+
+def test_markov_task_learnable_floor():
+    task = make_markov_task(64)
+    assert 0.0 < task.entropy < np.log(64)
+    b = sample_batch(task, jax.random.key(0), batch=8, seq=32)
+    assert b["tokens"].shape == (8, 32)
+    np.testing.assert_array_equal(
+        np.asarray(b["tokens"][:, 1:]), np.asarray(b["labels"][:, :-1])
+    )
+    # deterministic per (key, node)
+    b2 = sample_batch(task, jax.random.key(0), batch=8, seq=32)
+    np.testing.assert_array_equal(np.asarray(b["tokens"]), np.asarray(b2["tokens"]))
+    b3 = sample_batch(task, jax.random.key(0), batch=8, seq=32, node_id=5)
+    assert not (np.asarray(b["tokens"]) == np.asarray(b3["tokens"])).all()
+
+
+def test_node_batches_shapes():
+    task = make_markov_task(32)
+    nb = node_batches(task, jax.random.key(1), n_nodes=6, batch=2, seq=16)
+    assert nb["tokens"].shape == (6, 2, 16)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    from repro.checkpoint import load_pytree, save_pytree
+
+    tree = {
+        "a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        "nested": {"b": jnp.ones((4,), jnp.bfloat16)},
+    }
+    path = os.path.join(tmp_path, "ckpt.npz")
+    save_pytree(path, tree, metadata={"step": 7})
+    out = load_pytree(path, tree)
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.asarray(tree["a"]))
+    assert out["nested"]["b"].dtype == jnp.bfloat16
+    assert os.path.exists(path + ".meta.json")
+    # structure mismatch raises
+    with pytest.raises(KeyError):
+        load_pytree(path, {"missing": tree["a"]})
+
+
+def test_walk_snapshot(tmp_path):
+    from repro.checkpoint import save_walk_snapshot, load_pytree
+
+    stack = {"w": jnp.arange(12, dtype=jnp.float32).reshape(4, 3)}
+    p = os.path.join(tmp_path, "walk.npz")
+    save_walk_snapshot(p, stack, walk_slot=2, step=5)
+    out = load_pytree(p, {"w": jnp.zeros((3,))})
+    np.testing.assert_array_equal(np.asarray(out["w"]), [6.0, 7.0, 8.0])

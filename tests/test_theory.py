@@ -1,0 +1,127 @@
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.theory import (
+    PopulationHistory,
+    Rates,
+    fork_estimate_cdf,
+    fork_estimate_mean_closed,
+    fork_estimate_moments,
+    fork_probability_bound,
+    fork_rate_upper,
+    growth_bound_delta,
+    multi_fork_reaction_bound,
+    overshoot_recursion,
+    reaction_time_bound,
+    termination_probability_bound,
+    theta_mean,
+    theta_variance,
+    time_until_growth,
+)
+
+RATES = Rates(lambda_r=0.02, lambda_a=0.01)  # n=50-ish graph
+
+
+def test_lemma1_cdf_is_a_cdf():
+    t, tf, td = 100.0, 20.0, 60.0
+    xs = np.linspace(0, 1, 400)
+    F = fork_estimate_cdf(xs, t, tf, td, RATES)
+    assert (np.diff(F) >= -1e-9).all()
+    assert F[0] >= 0 and abs(F[-1] - 1) < 1e-9
+
+
+def test_corollary1_matches_numerical_integration():
+    for (t, tf, td) in [(100.0, 20.0, 60.0), (50.0, 10.0, 50.0), (200.0, 0.0, 120.0)]:
+        closed = fork_estimate_mean_closed(t, tf, td, RATES)
+        numeric, var = fork_estimate_moments(t, tf, td, RATES)
+        assert abs(closed - numeric) < 2e-3, (t, tf, td, closed, numeric)
+        assert var >= 0
+
+
+def test_theorem1_asymptotics():
+    """E[theta] -> K as t - T_last -> infinity (Thm. 1)."""
+    hist = PopulationHistory(
+        n_active=7,
+        terminations=((100.0, 3),),
+        forks=((120.0, 2),),
+    )
+    # long after the last event: K = 7 + 2 live walks tracked
+    m = theta_mean(5000.0, hist, RATES)
+    assert abs(2 * m - 2 * (7 + 2) / 2) < 0.05  # theta ~ K/2 => 2E = K
+    # right after a termination the dead walks still look half-alive
+    import dataclasses
+
+    m_soon = theta_mean(101.0, dataclasses.replace(hist, forks=()), RATES)
+    assert m_soon > 7 / 2 + 1.0
+
+
+def test_variance_components():
+    hist = PopulationHistory(n_active=5)
+    assert abs(theta_variance(1000.0, hist, RATES) - 4 / 12) < 1e-9
+    hist2 = PopulationHistory(n_active=5, terminations=((990.0, 2),))
+    assert theta_variance(1000.0, hist2, RATES) > 4 / 12
+
+
+def test_bennett_bounds_behave():
+    p = 0.1
+    hist = PopulationHistory(n_active=10)
+    # mean 5, far above eps=2 -> tiny forking probability
+    b_low = fork_probability_bound(1000.0, hist, RATES, eps=2.0, p=p)
+    b_close = fork_probability_bound(1000.0, hist, RATES, eps=4.4, p=p)
+    assert b_low < b_close <= p
+    assert b_low < 0.01  # Bennett with tau=3, sigma^2=0.75 -> ~4.8e-3
+    # termination mirror
+    t_low = termination_probability_bound(1000.0, hist, RATES, eps2=8.0, p=p)
+    t_close = termination_probability_bound(1000.0, hist, RATES, eps2=5.6, p=p)
+    assert t_low < t_close <= p
+
+
+def test_reaction_time_bound_monotonic():
+    common = dict(r_forked=0, k_remaining=5, t_d=0.0, p=0.2, rates=RATES, delta=0.1)
+    t_eps_small = reaction_time_bound(d_failed=5, eps=1.5, **common)
+    t_eps_large = reaction_time_bound(d_failed=5, eps=3.0, **common)
+    assert t_eps_large <= t_eps_small  # larger eps -> faster reaction
+    assert 0 < t_eps_large < 1e5
+    total = multi_fork_reaction_bound(5, 5, 3, 0.0, 3.0, 0.2, RATES, 0.1)
+    assert total >= t_eps_large
+
+
+def test_growth_bound_and_inversion():
+    args = dict(z0=10, n_nodes=100, eps=2.0, p=0.1, rates=Rates(0.02, 0.01))
+    d_short = growth_bound_delta(z_max=20, horizon=10.0, **args)
+    d_long = growth_bound_delta(z_max=20, horizon=1e5, **args)
+    assert 0 <= d_short <= d_long <= 1.0
+    t = time_until_growth(z_max=20, delta=0.5, **args)
+    assert t > 0
+    # consistency: bound at that horizon stays near delta
+    assert growth_bound_delta(z_max=20, horizon=t, **args) <= 0.55
+
+
+def test_fork_rate_upper_decreases_eventually():
+    rates = [fork_rate_upper(nu, eps=2.0, p=0.1) for nu in range(10, 30)]
+    assert rates[-1] < rates[0]
+    assert all(r >= 0 for r in rates)
+
+
+def test_overshoot_recursion_bounded_growth():
+    """Cor. 3 is explicitly non-convergent (the paper notes the ceiling
+    forces >= +1 per step in the long run); the useful content is the
+    EARLY-horizon overshoot bound after a failure."""
+    ceiled = overshoot_recursion(
+        z_after_failure=5, d_failed=5, t_d=0.0, steps=60,
+        eps=2.0, p=0.1, rates=RATES,
+    )
+    assert (np.diff(ceiled) >= -1e-9).all()  # non-decreasing (submartingale)
+    # paper's own caveat: the ceiling forces ~ +1/step
+    assert ceiled[-1] <= 5 + 60 + 5 * (1 + 0.1) ** 60
+    smooth = overshoot_recursion(
+        z_after_failure=5, d_failed=5, t_d=0.0, steps=60,
+        eps=2.0, p=0.1, rates=RATES, use_ceiling=False,
+    )
+    assert (np.diff(smooth) >= -1e-9).all()
+    # informative bound: sub-compounding growth (fork feedback raises the
+    # estimator mean, damping the Bennett-bounded fork rate)
+    assert smooth[-1] < 5 * (1 + 0.1) ** 60 / 10
+    assert np.diff(smooth)[-1] < 0.35  # decelerating, not exploding
