@@ -1,0 +1,130 @@
+"""BENCH: batched scenario sweep vs the per-scenario baseline.
+
+Workload: a fig5-style epsilon grid (8 scenarios x 4 seeds reduced;
+16 x 8 with BENCH_FULL=1) on the canonical figure configuration.
+
+Three engines over the identical workload:
+  - ``sweep``     : ONE jit-compiled call for the whole grid
+                    (``repro.sweep`` — this PR's engine);
+  - ``loop_seed`` : the seed repo's engine — configs were jit-static, so
+                    every scenario meant a fresh trace + XLA compile + its
+                    own device dispatch (reproduced with a fresh jit
+                    wrapper per scenario);
+  - ``loop_warm`` : post-refactor per-scenario loop — traced config
+                    leaves share one program, but still one dispatch per
+                    scenario (isolates compile amortization from batching).
+
+Emits BENCH json (us per scenario-step-seed + end-to-end speedups) via
+``save_result``. The acceptance bar is sweep >= 2x over loop_seed
+end-to-end; loop_warm shows how much of that batching alone buys.
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import (
+    FULL, burst_failures, default_graph, pcfg_for, save_result,
+)
+from repro.core import run_ensemble
+from repro.core import simulator as sim
+from repro.core.simulator import run_sweep
+
+STEPS = 2000 if FULL else 600
+SEEDS = 8 if FULL else 4
+N_EPS = 16 if FULL else 8
+
+
+def _scenarios():
+    fcfg = burst_failures(burst_times=(STEPS // 3, 2 * STEPS // 3))
+    grid = np.linspace(1.7, 2.6, N_EPS)
+    return [
+        (pcfg_for("decafork", eps=float(e), protocol_start=STEPS // 4), fcfg)
+        for e in grid
+    ]
+
+
+def bench_sweep(graph, scenarios):
+    t0 = time.time()
+    out = run_sweep(graph, scenarios, steps=STEPS, seeds=SEEDS, base_key=0)
+    z = np.asarray(out.z)
+    return time.time() - t0, z
+
+
+def bench_loop_seed_style(graph, scenarios):
+    """The pre-sweep engine: one trace+compile+dispatch per scenario.
+
+    A fresh jit wrapper per scenario reproduces the seed behavior, where
+    configs were static jit arguments and every eps value was its own
+    compilation unit.
+    """
+    neighbors, degrees, pi = sim._graph_arrays(graph, scenarios[0][0])
+    keys = jax.random.split(jax.random.key(0), SEEDS)
+    t0 = time.time()
+    zs = []
+    for pcfg, fcfg in scenarios:
+        fn = jax.jit(
+            functools.partial(sim._run_ensemble_core, steps=STEPS, n=graph.n)
+        )
+        out = fn(keys, neighbors, degrees, pi, pcfg, fcfg)
+        zs.append(np.asarray(out.z))
+    return time.time() - t0, np.stack(zs)
+
+
+def bench_loop_warm(graph, scenarios):
+    """Per-scenario loop on the refactored engine (shared program)."""
+    t0 = time.time()
+    zs = [
+        np.asarray(
+            run_ensemble(graph, pcfg, fcfg, steps=STEPS, seeds=SEEDS, base_key=0).z
+        )
+        for pcfg, fcfg in scenarios
+    ]
+    return time.time() - t0, np.stack(zs)
+
+
+def run(verbose: bool = True):
+    graph = default_graph()
+    scenarios = _scenarios()
+    denom = len(scenarios) * STEPS * SEEDS
+
+    t_sweep, z_sweep = bench_sweep(graph, scenarios)
+    t_seed, z_seed = bench_loop_seed_style(graph, scenarios)
+    t_warm, z_warm = bench_loop_warm(graph, scenarios)
+
+    # all three engines must agree bitwise (same keys, same program math)
+    assert (z_sweep == z_seed).all() and (z_sweep == z_warm).all()
+
+    rows = [
+        {"name": "bench_sweep/sweep", "wall_s": t_sweep,
+         "us_per_call": t_sweep * 1e6 / denom},
+        {"name": "bench_sweep/loop_seed_style", "wall_s": t_seed,
+         "us_per_call": t_seed * 1e6 / denom},
+        {"name": "bench_sweep/loop_warm", "wall_s": t_warm,
+         "us_per_call": t_warm * 1e6 / denom},
+    ]
+    extra = {
+        "scenarios": len(scenarios),
+        "steps": STEPS,
+        "seeds": SEEDS,
+        "speedup_vs_seed_loop": t_seed / t_sweep,
+        "speedup_vs_warm_loop": t_warm / t_sweep,
+    }
+    save_result("bench_sweep", rows, extra)
+    if verbose:
+        for r in rows:
+            print(f"{r['name']},{r['us_per_call']:.2f},wall={r['wall_s']:.2f}s")
+        print(
+            f"BENCH bench_sweep speedup_vs_seed_loop="
+            f"{extra['speedup_vs_seed_loop']:.2f}x "
+            f"speedup_vs_warm_loop={extra['speedup_vs_warm_loop']:.2f}x "
+            f"({len(scenarios)} scenarios x {SEEDS} seeds x {STEPS} steps)"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    run()

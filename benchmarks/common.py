@@ -1,9 +1,13 @@
 """Shared benchmark machinery for the paper-figure reproductions.
 
-Every figure benchmark runs a seed-ensemble simulation (vmapped, jitted),
-reports wall time per simulated step per seed, and derives the paper's
-qualitative metrics: stability (mean |Z_t - Z_0|), reaction time to each
-burst, max overshoot, and survival rate.
+Every figure is a *scenario sweep*: its curves are (protocol, failure)
+regimes run over a seed ensemble. ``run_sweep_cases`` hands the whole
+curve set to the batched sweep engine (``repro.sweep``) — one compiled
+XLA program and one device dispatch per static-structure group instead of
+one per curve — and reports wall time per simulated (scenario x step x
+seed) plus the paper's qualitative metrics: stability (mean |Z_t - Z_0|),
+reaction time to each burst, max overshoot, and survival rate.
+``run_case`` remains for genuinely unbatchable cases (per-graph sweeps).
 
 Reduced mode (default, CI-friendly): 4500 steps, 8 seeds, bursts at
 1500/3000. Paper mode (BENCH_FULL=1): 9000 steps, 50 seeds, bursts at
@@ -20,6 +24,7 @@ import numpy as np
 
 from repro.core import FailureConfig, ProtocolConfig, run_ensemble
 from repro.graphs import make_graph
+from repro.sweep import Scenario, run_scenarios
 
 FULL = os.environ.get("BENCH_FULL", "0") == "1"
 
@@ -118,6 +123,43 @@ def run_case(
         forks=int(np.asarray(outs.forks).sum()),
         terms=int(np.asarray(outs.terms).sum()),
     )
+
+
+def run_sweep_cases(
+    graph,
+    scenarios: list,
+    steps: int = None,
+    seeds: int = None,
+) -> list:
+    """Run a figure's whole curve set through the batched sweep engine.
+
+    One compiled call per static-structure group (same algorithm /
+    estimator / capacity); ``us_per_call`` is the amortized wall time per
+    (scenario x step x seed) over the entire sweep — directly comparable
+    to the per-curve ``run_case`` number it replaces.
+    """
+    steps = steps or STEPS
+    seeds = seeds or SEEDS
+    t0 = time.time()
+    res = run_scenarios(graph, scenarios, steps=steps, seeds=seeds)
+    zs = [np.asarray(o.z) for o in res.outputs]  # blocks until done
+    wall = time.time() - t0
+    us = wall * 1e6 / (steps * seeds * len(scenarios))
+    return [
+        EnsembleResult(
+            name=name,
+            z=z,
+            us_per_call=us,
+            forks=int(np.asarray(o.forks).sum()),
+            terms=int(np.asarray(o.terms).sum()),
+        )
+        for name, z, o in zip(res.names, zs, res.outputs)
+    ]
+
+
+def scenario(name: str, alg: str, fcfg: FailureConfig, **overrides) -> Scenario:
+    """Figure-curve shorthand: named scenario from the canonical configs."""
+    return Scenario(name, pcfg_for(alg, **overrides), fcfg)
 
 
 def default_graph(n: int = 100, seed: int = 0):

@@ -2,18 +2,25 @@
 
 Paper claims reproduced: MISSINGPERSON over-reacts (overshoot well past
 Z_0); DECAFORK reacts and stabilizes around Z_0; DECAFORK+ reacts
-significantly faster (terminations allow a more aggressive eps)."""
+significantly faster (terminations allow a more aggressive eps).
+
+All three curves go through the batched sweep engine in one call
+(per-algorithm static groups compile separately; everything else batches).
+"""
 from benchmarks.common import (
-    burst_failures, default_graph, pcfg_for, run_case, save_result,
+    burst_failures, default_graph, run_sweep_cases, save_result, scenario,
 )
 
 
 def run(verbose: bool = True):
     g = default_graph()
     fcfg = burst_failures()
+    scenarios = [
+        scenario(f"fig1/{alg}", alg, fcfg)
+        for alg in ("missingperson", "decafork", "decafork+")
+    ]
     rows = []
-    for alg in ("missingperson", "decafork", "decafork+"):
-        res = run_case(f"fig1/{alg}", g, pcfg_for(alg), fcfg)
+    for res in run_sweep_cases(g, scenarios):
         rows.append({"name": res.name, "us_per_call": res.us_per_call,
                      **res.metrics(), "forks": res.forks, "terms": res.terms})
         if verbose:

@@ -1,23 +1,31 @@
 """Fig. 2: continuous probabilistic failures p_f on top of bursts.
 
 Paper claims: DECAFORK recovers from bursts but cannot hold Z_0 under
-continuous failures; DECAFORK+ stays stable across p_f values."""
+continuous failures; DECAFORK+ stays stable across p_f values.
+
+The p_f grid is a traced scenario axis: both p_f values of an algorithm
+share one compiled program and run in one batched call.
+"""
 from benchmarks.common import (
-    PROTO_START, burst_failures, default_graph, pcfg_for, run_case, save_result,
+    PROTO_START, burst_failures, default_graph, run_sweep_cases, save_result,
+    scenario,
 )
 
 
 def run(verbose: bool = True):
     g = default_graph()
+    scenarios = [
+        scenario(f"fig2/{alg}/pf={pf}", alg,
+                 burst_failures(p_fail=pf, p_fail_start=PROTO_START))
+        for pf in (0.001, 0.0002)
+        for alg in ("decafork", "decafork+")
+    ]
     rows = []
-    for pf in (0.001, 0.0002):
-        fcfg = burst_failures(p_fail=pf, p_fail_start=PROTO_START)
-        for alg in ("decafork", "decafork+"):
-            res = run_case(f"fig2/{alg}/pf={pf}", g, pcfg_for(alg), fcfg)
-            rows.append({"name": res.name, "us_per_call": res.us_per_call,
-                         **res.metrics()})
-            if verbose:
-                print(res.csv_row())
+    for res in run_sweep_cases(g, scenarios):
+        rows.append({"name": res.name, "us_per_call": res.us_per_call,
+                     **res.metrics()})
+        if verbose:
+            print(res.csv_row())
     save_result("fig2_probabilistic", rows)
     return rows
 

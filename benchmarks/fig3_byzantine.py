@@ -2,9 +2,13 @@
 
 Paper claims: DECAFORK with the burst-tuned eps fails; only DECAFORK+
 copes with both the Byz phase and the sudden No-Byz phase (no runaway
-overshoot when the node turns honest)."""
+overshoot when the node turns honest).
+
+The two DECAFORK eps variants are one batched group (eps is a traced
+scenario leaf); DECAFORK+ compiles separately.
+"""
 from benchmarks.common import (
-    PROTO_START, default_graph, pcfg_for, run_case, save_result,
+    PROTO_START, default_graph, run_sweep_cases, save_result, scenario,
 )
 from repro.core import FailureConfig
 
@@ -14,11 +18,13 @@ def run(verbose: bool = True):
     fcfg = FailureConfig(
         byzantine_node=0, p_byz=0.001, byz_start_time=PROTO_START + 1000,
     )
+    scenarios = [
+        scenario("fig3/decafork", "decafork", fcfg),
+        scenario("fig3/decafork/eps=2.5", "decafork", fcfg, eps=2.5),
+        scenario("fig3/decafork+", "decafork+", fcfg),
+    ]
     rows = []
-    for alg, kw in (("decafork", {}), ("decafork", dict(eps=2.5)),
-                    ("decafork+", {})):
-        label = f"fig3/{alg}" + (f"/eps={kw['eps']}" if kw else "")
-        res = run_case(label, g, pcfg_for(alg, **kw), fcfg)
+    for res in run_sweep_cases(g, scenarios):
         rows.append({"name": res.name, "us_per_call": res.us_per_call,
                      **res.metrics()})
         if verbose:

@@ -1,9 +1,14 @@
 """Fig. 4: consistency across graph sizes n in {50, 100, 200}.
 
 Paper claim: DECAFORK recovers on all sizes; smaller graphs react faster
-(return-time support is tighter)."""
+(return-time support is tighter).
+
+Graph size changes array shapes, so each n is its own sweep call; the
+per-n eps tuning rides the traced scenario axis (a future multi-eps grid
+per n would batch for free).
+"""
 from benchmarks.common import (
-    burst_failures, pcfg_for, run_case, save_result,
+    burst_failures, run_sweep_cases, save_result, scenario,
 )
 from repro.graphs import make_graph
 
@@ -15,13 +20,13 @@ def run(verbose: bool = True):
     rows = []
     for n, eps in EPS_BY_N.items():
         g = make_graph("regular", n, seed=0, degree=8)
-        res = run_case(
-            f"fig4/n={n}", g, pcfg_for("decafork", eps=eps), burst_failures()
-        )
-        rows.append({"name": res.name, "us_per_call": res.us_per_call,
-                     **res.metrics()})
-        if verbose:
-            print(res.csv_row())
+        for res in run_sweep_cases(
+            g, [scenario(f"fig4/n={n}", "decafork", burst_failures(), eps=eps)]
+        ):
+            rows.append({"name": res.name, "us_per_call": res.us_per_call,
+                         **res.metrics()})
+            if verbose:
+                print(res.csv_row())
     save_result("fig4_nodes", rows)
     return rows
 

@@ -1,19 +1,28 @@
 """Fig. 5: the eps trade-off — reaction time vs undesired forks.
 
 Paper claim: larger eps -> faster reaction but more walks beyond Z_0;
-smaller eps risks failure after the second burst."""
+smaller eps risks failure after the second burst.
+
+The canonical sweep-engine showcase: the whole eps grid is one scenario
+batch — ONE compiled program, one device dispatch for every curve
+(``benchmarks/bench_sweep.py`` measures the speedup on this exact shape).
+"""
 from benchmarks.common import (
-    burst_failures, default_graph, pcfg_for, run_case, save_result,
+    burst_failures, default_graph, run_sweep_cases, save_result, scenario,
 )
+
+EPS_GRID = (1.8, 2.0, 2.25, 2.5)
 
 
 def run(verbose: bool = True):
     g = default_graph()
+    fcfg = burst_failures()
+    scenarios = [
+        scenario(f"fig5/eps={eps}", "decafork", fcfg, eps=eps)
+        for eps in EPS_GRID
+    ]
     rows = []
-    for eps in (1.8, 2.0, 2.25, 2.5):
-        res = run_case(
-            f"fig5/eps={eps}", g, pcfg_for("decafork", eps=eps), burst_failures()
-        )
+    for res in run_sweep_cases(g, scenarios):
         rows.append({"name": res.name, "us_per_call": res.us_per_call,
                      **res.metrics()})
         if verbose:

@@ -13,6 +13,7 @@ import time
 
 from benchmarks import (
     auto_eps,
+    bench_sweep,
     fig1_burst,
     fig2_probabilistic,
     fig3_byzantine,
@@ -33,6 +34,7 @@ BENCHES = {
     "theory": theory_bounds.run,
     "kernel_theta": kernel_theta.run,
     "auto_eps": auto_eps.run,
+    "sweep": bench_sweep.run,
 }
 
 

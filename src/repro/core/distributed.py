@@ -29,11 +29,11 @@ from typing import NamedTuple, Sequence
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
 
 from repro.core import estimator as est
 from repro.core import protocol as prt
 from repro.core.walkers import WalkState
+from repro.utils.compat import shard_map
 from repro.utils.prng import fold_in_time
 
 

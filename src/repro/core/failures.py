@@ -6,6 +6,15 @@ The protocol makes no assumption about failures; these models exist to
   2) probabilistic: each walk independently dies w.p. p_f per step (Fig. 2);
   3) Byzantine: one node follows a 2-state Markov chain and, while in the
      Byz state, deterministically terminates every incoming walk (Fig. 3).
+
+``FailureConfig`` is a registered jax pytree whose fields are all *traced
+numeric leaves*: rates, times and node ids are jax-traceable values, so
+many failure regimes batch under ``jax.vmap`` and share one compiled
+program (the sweep engine, ``repro.sweep``). Only the number of scheduled
+bursts is shape-determining — configs with different burst counts have
+different pytree structures (pad with ``pad_bursts`` to co-batch them).
+Every model below is branch-free on traced values: a disabled mechanism
+(rate 0, node -1, no bursts) is a numeric no-op on the same program.
 """
 from __future__ import annotations
 
@@ -14,29 +23,96 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
-@dataclasses.dataclass(frozen=True)
+def _static_len(x) -> int:
+    """Length of a bursts field (tuple or (K,) array/tracer), shape-static."""
+    return 0 if x is None else len(x)
+
+
+def _canonical_leaf(v):
+    """Hashable stand-in for a config leaf (concrete arrays -> tuples)."""
+    if isinstance(v, (jax.Array, np.ndarray)):
+        return tuple(np.asarray(v).reshape(-1).tolist())
+    return v
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
 class FailureConfig:
-    burst_times: Tuple[int, ...] = ()
-    burst_sizes: Tuple[int, ...] = ()
-    p_fail: float = 0.0
-    p_fail_start: int = 0  # probabilistic failures begin at this step
-    byzantine_node: int = -1  # -1 disables
-    p_byz: float = 0.0  # state-flip probability per step
-    byz_start: bool = True  # start in the Byz (terminating) state
-    byz_start_time: int = 0  # node behaves honestly before this step
+    """All-leaf failure parameters (see module docstring).
+
+    ``burst_times``/``burst_sizes`` accept tuples (converted to (K,) int32
+    arrays) or arrays; a burst time of -1 never fires, which is how padded
+    scenario stacks encode "fewer bursts than the widest scenario".
+    """
+
+    burst_times: Tuple[int, ...] | jax.Array = ()
+    burst_sizes: Tuple[int, ...] | jax.Array = ()
+    p_fail: float | jax.Array = 0.0
+    p_fail_start: int | jax.Array = 0  # probabilistic failures begin here
+    byzantine_node: int | jax.Array = -1  # -1 disables
+    p_byz: float | jax.Array = 0.0  # state-flip probability per step
+    byz_start: bool | jax.Array = True  # start in the Byz state
+    byz_start_time: int | jax.Array = 0  # node honest before this step
 
     def __post_init__(self):
-        if len(self.burst_times) != len(self.burst_sizes):
+        if _static_len(self.burst_times) != _static_len(self.burst_sizes):
             raise ValueError("burst_times and burst_sizes must align")
+        for f in ("burst_times", "burst_sizes"):
+            v = getattr(self, f)
+            if isinstance(v, (tuple, list)):
+                object.__setattr__(
+                    self, f, jnp.asarray(v, jnp.int32).reshape((len(v),))
+                )
+
+    @property
+    def n_bursts(self) -> int:
+        """Static burst-slot count (the only shape-bearing field)."""
+        return _static_len(self.burst_times)
+
+    # value-based eq/hash: the generated dataclass versions would raise on
+    # the (K,) burst arrays; concrete configs stay usable in sets/dicts
+    # (traced configs raise, as any tracer-hash must)
+    def _canonical(self) -> tuple:
+        return tuple(_canonical_leaf(getattr(self, f)) for f in _FAILURE_LEAVES)
+
+    def __eq__(self, other):
+        if not isinstance(other, FailureConfig):
+            return NotImplemented
+        return self._canonical() == other._canonical()
+
+    def __hash__(self):
+        return hash(self._canonical())
+
+
+_FAILURE_LEAVES = tuple(f.name for f in dataclasses.fields(FailureConfig))
+
+
+def _failure_flatten(cfg: FailureConfig):
+    return tuple(getattr(cfg, f) for f in _FAILURE_LEAVES), None
+
+
+def _failure_unflatten(_aux, children) -> FailureConfig:
+    # bypass __init__/__post_init__: jax may unflatten with placeholder
+    # leaves (tracers, avals, bare object()), which must round-trip as-is
+    cfg = object.__new__(FailureConfig)
+    for f, v in zip(_FAILURE_LEAVES, children):
+        object.__setattr__(cfg, f, v)
+    return cfg
+
+
+jax.tree_util.register_pytree_node(
+    FailureConfig, _failure_flatten, _failure_unflatten
+)
 
 
 def apply_probabilistic_failures(
     active: jax.Array, t: jax.Array, cfg: FailureConfig, key: jax.Array
 ) -> jax.Array:
-    if cfg.p_fail <= 0.0:
-        return active
+    # always draws (p_fail = 0 kills nobody) so the program is rate-agnostic;
+    # the draw consumes a dedicated key, so trajectories with p_fail = 0
+    # are bitwise those of a config without probabilistic failures.
     die = (jax.random.uniform(key, active.shape) < cfg.p_fail) & (
         t >= cfg.p_fail_start
     )
@@ -47,7 +123,9 @@ def apply_burst_failures(
     active: jax.Array, t: jax.Array, cfg: FailureConfig, key: jax.Array
 ) -> jax.Array:
     """Kill `size` uniformly random active walks at each scheduled time."""
-    for i, (bt, bs) in enumerate(zip(cfg.burst_times, cfg.burst_sizes)):
+    for i in range(cfg.n_bursts):
+        bt = cfg.burst_times[i]
+        bs = cfg.burst_sizes[i]
         k = jax.random.fold_in(key, i)
         score = jax.random.uniform(k, active.shape)
         score = jnp.where(active, score, jnp.inf)
@@ -70,12 +148,36 @@ def step_byzantine(
 
     The node behaves honestly before ``byz_start_time`` — the paper's
     standing assumption that walks circulate failure-free long enough to
-    build return-time statistics before the first failure event.
+    build return-time statistics before the first failure event. A
+    ``byzantine_node`` of -1 disarms the chain entirely (no node index
+    matches, no flips) without changing the compiled program.
     """
-    if cfg.byzantine_node < 0:
-        return active, byz_state
-    armed = t >= cfg.byz_start_time
+    armed = (t >= cfg.byz_start_time) & (cfg.byzantine_node >= 0)
     flip = (jax.random.uniform(key, ()) < cfg.p_byz) & armed
     byz_state = jnp.logical_xor(byz_state, flip)
     kill = active & byz_state & armed & (pos == cfg.byzantine_node)
     return active & ~kill, byz_state
+
+
+def pad_bursts(cfgs):
+    """Pad a list of FailureConfigs to a common burst count.
+
+    Padding entries use time -1 / size 0, which never fire; the returned
+    configs share one pytree structure and therefore stack into a single
+    scenario batch.
+    """
+    k_max = max((c.n_bursts for c in cfgs), default=0)
+
+    def _pad(c: FailureConfig) -> FailureConfig:
+        k = c.n_bursts
+        if k == k_max:
+            return c
+        pad_t = jnp.full((k_max - k,), -1, jnp.int32)
+        pad_s = jnp.zeros((k_max - k,), jnp.int32)
+        return dataclasses.replace(
+            c,
+            burst_times=jnp.concatenate([jnp.asarray(c.burst_times, jnp.int32), pad_t]),
+            burst_sizes=jnp.concatenate([jnp.asarray(c.burst_sizes, jnp.int32), pad_s]),
+        )
+
+    return [_pad(c) for c in cfgs]

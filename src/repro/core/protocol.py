@@ -5,32 +5,70 @@ boolean event masks; the simulator executes the resulting forks and
 terminations via the slot machinery in ``walkers.py``. Rules fire only for
 "chosen" walks — per paper footnote 6, a node visited by several walks
 runs the procedure for exactly one of them (we pick the lowest slot index).
+
+``ProtocolConfig`` is a registered jax pytree split into
+  - *traced data leaves* — the numeric knobs (``z0``, ``eps``, ``eps2``,
+    ``eps_mp``, ``fork_prob``, ``protocol_start``, quantiles): jax values
+    that vmap/batch across scenarios without recompiling;
+  - *static aux fields* — everything that determines program shape or
+    branching (``algorithm``, ``max_walks``, ``rt_bins``,
+    ``estimator_impl``, ``auto_eps``, ``analytic_survival``,
+    ``theta_bin_width``): two configs differing here have different pytree
+    structures and therefore different compiled programs.
+
+This split is what lets the sweep engine (``repro.sweep``) run a whole
+epsilon grid / failure-regime stack as ONE jit-compiled call.
 """
 from __future__ import annotations
 
 import dataclasses
+import numbers
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.estimator import NEVER
+from repro.core.failures import _canonical_leaf
 
 ALGORITHMS = ("none", "missingperson", "decafork", "decafork+")
 
+# numeric, jax-traceable knobs (pytree data leaves, batchable under vmap)
+_PROTOCOL_DATA = (
+    "z0",
+    "eps",
+    "eps2",
+    "eps_mp",
+    "fork_prob",
+    "protocol_start",
+    "eps_quantile",
+    "eps2_quantile",
+    "auto_min_samples",
+)
+# shape/branch-determining fields (pytree aux data, static under jit)
+_PROTOCOL_META = (
+    "algorithm",
+    "max_walks",
+    "rt_bins",
+    "analytic_survival",
+    "estimator_impl",
+    "auto_eps",
+    "theta_bin_width",
+)
 
-@dataclasses.dataclass(frozen=True)
+
+@dataclasses.dataclass(frozen=True, eq=False)
 class ProtocolConfig:
-    """Static protocol parameters (hashable -> usable as a jit static arg)."""
+    """Protocol parameters; see module docstring for the static/traced split."""
 
     algorithm: str = "decafork"
-    z0: int = 10  # target number of walks Z_0
-    max_walks: int = 40  # walk slot capacity W (>= z0)
-    eps: float = 2.0  # forking threshold (theta_hat < eps)
-    eps2: float = 5.75  # termination threshold (theta_hat > eps2), DECAFORK+
-    eps_mp: float = 300.0  # MISSINGPERSON timeout
-    fork_prob: float | None = None  # p; defaults to 1/z0
-    rt_bins: int = 1024  # return-time histogram resolution
-    protocol_start: int = 0  # no fork/terminate decisions before this step
+    z0: int | jax.Array = 10  # target number of walks Z_0
+    max_walks: int = 40  # walk slot capacity W (>= z0), static
+    eps: float | jax.Array = 2.0  # forking threshold (theta_hat < eps)
+    eps2: float | jax.Array = 5.75  # termination threshold, DECAFORK+
+    eps_mp: float | jax.Array = 300.0  # MISSINGPERSON timeout
+    fork_prob: float | jax.Array | None = None  # p; defaults to 1/z0
+    rt_bins: int = 1024  # return-time histogram resolution, static
+    protocol_start: int | jax.Array = 0  # no decisions before this step
     analytic_survival: bool = False  # footnote 5: geometric survival from pi
     estimator_impl: str = "gather"  # 'gather' | 'compare' | 'pallas'
     # ---- beyond-paper: self-calibrating thresholds ----------------------
@@ -41,20 +79,65 @@ class ProtocolConfig:
     # fork/terminate thresholds as LOCAL quantiles of that distribution —
     # decentralized (Rule 1), bias-inclusive, and graph-agnostic.
     auto_eps: bool = False
-    eps_quantile: float = 0.05  # fork below this warmup quantile
-    eps2_quantile: float = 0.995  # terminate above this warmup quantile
-    theta_bin_width: float = 0.25
-    auto_min_samples: int = 50  # fall back to eps/eps2 below this count
+    eps_quantile: float | jax.Array = 0.05  # fork below this warmup quantile
+    eps2_quantile: float | jax.Array = 0.995  # terminate above this quantile
+    theta_bin_width: float = 0.25  # histogram bin width, static (shapes)
+    auto_min_samples: int | jax.Array = 50  # below: fall back to eps/eps2
 
     def __post_init__(self):
         if self.algorithm not in ALGORITHMS:
             raise ValueError(f"unknown algorithm {self.algorithm!r}")
-        if self.max_walks < self.z0:
+        # traced z0 values defer this check to the caller (sweep stacks
+        # validate statically before batching)
+        if isinstance(self.z0, numbers.Integral) and self.max_walks < self.z0:
             raise ValueError("max_walks must be >= z0")
 
     @property
-    def p(self) -> float:
+    def p(self):
         return self.fork_prob if self.fork_prob is not None else 1.0 / self.z0
+
+    @property
+    def static_fields(self) -> tuple:
+        """The hashable program-shape signature of this config."""
+        return tuple(getattr(self, f) for f in _PROTOCOL_META)
+
+    # value-based eq/hash over all fields (concrete array leaves fold to
+    # tuples; traced configs raise, as any tracer-hash must)
+    def _canonical(self) -> tuple:
+        return tuple(
+            _canonical_leaf(getattr(self, f))
+            for f in _PROTOCOL_DATA + _PROTOCOL_META
+        )
+
+    def __eq__(self, other):
+        if not isinstance(other, ProtocolConfig):
+            return NotImplemented
+        return self._canonical() == other._canonical()
+
+    def __hash__(self):
+        return hash(self._canonical())
+
+
+def _protocol_flatten(cfg: ProtocolConfig):
+    data = tuple(getattr(cfg, f) for f in _PROTOCOL_DATA)
+    aux = tuple(getattr(cfg, f) for f in _PROTOCOL_META)
+    return data, aux
+
+
+def _protocol_unflatten(aux, children) -> ProtocolConfig:
+    # bypass __init__/__post_init__: jax may unflatten with placeholder
+    # leaves (tracers, avals, bare object()), which must round-trip as-is
+    cfg = object.__new__(ProtocolConfig)
+    for f, v in zip(_PROTOCOL_DATA, children):
+        object.__setattr__(cfg, f, v)
+    for f, v in zip(_PROTOCOL_META, aux):
+        object.__setattr__(cfg, f, v)
+    return cfg
+
+
+jax.tree_util.register_pytree_node(
+    ProtocolConfig, _protocol_flatten, _protocol_unflatten
+)
 
 
 def choose_walks(pos: jax.Array, active: jax.Array, n_nodes: int) -> jax.Array:
@@ -107,7 +190,6 @@ def theta_quantile_thresholds(
     cdf = jnp.cumsum(rows, axis=1) / jnp.maximum(total, 1.0)
     TB = rows.shape[1]
     centers = (jnp.arange(TB, dtype=jnp.float32) + 0.5) * cfg.theta_bin_width
-    big = jnp.float32(1e9)
 
     def quantile(q):
         ok = cdf >= q
@@ -119,7 +201,6 @@ def theta_quantile_thresholds(
     have = total[:, 0] >= cfg.auto_min_samples
     eps = jnp.where(have, eps_local, cfg.eps)
     eps2 = jnp.where(have, eps2_local, cfg.eps2)
-    del big
     return eps, eps2
 
 
@@ -133,17 +214,22 @@ def missingperson_decisions(
     cfg: ProtocolConfig,
     enabled: jax.Array,
 ) -> jax.Array:
-    """MISSINGPERSON: (W, Z0) mask of replacement-fork events.
+    """MISSINGPERSON: (W, C) mask of replacement-fork events.
 
     Event (k, l) means: the node visited by walk k deems initial id l
     missing (unseen for > eps_mp) and forks a duplicate of k carrying
-    identifier l "in replacement of RW l".
+    identifier l "in replacement of RW l". Columns are the full track
+    space C (= W); only the initial-id columns l < z0 can fire, expressed
+    as a mask so that ``z0`` stays a traced (batchable) value.
     """
     W = pos.shape[0]
-    z0 = cfg.z0
-    ls = last_seen[pos, :z0]  # (W, z0)
+    C = last_seen.shape[1]
+    ls = last_seen[pos]  # (W, C)
     stale = (t - ls) > cfg.eps_mp
-    ids = jnp.arange(z0)[None, :]
+    ids = jnp.arange(C, dtype=jnp.int32)[None, :]
+    is_initial = ids < cfg.z0
     not_self = ids != track[:, None]
-    u = jax.random.uniform(key, (W, z0))
-    return chosen[:, None] & stale & not_self & (u < cfg.p) & enabled
+    u = jax.random.uniform(key, (W, C))
+    return (
+        chosen[:, None] & stale & is_initial & not_self & (u < cfg.p) & enabled
+    )

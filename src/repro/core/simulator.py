@@ -10,13 +10,24 @@ One synchronous round (time t -> t+1):
      MISSINGPERSON timeout replacement;
   5. forks/terminations execute through the slot machinery.
 
-The whole trajectory runs under one ``lax.scan``; vmap over PRNG keys gives
-the 50-seed ensembles of the paper's figures in a single compiled call.
+The whole trajectory runs under one ``lax.scan``. Configs are pytrees
+with *traced numeric leaves* (see ``protocol.py`` / ``failures.py``), so
+the batching hierarchy is:
+
+  ``run_simulation``  one (config, seed) trajectory;
+  ``run_ensemble``    vmap over seeds — the paper's 50-seed figures;
+  ``run_sweep``       vmap over (scenario, seed): MANY failure/epsilon
+                      regimes x seeds in ONE compiled call, provided the
+                      scenarios share static structure (same algorithm,
+                      estimator_impl, max_walks, rt_bins, burst count).
+
+``repro.sweep`` layers scenario stacking/grouping/padding and multi-device
+sharding on top of ``run_sweep``; benchmarks build on that layer.
 """
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+from typing import NamedTuple, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -174,15 +185,15 @@ def protocol_step(
     elif pcfg.algorithm == "missingperson":
         ev = prt.missingperson_decisions(
             last_seen, ws.pos, ws.track, chosen, t, k_dec, pcfg, enabled
-        )  # (W, z0)
-        W, z0 = ev.shape
+        )  # (W, C) — only initial-id columns (< z0) can fire
+        W, C = ev.shape
         ev_mask = ev.reshape(-1)
-        ev_origin = jnp.broadcast_to(ws.pos[:, None], (W, z0)).reshape(-1)
+        ev_origin = jnp.broadcast_to(ws.pos[:, None], (W, C)).reshape(-1)
         ev_track = jnp.broadcast_to(
-            jnp.arange(z0, dtype=jnp.int32)[None, :], (W, z0)
+            jnp.arange(C, dtype=jnp.int32)[None, :], (W, C)
         ).reshape(-1)
         ev_parent = jnp.broadcast_to(
-            jnp.arange(W, dtype=jnp.int32)[:, None], (W, z0)
+            jnp.arange(W, dtype=jnp.int32)[:, None], (W, C)
         ).reshape(-1)
         ws, last_seen, n_forks, fork_parent = wlk.execute_forks(
             ws, last_seen, ev_mask, ev_origin, ev_track, t, ev_parent
@@ -218,14 +229,44 @@ def protocol_step(
     return new_state, out
 
 
-@functools.partial(jax.jit, static_argnames=("pcfg", "fcfg", "steps", "n"))
-def _run(key, neighbors, degrees, pi, pcfg, fcfg, steps, n):
+def _run_core(key, neighbors, degrees, pi, pcfg, fcfg, steps, n):
+    """Un-jitted single-trajectory scan; every batching wrapper traces
+    through this one function so ensemble/sweep results are bitwise equal
+    to the single-run path."""
     state = init_state(n, pcfg, fcfg, key)
 
     def body(s, _):
         return protocol_step(s, pcfg, fcfg, neighbors, degrees, pi)
 
     return jax.lax.scan(body, state, None, length=steps)
+
+
+_run = jax.jit(_run_core, static_argnames=("steps", "n"))
+
+
+def _run_ensemble_core(keys, neighbors, degrees, pi, pcfg, fcfg, steps, n):
+    """(seeds,) keys -> StepOutputs with leading (seeds,) axis."""
+    return jax.vmap(
+        lambda k: _run_core(k, neighbors, degrees, pi, pcfg, fcfg, steps, n)[1]
+    )(keys)
+
+
+_run_ensemble = functools.partial(jax.jit, static_argnames=("steps", "n"))(
+    _run_ensemble_core
+)
+
+
+@functools.partial(jax.jit, static_argnames=("steps", "n"))
+def _run_sweep(keys, neighbors, degrees, pi, pcfgs, fcfgs, steps, n):
+    """Stacked configs (leaves with leading (S,) axis) + (seeds,) keys ->
+    StepOutputs with leading (S, seeds) axes, all in one XLA program."""
+
+    def one_scenario(pcfg, fcfg):
+        return jax.vmap(
+            lambda k: _run_core(k, neighbors, degrees, pi, pcfg, fcfg, steps, n)[1]
+        )(keys)
+
+    return jax.vmap(one_scenario)(pcfgs, fcfgs)
 
 
 def _graph_arrays(graph: Graph, pcfg: prt.ProtocolConfig):
@@ -261,19 +302,59 @@ def run_ensemble(
     seeds: int,
     base_key: jax.Array | int = 0,
 ):
-    """vmap over seeds: StepOutputs with leading (seeds,) axis."""
+    """vmap over seeds: StepOutputs with leading (seeds,) axis.
+
+    Numeric config changes (eps grids, burst schedules, failure rates)
+    reuse the compiled program — only static fields retrigger XLA.
+    """
     if isinstance(base_key, int):
         base_key = jax.random.key(base_key)
     keys = jax.random.split(base_key, seeds)
     neighbors, degrees, pi = _graph_arrays(graph, pcfg)
+    return _run_ensemble(keys, neighbors, degrees, pi, pcfg, fcfg, steps, graph.n)
 
-    @jax.jit
-    def fn(ks):
-        return jax.vmap(
-            lambda k: _run(k, neighbors, degrees, pi, pcfg, fcfg, steps, graph.n)[1]
-        )(ks)
 
-    return fn(keys)
+def run_sweep(
+    graph: Graph,
+    scenarios: Sequence[Tuple[prt.ProtocolConfig, flr.FailureConfig]],
+    steps: int,
+    seeds: int,
+    base_key: jax.Array | int = 0,
+    *,
+    sharded: bool | None = None,
+):
+    """Run MANY (protocol, failure) scenarios x seeds in one compiled call.
+
+    ``scenarios`` is a sequence of ``(pcfg, fcfg)`` pairs (or any objects
+    with ``.pcfg``/``.fcfg``) sharing one static structure: same
+    ``algorithm`` / ``estimator_impl`` / ``max_walks`` / ``rt_bins`` /
+    burst count (pad with ``failures.pad_bursts``). Use
+    ``repro.sweep.run_scenarios`` to mix static structures — it groups
+    them and issues one compiled call per group.
+
+    Every scenario uses the SAME per-seed keys that ``run_ensemble`` would
+    derive from ``base_key``, so ``run_sweep(...)[i]`` is bitwise equal to
+    ``run_ensemble(graph, *scenarios[i], steps, seeds, base_key)``.
+
+    Returns StepOutputs with leading (len(scenarios), seeds) axes. With
+    ``sharded`` (default: auto when >1 device and divisible) the scenario
+    axis is placed across the 'data' mesh axis of the local mesh.
+    """
+    from repro.sweep.scenario import as_pair, stack_configs
+
+    if isinstance(base_key, int):
+        base_key = jax.random.key(base_key)
+    keys = jax.random.split(base_key, seeds)
+    pcfgs, fcfgs = stack_configs(scenarios)
+    pcfg0 = as_pair(scenarios[0])[0]
+    neighbors, degrees, pi = _graph_arrays(graph, pcfg0)
+    if sharded or sharded is None:
+        from repro.sweep.engine import maybe_shard_scenarios
+
+        pcfgs, fcfgs = maybe_shard_scenarios(
+            pcfgs, fcfgs, len(scenarios), explicit=bool(sharded)
+        )
+    return _run_sweep(keys, neighbors, degrees, pi, pcfgs, fcfgs, steps, graph.n)
 
 
 # ---------------------------------------------------------------------------

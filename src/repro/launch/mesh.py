@@ -2,25 +2,30 @@
 
 Defined as FUNCTIONS so importing this module never touches jax device
 state — the dry-run must set XLA_FLAGS before the first jax init.
+
+Mesh construction goes through ``repro.utils.compat.make_mesh`` so the
+``axis_types`` kwarg (jax >= 0.5) degrades gracefully on the installed
+jax 0.4.x (see the compat module for the version policy).
 """
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.utils.compat import AxisType, make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; 2 pods = 512 chips for multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_local_mesh(model_axis: int = 1):
     """Degenerate mesh over the locally available devices (CPU tests)."""
     n = len(jax.devices())
     assert n % model_axis == 0
-    return jax.make_mesh(
+    return make_mesh(
         (n // model_axis, model_axis),
         ("data", "model"),
         axis_types=(AxisType.Auto, AxisType.Auto),

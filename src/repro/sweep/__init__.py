@@ -1,0 +1,34 @@
+"""Batched scenario-sweep engine (see ``engine.py`` for the design).
+
+Quick use::
+
+    from repro.sweep import Scenario, run_scenarios
+
+    scenarios = [
+        Scenario(f"eps={e}", ProtocolConfig(eps=e), FailureConfig(...))
+        for e in (1.8, 2.0, 2.25, 2.5)
+    ]
+    result = run_scenarios(graph, scenarios, steps=4500, seeds=8)
+    z = result["eps=2.0"].z  # (seeds, steps)
+"""
+from repro.core.simulator import run_sweep
+from repro.sweep.engine import SweepResult, maybe_shard_scenarios, run_scenarios
+from repro.sweep.scenario import (
+    Scenario,
+    as_pair,
+    group_scenarios,
+    stack_configs,
+    static_signature,
+)
+
+__all__ = [
+    "Scenario",
+    "SweepResult",
+    "as_pair",
+    "group_scenarios",
+    "maybe_shard_scenarios",
+    "run_scenarios",
+    "run_sweep",
+    "stack_configs",
+    "static_signature",
+]

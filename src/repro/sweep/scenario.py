@@ -1,0 +1,106 @@
+"""Scenario descriptions for the batched sweep engine.
+
+A *scenario* is one (ProtocolConfig, FailureConfig) pair — one curve of a
+paper figure. Scenarios whose configs share static structure (algorithm,
+estimator, slot capacity, histogram resolution, burst count, fork_prob
+presence) batch into a single compiled program; ``stack_configs`` builds
+the stacked config pytrees (every numeric leaf gains a leading scenario
+axis) and ``group_scenarios`` partitions an arbitrary scenario list into
+batchable groups.
+"""
+from __future__ import annotations
+
+import numbers
+from typing import NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.failures import FailureConfig, pad_bursts
+from repro.core.protocol import ProtocolConfig
+
+
+class Scenario(NamedTuple):
+    """A named (protocol, failure) regime — one curve of a figure."""
+
+    name: str
+    pcfg: ProtocolConfig
+    fcfg: FailureConfig
+
+
+def as_pair(scenario) -> Tuple[ProtocolConfig, FailureConfig]:
+    """Accept a Scenario, an (pcfg, fcfg) tuple, or any .pcfg/.fcfg object."""
+    if hasattr(scenario, "pcfg"):
+        return scenario.pcfg, scenario.fcfg
+    pcfg, fcfg = scenario
+    return pcfg, fcfg
+
+
+def static_signature(scenario) -> tuple:
+    """Hashable program-shape key: scenarios batch iff signatures match."""
+    pcfg, fcfg = as_pair(scenario)
+    return (
+        pcfg.static_fields,
+        pcfg.fork_prob is None,  # None vs value changes the pytree structure
+        fcfg.n_bursts,
+    )
+
+
+def group_scenarios(scenarios: Sequence) -> list:
+    """Partition into batchable groups: list of (signature, [indices]).
+
+    Burst-count differences are reconciled later by ``pad_bursts``, so the
+    grouping key ignores ``n_bursts``; everything else must match exactly.
+    """
+    groups: dict = {}
+    order = []
+    for i, s in enumerate(scenarios):
+        sig = static_signature(s)[:-1]  # n_bursts handled by padding
+        if sig not in groups:
+            groups[sig] = []
+            order.append(sig)
+        groups[sig].append(i)
+    return [(sig, groups[sig]) for sig in order]
+
+
+def stack_configs(scenarios: Sequence):
+    """Stack scenario configs into (pcfg_batch, fcfg_batch) pytrees whose
+    numeric leaves carry a leading (S,) scenario axis.
+
+    Raises ValueError when the scenarios cannot share one compiled
+    program (mismatched static fields); burst schedules of different
+    lengths are padded to the widest scenario.
+    """
+    if not scenarios:
+        raise ValueError("need at least one scenario")
+    pairs = [as_pair(s) for s in scenarios]
+    sigs = {static_signature(p)[:-1] for p in pairs}
+    if len(sigs) > 1:
+        raise ValueError(
+            "scenarios mix static structures (algorithm / estimator_impl / "
+            "max_walks / rt_bins / fork_prob presence); group them with "
+            f"repro.sweep.group_scenarios first: {sorted(map(str, sigs))}"
+        )
+    pcfgs = [p for p, _ in pairs]
+    fcfgs = pad_bursts([f for _, f in pairs])
+    for p in pcfgs:
+        z0 = p.z0
+        if (
+            isinstance(z0, (jax.Array, np.ndarray))
+            and not isinstance(z0, jax.core.Tracer)
+            and z0.ndim == 0
+        ):
+            z0 = int(z0)  # concrete scalar arrays validate like ints
+        if isinstance(z0, numbers.Integral) and p.max_walks < z0:
+            raise ValueError("max_walks must be >= z0 in every scenario")
+
+    def _stack(*leaves):
+        # round-trip through numpy: python-scalar leaves would otherwise
+        # stack into weak-typed arrays, and weak-vs-strong avals needlessly
+        # split the jit cache between (say) tuple- and ndarray-built grids
+        return jnp.stack([jnp.asarray(np.asarray(leaf)) for leaf in leaves])
+
+    pcfg_batch = jax.tree_util.tree_map(_stack, *pcfgs)
+    fcfg_batch = jax.tree_util.tree_map(_stack, *fcfgs)
+    return pcfg_batch, fcfg_batch

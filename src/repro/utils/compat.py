@@ -1,0 +1,89 @@
+"""jax version compatibility shims.
+
+Policy (ROADMAP "Open items" / this PR): the repo targets the newest jax
+API surface but must run on the baked-in toolchain (jax 0.4.37 today).
+Anything newer-than-installed is adapted here — import the symbol from
+``repro.utils.compat`` instead of sprinkling try/excepts per module:
+
+  - ``AxisType``        : ``jax.sharding.AxisType`` (added ~0.5); stubbed
+                          with the same member names on older jax.
+  - ``make_mesh``       : ``jax.make_mesh`` accepting ``axis_types``; the
+                          kwarg is dropped when the installed jax predates
+                          it (mesh semantics are equivalent for Auto axes).
+  - ``shard_map``       : ``jax.shard_map`` (top-level export added ~0.6),
+                          falling back to ``jax.experimental.shard_map``;
+                          accepts ``check_vma`` and translates it to the
+                          legacy ``check_rep`` kwarg when needed.
+"""
+from __future__ import annotations
+
+import enum
+import inspect
+from typing import Any
+
+import jax
+
+try:  # jax >= 0.5
+    from jax.sharding import AxisType  # type: ignore[attr-defined]
+
+    HAS_AXIS_TYPE = True
+except ImportError:  # jax 0.4.x
+    class AxisType(enum.Enum):  # type: ignore[no-redef]
+        """Stand-in for jax.sharding.AxisType (all meshes behave as Auto)."""
+
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    HAS_AXIS_TYPE = False
+
+
+_MAKE_MESH_TAKES_AXIS_TYPES = (
+    "axis_types" in inspect.signature(jax.make_mesh).parameters
+)
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kwargs):
+    """``jax.make_mesh`` that tolerates ``axis_types`` on every jax version."""
+    if axis_types is not None and _MAKE_MESH_TAKES_AXIS_TYPES:
+        kwargs["axis_types"] = axis_types
+    return jax.make_mesh(axis_shapes, axis_names, **kwargs)
+
+
+def abstract_mesh(axis_shapes, axis_names):
+    """``jax.sharding.AbstractMesh`` across signature generations.
+
+    Newer jax takes ``(axis_shapes, axis_names)`` like ``make_mesh``; jax
+    0.4.x takes one ``((name, size), ...)`` tuple.
+    """
+    AbstractMesh = jax.sharding.AbstractMesh
+    try:
+        return AbstractMesh(tuple(axis_shapes), tuple(axis_names))
+    except TypeError:
+        return AbstractMesh(tuple(zip(axis_names, axis_shapes)))
+
+
+if hasattr(jax, "shard_map"):  # jax >= 0.6
+    _shard_map_impl = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+_SHARD_MAP_TAKES_CHECK_VMA = (
+    "check_vma" in inspect.signature(_shard_map_impl).parameters
+)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool | None = None, **kwargs: Any):
+    """``shard_map`` accepting the modern ``check_vma`` kwarg everywhere.
+
+    Older jax calls the same knob ``check_rep``; semantics are identical
+    for our usage (disable replication/vma checking).
+    """
+    if check_vma is not None:
+        if _SHARD_MAP_TAKES_CHECK_VMA:
+            kwargs["check_vma"] = check_vma
+        else:
+            kwargs["check_rep"] = check_vma
+    return _shard_map_impl(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs
+    )

@@ -3,9 +3,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AxisType
 
 from repro.core.distributed import make_sharded_step
+from repro.utils.compat import AxisType, make_mesh
 from repro.core.protocol import ProtocolConfig
 from repro.graphs import random_regular_graph
 
@@ -17,7 +17,7 @@ def setup():
         algorithm="decafork+", z0=6, max_walks=24, eps=1.8, eps2=6.5,
         protocol_start=200, rt_bins=256,
     )
-    mesh = jax.make_mesh((1,), ("data",), axis_types=(AxisType.Auto,))
+    mesh = make_mesh((1,), ("data",), axis_types=(AxisType.Auto,))
     step = jax.jit(make_sharded_step(mesh, ("data",), g.n, pcfg))
     return g, pcfg, mesh, step
 
@@ -33,6 +33,7 @@ def _init(g, pcfg, key):
     return pos, active, track, last_seen, hist, total
 
 
+@pytest.mark.slow
 def test_distributed_step_runs_and_self_regulates(setup):
     g, pcfg, mesh, step = setup
     key = jax.random.key(0)

@@ -77,6 +77,7 @@ def test_flash_bf16():
     )
 
 
+@pytest.mark.slow
 def test_flash_matches_model_blocked_attention():
     """Kernel == the jnp blocked attention the models actually run."""
     from repro.models.layers import blocked_causal_attention
@@ -103,6 +104,7 @@ def test_flash_rejects_bad_shapes():
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("L,H,P,N,chunk", [(128, 2, 16, 8, 64), (256, 4, 32, 16, 128)])
 def test_ssd_vs_chunked(L, H, P, N, chunk):
     from repro.models.ssm import ssd_chunked
@@ -120,6 +122,7 @@ def test_ssd_vs_chunked(L, H, P, N, chunk):
     np.testing.assert_allclose(np.asarray(st_got), np.asarray(st_ref), rtol=3e-4, atol=3e-4)
 
 
+@pytest.mark.slow
 def test_ssd_vs_naive_recurrence():
     """Both chunked paths == the literal h_t = g h_{t-1} + dt B x recurrence."""
     from repro.models.ssm import ssd_chunked
@@ -147,6 +150,7 @@ def test_ssd_vs_naive_recurrence():
     np.testing.assert_allclose(np.asarray(got_k), want, rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.slow
 def test_pallas_estimator_in_simulation():
     """estimator_impl='pallas' (interpret mode) drives the same protocol
     trajectory as the gather path inside a real simulation."""

@@ -107,6 +107,7 @@ def test_mrope_sections_sum():
     np.testing.assert_allclose(np.asarray(out), np.asarray(x), atol=1e-6)  # pos 0 = identity
 
 
+@pytest.mark.slow
 def test_grouped_moe_matches_global():
     """§Perf-2 path: shard-local grouped dispatch == global dispatch
     (dropless capacity)."""
@@ -123,6 +124,7 @@ def test_grouped_moe_matches_global():
     np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.slow
 def test_absorbed_mla_matches_naive_decode():
     """§Perf-3 path: absorbed-matmul MLA decode == naive decompression."""
     import dataclasses
@@ -150,6 +152,7 @@ def test_absorbed_mla_matches_naive_decode():
     np.testing.assert_allclose(absorbed, naive, rtol=3e-3, atol=3e-3)
 
 
+@pytest.mark.slow
 def test_ssd_chunk_override_equivalent():
     """§Perf ssd_chunk knob changes tiling, not math."""
     import dataclasses

@@ -71,10 +71,13 @@ def test_missingperson_flags():
         jnp.asarray(True),
     )
     ev = np.asarray(ev)
-    assert ev.shape == (W, 3)
+    # events span the full track space; columns >= z0 are masked off so
+    # that z0 can stay a traced (sweep-batchable) value
+    assert ev.shape == (W, W)
     assert ev[0, 1]  # id 1 stale -> replacement fork
     assert not ev[0, 0]  # own id excluded
     assert not ev[0, 2]  # id 2 fresh (20-15 <= 10)
+    assert not ev[:, 3:].any()  # non-initial ids (>= z0) never fire
     assert not ev[1:].any()  # only the chosen walk's node acts
 
 

@@ -96,6 +96,7 @@ def test_musicgen_decode_matches_forward():
     )
 
 
+@pytest.mark.slow
 def test_vlm_prefill_then_decode_consistent():
     """Vision prefix + text prefill, then decode one more text token ==
     full forward over the extended text."""

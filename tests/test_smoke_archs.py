@@ -31,6 +31,7 @@ def test_smoke_constraints(arch):
     assert cfg.arch_type == full.arch_type  # same family
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_train_step_shapes_and_finite(arch, key):
     cfg = get_smoke_config(arch)

@@ -1,0 +1,176 @@
+"""Sweep engine: batched scenarios are bitwise the per-scenario ensembles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FailureConfig, ProtocolConfig, run_ensemble
+from repro.core import simulator as sim
+from repro.core.simulator import run_sweep
+from repro.graphs import random_regular_graph
+from repro.sweep import (
+    Scenario,
+    group_scenarios,
+    run_scenarios,
+    stack_configs,
+)
+
+N, W, Z0, STEPS, SEEDS = 24, 10, 5, 60, 2
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return random_regular_graph(N, 4, seed=3)
+
+
+def _pcfg(alg, impl, **kw):
+    base = dict(
+        algorithm=alg, z0=Z0, max_walks=W, rt_bins=32, protocol_start=10,
+        estimator_impl=impl,
+    )
+    base.update(kw)
+    return ProtocolConfig(**base)
+
+
+def _fcfgs():
+    return [
+        FailureConfig(burst_times=(20,), burst_sizes=(2,)),
+        FailureConfig(burst_times=(25,), burst_sizes=(1,), p_fail=0.002),
+        FailureConfig(
+            burst_times=(30,), burst_sizes=(2,),
+            byzantine_node=1, p_byz=0.01, byz_start_time=15,
+        ),
+    ]
+
+
+def _assert_outputs_equal(ref, got, label):
+    for name, a, b in zip(ref._fields, ref, got):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b), err_msg=f"{label}: field {name}"
+        )
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("impl", ["gather", "compare"])
+@pytest.mark.parametrize("alg", ["decafork", "decafork+", "missingperson", "none"])
+def test_sweep_matches_ensemble(graph, alg, impl):
+    """run_sweep over a scenario stack == per-scenario run_ensemble, bitwise."""
+    eps_grid = (1.4, 1.8, 2.2)
+    scenarios = [
+        (_pcfg(alg, impl, eps=e, eps2=5.0 + e, eps_mp=15.0 + 10 * i), f)
+        for i, (e, f) in enumerate(zip(eps_grid, _fcfgs()))
+    ]
+    out = run_sweep(graph, scenarios, steps=STEPS, seeds=SEEDS, base_key=7)
+    assert out.z.shape == (len(scenarios), SEEDS, STEPS)
+    for i, (pc, fc) in enumerate(scenarios):
+        ref = run_ensemble(graph, pc, fc, steps=STEPS, seeds=SEEDS, base_key=7)
+        got = jax.tree_util.tree_map(lambda x: x[i], out)
+        _assert_outputs_equal(ref, got, f"{alg}/{impl}/scenario{i}")
+
+
+def test_sweep_single_compilation(graph):
+    """>= 8 scenarios x >= 4 seeds execute as ONE jit-compiled call."""
+    fcs = [
+        FailureConfig(burst_times=(20,), burst_sizes=(2,)),
+        FailureConfig(burst_times=(25,), burst_sizes=(2,), p_fail=0.001),
+    ]
+    scenarios = [
+        (_pcfg("decafork", "gather", eps=e), fc)
+        for e in (1.5, 1.8, 2.1, 2.4)
+        for fc in fcs
+    ]
+    assert len(scenarios) >= 8
+    before = sim._run_sweep._cache_size()
+    out = run_sweep(graph, scenarios, steps=STEPS, seeds=4, base_key=11)
+    jax.block_until_ready(out.z)
+    after_first = sim._run_sweep._cache_size()
+    assert after_first == before + 1  # one compiled program for all 8x4
+    assert out.z.shape == (8, 4, STEPS)
+    # and that one program reproduces every per-scenario ensemble bitwise
+    for i, (pc, fc) in enumerate(scenarios):
+        ref = run_ensemble(graph, pc, fc, steps=STEPS, seeds=4, base_key=11)
+        got = jax.tree_util.tree_map(lambda x: x[i], out)
+        _assert_outputs_equal(ref, got, f"scenario{i}")
+    # numeric variations reuse the same program: a second grid, same shapes
+    more = [
+        (_pcfg("decafork", "gather", eps=e), fcs[0]) for e in np.linspace(1.2, 2.6, 8)
+    ]
+    run_sweep(graph, more, steps=STEPS, seeds=4, base_key=13)
+    assert sim._run_sweep._cache_size() == after_first
+
+
+@pytest.mark.slow
+def test_burst_padding_batches_unequal_schedules(graph):
+    """Scenarios with different burst counts co-batch via pad_bursts."""
+    scenarios = [
+        (_pcfg("decafork", "gather", eps=1.8),
+         FailureConfig(burst_times=(15, 35), burst_sizes=(2, 1))),
+        (_pcfg("decafork", "gather", eps=2.0),
+         FailureConfig(burst_times=(25,), burst_sizes=(2,))),
+    ]
+    out = run_sweep(graph, scenarios, steps=STEPS, seeds=SEEDS, base_key=5)
+    for i, (pc, fc) in enumerate(scenarios):
+        ref = run_ensemble(graph, pc, fc, steps=STEPS, seeds=SEEDS, base_key=5)
+        np.testing.assert_array_equal(np.asarray(out.z[i]), np.asarray(ref.z))
+
+
+def test_stack_rejects_mixed_static_structure():
+    a = _pcfg("decafork", "gather")
+    b = _pcfg("missingperson", "gather")
+    fc = FailureConfig()
+    with pytest.raises(ValueError, match="static structures"):
+        stack_configs([(a, fc), (b, fc)])
+    # fork_prob None vs value is a structure change, too
+    c = _pcfg("decafork", "gather", fork_prob=0.2)
+    with pytest.raises(ValueError, match="static structures"):
+        stack_configs([(a, fc), (c, fc)])
+
+
+@pytest.mark.slow
+def test_run_scenarios_mixes_groups(graph):
+    """Mixed algorithms group into per-structure batches, order preserved."""
+    fc = FailureConfig(burst_times=(20,), burst_sizes=(2,))
+    scenarios = [
+        Scenario("dfk/1.6", _pcfg("decafork", "gather", eps=1.6), fc),
+        Scenario("mp", _pcfg("missingperson", "gather", eps_mp=25.0), fc),
+        Scenario("dfk/2.0", _pcfg("decafork", "gather", eps=2.0), fc),
+        Scenario("none", _pcfg("none", "gather"), FailureConfig()),
+    ]
+    groups = group_scenarios(scenarios)
+    assert [idxs for _, idxs in groups] == [[0, 2], [1], [3]]
+    res = run_scenarios(graph, scenarios, steps=STEPS, seeds=SEEDS, base_key=3)
+    assert res.names == ("dfk/1.6", "mp", "dfk/2.0", "none")
+    for s, out in zip(scenarios, res.outputs):
+        ref = run_ensemble(graph, s.pcfg, s.fcfg, steps=STEPS, seeds=SEEDS, base_key=3)
+        _assert_outputs_equal(ref, out, s.name)
+    assert res["mp"] is res.outputs[1]
+
+
+def test_sharded_path_single_device(graph):
+    """explicit sharding placement is a correctness no-op on 1 device."""
+    fc = FailureConfig(burst_times=(20,), burst_sizes=(2,))
+    scenarios = [(_pcfg("decafork", "gather", eps=e), fc) for e in (1.6, 2.0)]
+    a = run_sweep(graph, scenarios, steps=STEPS, seeds=SEEDS, base_key=9, sharded=True)
+    b = run_sweep(graph, scenarios, steps=STEPS, seeds=SEEDS, base_key=9, sharded=False)
+    np.testing.assert_array_equal(np.asarray(a.z), np.asarray(b.z))
+
+
+def test_traced_config_leaves_do_not_recompile(graph):
+    """Numeric knobs are traced: run_ensemble reuses one program across an
+    epsilon grid and across failure rates (the pre-sweep per-curve compile
+    storm is gone)."""
+    fc = FailureConfig(burst_times=(20,), burst_sizes=(2,))
+    first = None
+    for e in (1.5, 1.9, 2.3):
+        for pf in (0.0, 0.002):
+            run_ensemble(
+                graph,
+                _pcfg("decafork", "gather", eps=e),
+                FailureConfig(burst_times=(20,), burst_sizes=(2,), p_fail=pf),
+                steps=STEPS,
+                seeds=SEEDS,
+            )
+            if first is None:
+                first = sim._run_ensemble._cache_size()
+    # every (eps, p_fail) combination after the first reused its program
+    assert sim._run_ensemble._cache_size() == first

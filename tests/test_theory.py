@@ -78,6 +78,7 @@ def test_bennett_bounds_behave():
     assert t_low < t_close <= p
 
 
+@pytest.mark.slow
 def test_reaction_time_bound_monotonic():
     common = dict(r_forked=0, k_remaining=5, t_d=0.0, p=0.2, rates=RATES, delta=0.1)
     t_eps_small = reaction_time_bound(d_failed=5, eps=1.5, **common)

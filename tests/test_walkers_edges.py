@@ -1,0 +1,115 @@
+"""Walk-slot machinery edge cases: capacity overflow, slot reuse, identity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import walkers as wlk
+from repro.core.estimator import NEVER
+
+
+def _state(pos, active, track=None):
+    pos = jnp.asarray(pos, jnp.int32)
+    active = jnp.asarray(active, bool)
+    if track is None:
+        track = jnp.arange(pos.shape[0], dtype=jnp.int32)
+    return wlk.WalkState(pos=pos, active=active, track=jnp.asarray(track, jnp.int32))
+
+
+def test_fork_overflow_dropped_not_corrupted():
+    """More fork events than free slots: extras drop, nothing is clobbered."""
+    ws = _state([4, 5, 6, 7, 0, 0], [True, True, True, True, False, False])
+    last_seen = jnp.full((8, 6), 3, jnp.int32)
+    ev = jnp.asarray([True, True, True, True, False, False])  # 4 events, 2 free
+    new_ws, new_ls, n, fp = wlk.execute_forks(ws, last_seen, ev, ws.pos, None, jnp.int32(9))
+    assert int(n) == 2
+    assert np.asarray(new_ws.active).all()  # exactly filled to capacity
+    # free slots were matched to events in rank order: slot 4 <- walk 0, slot 5 <- walk 1
+    assert int(new_ws.pos[4]) == 4 and int(new_ws.pos[5]) == 5
+    np.testing.assert_array_equal(np.asarray(fp), [-1, -1, -1, -1, 0, 1])
+    # surviving walks untouched
+    np.testing.assert_array_equal(np.asarray(new_ws.pos[:4]), [4, 5, 6, 7])
+    np.testing.assert_array_equal(np.asarray(new_ws.track[:4]), [0, 1, 2, 3])
+    # dropped events (walks 2, 3) left no trace anywhere in last_seen
+    ls = np.asarray(new_ls)
+    assert (ls[:, :4] == 3).all()
+
+
+def test_fork_with_zero_free_slots_is_noop():
+    ws = _state([1, 2, 3], [True, True, True])
+    last_seen = jnp.full((4, 3), 5, jnp.int32)
+    ev = jnp.asarray([True, True, True])
+    new_ws, new_ls, n, fp = wlk.execute_forks(ws, last_seen, ev, ws.pos, None, jnp.int32(7))
+    assert int(n) == 0
+    np.testing.assert_array_equal(np.asarray(new_ws.pos), np.asarray(ws.pos))
+    np.testing.assert_array_equal(np.asarray(new_ws.active), np.asarray(ws.active))
+    np.testing.assert_array_equal(np.asarray(new_ws.track), np.asarray(ws.track))
+    assert (np.asarray(new_ls) == 5).all()
+    assert (np.asarray(fp) == -1).all()
+
+
+def test_decafork_slot_reuse_clears_stale_column():
+    """Terminate a walk, fork into its slot: the stale last_seen column of
+    the dead identity must not leak into the new walk's return stats."""
+    ws = _state([2, 3, 1], [True, True, True])
+    # slot 1's identity was seen everywhere at t=6 (stale once it dies)
+    last_seen = jnp.asarray(
+        [[0, 6, NEVER], [1, 6, NEVER], [2, 6, NEVER], [3, 6, NEVER]], jnp.int32
+    )
+    ws = wlk.execute_terminations(ws, jnp.asarray([False, True, False]))
+    assert not bool(ws.active[1])
+    ev = jnp.asarray([True, False, False])  # walk 0 (at node 2) forks
+    new_ws, new_ls, n, fp = wlk.execute_forks(ws, last_seen, ev, ws.pos, None, jnp.int32(9))
+    assert int(n) == 1 and bool(new_ws.active[1])
+    assert int(new_ws.track[1]) == 1  # fresh identity = reused slot index
+    ls = np.asarray(new_ls)
+    # stale t=6 entries for the dead identity are gone ...
+    assert ls[2, 1] == 9  # ... replaced by the fork origin's sighting at t
+    np.testing.assert_array_equal(ls[[0, 1, 3], 1], [NEVER, NEVER, NEVER])
+    # unrelated columns untouched
+    np.testing.assert_array_equal(ls[:, 0], [0, 1, 2, 3])
+    assert (ls[:, 2] == NEVER).all()
+
+
+def test_missingperson_replacement_inherits_track():
+    """MISSINGPERSON replacements carry the replaced walk's identity and
+    keep its last_seen history (the whole point of the timeout rule)."""
+    ws = _state([4, 0, 0], [True, False, False], track=[0, 1, 2])
+    last_seen = jnp.asarray(
+        [[7, 2, NEVER], [7, 2, NEVER], [7, 2, NEVER], [7, 2, NEVER], [7, 2, NEVER]],
+        jnp.int32,
+    )
+    # walk 0 declares ids 1 and 2 missing -> two replacement forks from node 4
+    ev = jnp.asarray([False, True, True])
+    origins = jnp.asarray([4, 4, 4], jnp.int32)
+    tracks = jnp.asarray([0, 1, 2], jnp.int32)
+    parents = jnp.asarray([0, 0, 0], jnp.int32)
+    new_ws, new_ls, n, fp = wlk.execute_forks(
+        ws, last_seen, ev, origins, tracks, jnp.int32(12), parents
+    )
+    assert int(n) == 2
+    np.testing.assert_array_equal(np.asarray(new_ws.active), [True, True, True])
+    np.testing.assert_array_equal(np.asarray(new_ws.track), [0, 1, 2])
+    np.testing.assert_array_equal(np.asarray(new_ws.pos), [4, 4, 4])
+    np.testing.assert_array_equal(np.asarray(fp), [-1, 0, 0])
+    # history untouched: replacements REUSE the replaced id's statistics
+    np.testing.assert_array_equal(np.asarray(new_ls), np.asarray(last_seen))
+
+
+def test_forks_execute_inside_jit_and_vmap():
+    """The slot machinery stays shape-stable under jit+vmap (sweep path)."""
+
+    def fork_once(key):
+        pos = jax.random.randint(key, (6,), 0, 4, dtype=jnp.int32)
+        ws = wlk.WalkState(
+            pos=pos,
+            active=jnp.asarray([True, True, True, False, False, False]),
+            track=jnp.arange(6, dtype=jnp.int32),
+        )
+        ls = jnp.full((4, 6), 2, jnp.int32)
+        ev = jnp.asarray([True, False, True, False, False, False])
+        new_ws, new_ls, n, fp = wlk.execute_forks(ws, ls, ev, ws.pos, None, jnp.int32(5))
+        return n, jnp.sum(new_ws.active)
+
+    n, z = jax.jit(jax.vmap(fork_once))(jax.random.split(jax.random.key(0), 3))
+    np.testing.assert_array_equal(np.asarray(n), [2, 2, 2])
+    np.testing.assert_array_equal(np.asarray(z), [5, 5, 5])
