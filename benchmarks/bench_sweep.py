@@ -61,7 +61,7 @@ def bench_loop_seed_style(graph, scenarios):
     configs were static jit arguments and every eps value was its own
     compilation unit.
     """
-    neighbors, degrees, pi = sim._graph_arrays(graph, scenarios[0][0])
+    neighbors, degrees, mirror, pi = sim._graph_arrays(graph, scenarios[0][0])
     keys = jax.random.split(jax.random.key(0), SEEDS)
     t0 = time.time()
     zs = []
@@ -69,7 +69,7 @@ def bench_loop_seed_style(graph, scenarios):
         fn = jax.jit(
             functools.partial(sim._run_ensemble_core, steps=STEPS, n=graph.n)
         )
-        out = fn(keys, neighbors, degrees, pi, pcfg, fcfg)
+        out = fn(keys, neighbors, degrees, mirror, pi, pcfg, fcfg)
         zs.append(np.asarray(out.z))
     return time.time() - t0, np.stack(zs)
 

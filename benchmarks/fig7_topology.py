@@ -1,0 +1,67 @@
+"""Fig. 7 (beyond-paper): dynamic-topology failure regimes.
+
+The paper's opening premise — "RWs can fail due to node or link failures"
+— exercised at the topology level, which the GraphState layer makes a
+traced scenario axis:
+
+  * node crashes: a scheduled crash downs a node (killing its resident
+    walks) mid-run, with slow stochastic recovery; plus an i.i.d.
+    crash/recover churn regime;
+  * link failures: i.i.d. per-edge failure/recovery — the graph thins and
+    re-heals continuously, stranding walks on degraded neighborhoods;
+  * Pac-Man (arXiv:2508.05663): one adversarial node silently absorbs
+    every visiting walk, with no honest phase to learn from.
+
+All regimes share the DECAFORK/DECAFORK+ static structure, so each
+algorithm's whole row set runs as ONE compiled sweep call (the per-group
+compile guarantee of ``repro.sweep``); the 'none' baseline shows each
+threat is fatal without self-regulation.
+"""
+from benchmarks.common import (
+    PROTO_START, STEPS, default_graph, run_sweep_cases, save_result, scenario,
+)
+from repro.core import FailureConfig
+
+CRASH_AT = PROTO_START + (STEPS - PROTO_START) // 3
+
+
+def topology_failures() -> list:
+    """(tag, FailureConfig) rows for the three topology threat models."""
+    return [
+        ("crash", FailureConfig(
+            node_crash_times=(CRASH_AT,), node_crash_ids=(0,),
+            p_node_recover=0.002,
+        )),
+        # schedule-free rows co-batch with "crash" via pad_bursts
+        ("churn", FailureConfig(
+            p_node_fail=5e-5, p_node_recover=0.01,
+            node_fail_start=PROTO_START,
+        )),
+        ("links", FailureConfig(
+            p_link_fail=2e-4, p_link_recover=0.02,
+            link_fail_start=PROTO_START,
+        )),
+        ("pacman", FailureConfig(
+            pacman_node=0, pacman_start_time=CRASH_AT,
+        )),
+    ]
+
+
+def run(verbose: bool = True):
+    g = default_graph()
+    scenarios = []
+    for alg in ("decafork", "decafork+", "none"):
+        for tag, fcfg in topology_failures():
+            scenarios.append(scenario(f"fig7/{alg}/{tag}", alg, fcfg))
+    rows = []
+    for res in run_sweep_cases(g, scenarios):
+        rows.append({"name": res.name, "us_per_call": res.us_per_call,
+                     **res.metrics()})
+        if verbose:
+            print(res.csv_row())
+    save_result("fig7_topology", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

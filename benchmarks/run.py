@@ -20,6 +20,7 @@ from benchmarks import (
     fig4_nodes,
     fig5_epsilon,
     fig6_graphs,
+    fig7_topology,
     kernel_theta,
     theory_bounds,
 )
@@ -31,6 +32,7 @@ BENCHES = {
     "fig4": fig4_nodes.run,
     "fig5": fig5_epsilon.run,
     "fig6": fig6_graphs.run,
+    "fig7": fig7_topology.run,
     "theory": theory_bounds.run,
     "kernel_theta": kernel_theta.run,
     "auto_eps": auto_eps.run,

@@ -29,6 +29,7 @@ from repro.core.protocol import ProtocolConfig
 from repro.core.simulator import init_state, protocol_step
 from repro.data import make_markov_task, sample_batch
 from repro.graphs import random_regular_graph
+from repro.graphs.state import mirror_indices
 from repro.models.model import Model
 from repro.optim import adamw, fork_replica, init_replicas
 from repro.optim.rw_sgd import replica_train_step
@@ -75,8 +76,9 @@ def main():
           f"payload {cfg.name} ({n_params:,} params/replica) | "
           f"entropy floor {task.entropy:.3f}")
 
+    mirror = jnp.asarray(mirror_indices(g))
     step_fn = jax.jit(
-        lambda s: protocol_step(s, pcfg, fcfg, neighbors, degrees, None)
+        lambda s: protocol_step(s, pcfg, fcfg, neighbors, degrees, mirror, None)
     )
 
     @jax.jit
@@ -85,7 +87,7 @@ def main():
             lambda nid: sample_batch(task, kb, args.local_batch, args.seq, nid)
         )(pos)
 
-    state = init_state(g.n, pcfg, fcfg, key)
+    state = init_state(g.n, g.max_degree, pcfg, fcfg, key)
     slots = jnp.arange(args.max_walks)
     t0 = time.time()
     log = []

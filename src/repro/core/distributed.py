@@ -32,6 +32,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import estimator as est
 from repro.core import protocol as prt
+from repro.core import walkers as wlk
 from repro.core.walkers import WalkState
 from repro.utils.compat import shard_map
 from repro.utils.prng import fold_in_time
@@ -150,18 +151,7 @@ def make_sharded_step(
         # --- 4. execute (replicated, deterministic) ------------------------
         active = active & ~term
         ev_origin = pos  # forked walk starts where its parent sits
-        free = ~active
-        n_free = jnp.sum(free)
-        free_rank = jnp.cumsum(free) - 1
-        ev_rank = jnp.cumsum(fork) - 1
-        ev_ok = fork & (ev_rank < n_free)
-        rank_to_slot = (
-            jnp.zeros((W,), jnp.int32)
-            .at[jnp.where(free, free_rank, W)]
-            .set(slots, mode="drop")
-        )
-        ev_slot = rank_to_slot[jnp.clip(ev_rank, 0, W - 1)]
-        safe_slot = jnp.where(ev_ok, ev_slot, W)
+        safe_slot, ev_ok, ev_slot = wlk.allocate_fork_slots(active, fork)
         active = active.at[safe_slot].set(True, mode="drop")
         pos = pos.at[safe_slot].set(ev_origin, mode="drop")
         track = track.at[safe_slot].set(ev_slot, mode="drop")

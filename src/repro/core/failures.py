@@ -1,20 +1,34 @@
-"""Threat models (Section II): burst, probabilistic and Byzantine failures.
+"""Threat models (Section II): walk-level and topology-level failures.
 
 The protocol makes no assumption about failures; these models exist to
-*challenge* it, mirroring the paper's evaluation:
+*challenge* it, mirroring the paper's evaluation plus the dynamic-topology
+regimes of the related work (Pac-Man attack, arXiv:2508.05663; multi-stream
+regimes, arXiv:2504.09792):
   1) burst: D walks fail simultaneously at scheduled times (Figs. 1, 4-6);
   2) probabilistic: each walk independently dies w.p. p_f per step (Fig. 2);
   3) Byzantine: one node follows a 2-state Markov chain and, while in the
-     Byz state, deterministically terminates every incoming walk (Fig. 3).
+     Byz state, deterministically terminates every incoming walk (Fig. 3);
+  4) node crashes: scheduled (``node_crash_times``/``node_crash_ids``) or
+     i.i.d. (``p_node_fail``) — a crashed node kills its resident walks,
+     drops out of the topology, and recovers w.p. ``p_node_recover``;
+  5) link failures: each undirected edge independently fails w.p.
+     ``p_link_fail`` per step and recovers w.p. ``p_link_recover``;
+  6) Pac-Man: one adversarial node silently absorbs every visiting walk
+     (unlike the Byzantine chain it never flips back to honesty).
+
+Models 4-6 act on :class:`repro.graphs.state.GraphState`, the live
+topology masks carried through the simulator's scan (``step_topology``);
+1-3 act directly on walk liveness.
 
 ``FailureConfig`` is a registered jax pytree whose fields are all *traced
 numeric leaves*: rates, times and node ids are jax-traceable values, so
 many failure regimes batch under ``jax.vmap`` and share one compiled
 program (the sweep engine, ``repro.sweep``). Only the number of scheduled
-bursts is shape-determining — configs with different burst counts have
-different pytree structures (pad with ``pad_bursts`` to co-batch them).
-Every model below is branch-free on traced values: a disabled mechanism
-(rate 0, node -1, no bursts) is a numeric no-op on the same program.
+bursts / node crashes is shape-determining — configs with different
+schedule lengths have different pytree structures (pad with ``pad_bursts``
+to co-batch them). Every model below is branch-free on traced values: a
+disabled mechanism (rate 0, node -1, no schedule entries) is a numeric
+no-op on the same program.
 """
 from __future__ import annotations
 
@@ -55,11 +69,24 @@ class FailureConfig:
     p_byz: float | jax.Array = 0.0  # state-flip probability per step
     byz_start: bool | jax.Array = True  # start in the Byz state
     byz_start_time: int | jax.Array = 0  # node honest before this step
+    # ---- topology-level failures (act on GraphState) --------------------
+    node_crash_times: Tuple[int, ...] | jax.Array = ()  # scheduled crashes
+    node_crash_ids: Tuple[int, ...] | jax.Array = ()  # node per crash (-1 off)
+    p_node_fail: float | jax.Array = 0.0  # i.i.d. per-node crash rate
+    p_node_recover: float | jax.Array = 0.0  # per-step recovery of down nodes
+    node_fail_start: int | jax.Array = 0  # i.i.d. node crashes begin here
+    p_link_fail: float | jax.Array = 0.0  # i.i.d. per-(undirected-)edge rate
+    p_link_recover: float | jax.Array = 0.0  # per-step recovery of down links
+    link_fail_start: int | jax.Array = 0  # i.i.d. link failures begin here
+    pacman_node: int | jax.Array = -1  # silently absorbs visitors (-1 off)
+    pacman_start_time: int | jax.Array = 0  # node honest before this step
 
     def __post_init__(self):
         if _static_len(self.burst_times) != _static_len(self.burst_sizes):
             raise ValueError("burst_times and burst_sizes must align")
-        for f in ("burst_times", "burst_sizes"):
+        if _static_len(self.node_crash_times) != _static_len(self.node_crash_ids):
+            raise ValueError("node_crash_times and node_crash_ids must align")
+        for f in ("burst_times", "burst_sizes", "node_crash_times", "node_crash_ids"):
             v = getattr(self, f)
             if isinstance(v, (tuple, list)):
                 object.__setattr__(
@@ -68,8 +95,13 @@ class FailureConfig:
 
     @property
     def n_bursts(self) -> int:
-        """Static burst-slot count (the only shape-bearing field)."""
+        """Static burst-slot count (shape-bearing)."""
         return _static_len(self.burst_times)
+
+    @property
+    def n_node_crashes(self) -> int:
+        """Static scheduled-crash count (shape-bearing)."""
+        return _static_len(self.node_crash_times)
 
     # value-based eq/hash: the generated dataclass versions would raise on
     # the (K,) burst arrays; concrete configs stay usable in sets/dicts
@@ -159,25 +191,110 @@ def step_byzantine(
     return active & ~kill, byz_state
 
 
-def pad_bursts(cfgs):
-    """Pad a list of FailureConfigs to a common burst count.
+def step_topology(
+    gs,
+    t: jax.Array,
+    cfg: FailureConfig,
+    key: jax.Array,
+    neighbors: jax.Array,
+    mirror: jax.Array,
+):
+    """Advance the live topology one step (see ``graphs.state.GraphState``).
 
-    Padding entries use time -1 / size 0, which never fire; the returned
+    Scheduled crashes fire when ``t == node_crash_times[i]`` and down node
+    ``node_crash_ids[i]``; i.i.d. crashes down each up node w.p.
+    ``p_node_fail`` once ``t >= node_fail_start``; down nodes recover w.p.
+    ``p_node_recover`` (never on the step a schedule entry downs them).
+    Each undirected edge fails w.p. ``p_link_fail`` and recovers w.p.
+    ``p_link_recover`` — one uniform per undirected edge, shared between
+    the two directed slots via the precomputed ``mirror`` involution, so
+    availability stays symmetric. All draws consume dedicated keys, so a
+    config with every topology knob disabled leaves ``gs`` untouched AND
+    leaves every other random stream bitwise unchanged.
+    """
+    from repro.graphs.state import GraphState
+
+    n, D = neighbors.shape
+    k_nfail, k_nrec, k_lfail, k_lrec = jax.random.split(key, 4)
+
+    # scheduled crashes (time -1 / id -1 never fire — padding encoding)
+    sched_down = jnp.zeros((n,), bool)
+    ids = jnp.arange(n, dtype=jnp.int32)
+    for i in range(cfg.n_node_crashes):
+        fire = (t == cfg.node_crash_times[i]) & (cfg.node_crash_ids[i] >= 0)
+        sched_down = sched_down | ((ids == cfg.node_crash_ids[i]) & fire)
+
+    crash = (jax.random.uniform(k_nfail, (n,)) < cfg.p_node_fail) & (
+        t >= cfg.node_fail_start
+    )
+    recover = jax.random.uniform(k_nrec, (n,)) < cfg.p_node_recover
+    node_up = jnp.where(
+        gs.node_up, ~(crash | sched_down), recover & ~sched_down
+    )
+
+    # symmetric link draws: canonical uniform lives at the lower endpoint
+    u_fail = jax.random.uniform(k_lfail, (n, D))
+    u_rec = jax.random.uniform(k_lrec, (n, D))
+    lower = ids[:, None] < neighbors  # this slot holds the canonical draw
+    e_fail = jnp.where(lower, u_fail, u_fail[neighbors, mirror])
+    e_rec = jnp.where(lower, u_rec, u_rec[neighbors, mirror])
+    fail = (e_fail < cfg.p_link_fail) & (t >= cfg.link_fail_start)
+    rec = e_rec < cfg.p_link_recover
+    edge_up = jnp.where(gs.edge_up, ~fail, rec)
+
+    return GraphState(node_up=node_up, edge_up=edge_up)
+
+
+def kill_resident_walks(
+    active: jax.Array, pos: jax.Array, node_up: jax.Array
+) -> jax.Array:
+    """A node crash takes its resident walks down with it."""
+    return active & node_up[pos]
+
+
+def apply_pacman(
+    active: jax.Array, pos: jax.Array, t: jax.Array, cfg: FailureConfig
+) -> jax.Array:
+    """Pac-Man (arXiv:2508.05663): the adversarial node silently absorbs
+    every walk that steps onto it — deterministically, with no recovery
+    phase (contrast ``step_byzantine``'s 2-state chain). ``pacman_node``
+    of -1 disarms it as a numeric no-op on the same compiled program.
+    """
+    armed = (t >= cfg.pacman_start_time) & (cfg.pacman_node >= 0)
+    kill = active & armed & (pos == cfg.pacman_node)
+    return active & ~kill
+
+
+def pad_bursts(cfgs):
+    """Pad a list of FailureConfigs to common schedule lengths.
+
+    Covers both shape-bearing schedules — walk bursts and scheduled node
+    crashes. Padding entries use time -1 (never fires); the returned
     configs share one pytree structure and therefore stack into a single
     scenario batch.
     """
-    k_max = max((c.n_bursts for c in cfgs), default=0)
+    kb_max = max((c.n_bursts for c in cfgs), default=0)
+    kc_max = max((c.n_node_crashes for c in cfgs), default=0)
+
+    def _pad_field(v, k, k_max, fill):
+        if k == k_max:
+            return jnp.asarray(v, jnp.int32) if k else v
+        pad = jnp.full((k_max - k,), fill, jnp.int32)
+        return jnp.concatenate([jnp.asarray(v, jnp.int32).reshape((k,)), pad])
 
     def _pad(c: FailureConfig) -> FailureConfig:
-        k = c.n_bursts
-        if k == k_max:
+        if c.n_bursts == kb_max and c.n_node_crashes == kc_max:
             return c
-        pad_t = jnp.full((k_max - k,), -1, jnp.int32)
-        pad_s = jnp.zeros((k_max - k,), jnp.int32)
         return dataclasses.replace(
             c,
-            burst_times=jnp.concatenate([jnp.asarray(c.burst_times, jnp.int32), pad_t]),
-            burst_sizes=jnp.concatenate([jnp.asarray(c.burst_sizes, jnp.int32), pad_s]),
+            burst_times=_pad_field(c.burst_times, c.n_bursts, kb_max, -1),
+            burst_sizes=_pad_field(c.burst_sizes, c.n_bursts, kb_max, 0),
+            node_crash_times=_pad_field(
+                c.node_crash_times, c.n_node_crashes, kc_max, -1
+            ),
+            node_crash_ids=_pad_field(
+                c.node_crash_ids, c.n_node_crashes, kc_max, -1
+            ),
         )
 
     return [_pad(c) for c in cfgs]

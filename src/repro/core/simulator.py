@@ -1,28 +1,40 @@
 """Fully-jitted multi-walk simulator (the paper's evaluation engine).
 
 One synchronous round (time t -> t+1):
-  1. every live walk hops to a uniform random neighbor;
-  2. failures strike (probabilistic, burst, Byzantine — Section II);
-  3. each node visited by >= 1 surviving walk "chooses one" (footnote 6),
+  1. the topology evolves (``GraphState``: scheduled/i.i.d. node crashes,
+     i.i.d. link failures, stochastic recoveries); a crashing node kills
+     the walks resident on it;
+  2. every surviving walk hops to a uniform random *available* neighbor
+     (down nodes/links are unreachable; a stranded walk holds position);
+  3. walk-level failures strike (probabilistic, burst, Byzantine —
+     Section II; Pac-Man absorption);
+  4. each node visited by >= 1 surviving walk "chooses one" (footnote 6),
      records return-time samples for *all* visitors, updates last-seen;
-  4. the chosen walk's node computes theta-hat (Eq. 1) and runs the
+  5. the chosen walk's node computes theta-hat (Eq. 1) and runs the
      protocol: DECAFORK fork / DECAFORK+ fork-or-terminate /
      MISSINGPERSON timeout replacement;
-  5. forks/terminations execute through the slot machinery.
+  6. forks/terminations execute through the slot machinery.
 
-The whole trajectory runs under one ``lax.scan``. Configs are pytrees
-with *traced numeric leaves* (see ``protocol.py`` / ``failures.py``), so
-the batching hierarchy is:
+The whole trajectory runs under one ``lax.scan``; the live topology is
+part of the scan carry, so downed nodes/links persist and recover across
+steps. Configs are pytrees with *traced numeric leaves* (see
+``protocol.py`` / ``failures.py``) — the topology knobs included — so the
+batching hierarchy is:
 
   ``run_simulation``  one (config, seed) trajectory;
   ``run_ensemble``    vmap over seeds — the paper's 50-seed figures;
-  ``run_sweep``       vmap over (scenario, seed): MANY failure/epsilon
-                      regimes x seeds in ONE compiled call, provided the
-                      scenarios share static structure (same algorithm,
-                      estimator_impl, max_walks, rt_bins, burst count).
+  ``run_sweep``       vmap over (scenario, seed): MANY failure/epsilon/
+                      topology regimes x seeds in ONE compiled call,
+                      provided the scenarios share static structure (same
+                      algorithm, estimator_impl, max_walks, rt_bins,
+                      burst + node-crash schedule lengths).
 
-``repro.sweep`` layers scenario stacking/grouping/padding and multi-device
-sharding on top of ``run_sweep``; benchmarks build on that layer.
+The static ``Graph`` stays a trace-time constant (the superset topology);
+``GraphState`` only masks it, so scenario rows vary *which parts are up
+when* without recompilation. With every topology knob disabled the masks
+stay full and each round is bitwise the static-graph round. ``repro.sweep``
+layers scenario stacking/grouping/padding and multi-device sharding on top
+of ``run_sweep``; benchmarks build on that layer.
 """
 from __future__ import annotations
 
@@ -38,6 +50,7 @@ from repro.core import protocol as prt
 from repro.core import walkers as wlk
 from repro.graphs.generators import Graph
 from repro.graphs.spectral import stationary_distribution
+from repro.graphs.state import GraphState, availability, init_graph_state, mirror_indices
 from repro.utils.prng import fold_in_time
 
 
@@ -49,6 +62,7 @@ class SimState(NamedTuple):
     byz_state: jax.Array  # scalar bool
     key: jax.Array
     theta_hist: jax.Array  # (n, TB) warmup theta-hat histogram (auto_eps)
+    graph: GraphState  # live topology masks (node_up, edge_up)
 
 
 class StepOutputs(NamedTuple):
@@ -61,7 +75,13 @@ class StepOutputs(NamedTuple):
     terminated: jax.Array  # (W,) walks deliberately terminated this step
 
 
-def init_state(n: int, pcfg: prt.ProtocolConfig, fcfg: flr.FailureConfig, key: jax.Array) -> SimState:
+def init_state(
+    n: int,
+    max_deg: int,
+    pcfg: prt.ProtocolConfig,
+    fcfg: flr.FailureConfig,
+    key: jax.Array,
+) -> SimState:
     W = pcfg.max_walks
     k_init, k_run = jax.random.split(key)
     walks = wlk.init_walks(pcfg.z0, W, n, k_init)
@@ -87,6 +107,7 @@ def init_state(n: int, pcfg: prt.ProtocolConfig, fcfg: flr.FailureConfig, key: j
         byz_state=jnp.asarray(fcfg.byz_start),
         key=k_run,
         theta_hist=jnp.zeros((n, tb), jnp.float32),
+        graph=init_graph_state(n, max_deg),
     )
 
 
@@ -101,6 +122,7 @@ def protocol_step(
     fcfg: flr.FailureConfig,
     neighbors: jax.Array,
     degrees: jax.Array,
+    mirror: jax.Array,
     pi: jax.Array | None,
 ):
     """One synchronous round; returns (next state, per-step outputs)."""
@@ -111,23 +133,33 @@ def protocol_step(
     k_burst = fold_in_time(key, t, 2)
     k_byz = fold_in_time(key, t, 3)
     k_dec = fold_in_time(key, t, 4)
+    k_topo = fold_in_time(key, t, 5)
 
     ws = state.walks
     n_before = jnp.sum(ws.active)
 
-    # 1. movement
-    ws = wlk.move_walks(ws, neighbors, degrees, k_move)
+    # 1. topology evolves; a crashing node kills its resident walks
+    gs = flr.step_topology(state.graph, t, fcfg, k_topo, neighbors, mirror)
+    ws = ws._replace(
+        active=flr.kill_resident_walks(ws.active, ws.pos, gs.node_up)
+    )
 
-    # 2. threat models
+    # 2. movement over the currently-available edges
+    ws = wlk.move_walks(
+        ws, neighbors, degrees, k_move, availability(gs, neighbors, degrees)
+    )
+
+    # 3. walk-level threat models
     active = flr.apply_probabilistic_failures(ws.active, t, fcfg, k_pfail)
     active = flr.apply_burst_failures(active, t, fcfg, k_burst)
     active, byz_state = flr.step_byzantine(
         active, ws.pos, t, state.byz_state, fcfg, k_byz
     )
+    active = flr.apply_pacman(active, ws.pos, t, fcfg)
     ws = ws._replace(active=active)
     n_failed = n_before - jnp.sum(active)
 
-    # 3. observations: return samples + last-seen updates for ALL visitors
+    # 4. observations: return samples + last-seen updates for ALL visitors
     last_seen = state.last_seen
     prev = last_seen[ws.pos, ws.track]  # (W,)
     r = t - prev
@@ -136,7 +168,7 @@ def protocol_step(
     upd = jnp.where(ws.active, t, est.NEVER)
     last_seen = last_seen.at[ws.pos, ws.track].max(upd, mode="drop")
 
-    # 4. estimation + decisions for chosen walks
+    # 5. estimation + decisions for chosen walks
     chosen = prt.choose_walks(ws.pos, ws.active, degrees.shape[0])
     enabled = t >= pcfg.protocol_start
     theta_hist = state.theta_hist
@@ -216,6 +248,7 @@ def protocol_step(
         byz_state=byz_state,
         key=key,
         theta_hist=theta_hist,
+        graph=gs,
     )
     out = StepOutputs(
         z=jnp.sum(ws.active),
@@ -229,14 +262,14 @@ def protocol_step(
     return new_state, out
 
 
-def _run_core(key, neighbors, degrees, pi, pcfg, fcfg, steps, n):
+def _run_core(key, neighbors, degrees, mirror, pi, pcfg, fcfg, steps, n):
     """Un-jitted single-trajectory scan; every batching wrapper traces
     through this one function so ensemble/sweep results are bitwise equal
     to the single-run path."""
-    state = init_state(n, pcfg, fcfg, key)
+    state = init_state(n, neighbors.shape[1], pcfg, fcfg, key)
 
     def body(s, _):
-        return protocol_step(s, pcfg, fcfg, neighbors, degrees, pi)
+        return protocol_step(s, pcfg, fcfg, neighbors, degrees, mirror, pi)
 
     return jax.lax.scan(body, state, None, length=steps)
 
@@ -244,10 +277,10 @@ def _run_core(key, neighbors, degrees, pi, pcfg, fcfg, steps, n):
 _run = jax.jit(_run_core, static_argnames=("steps", "n"))
 
 
-def _run_ensemble_core(keys, neighbors, degrees, pi, pcfg, fcfg, steps, n):
+def _run_ensemble_core(keys, neighbors, degrees, mirror, pi, pcfg, fcfg, steps, n):
     """(seeds,) keys -> StepOutputs with leading (seeds,) axis."""
     return jax.vmap(
-        lambda k: _run_core(k, neighbors, degrees, pi, pcfg, fcfg, steps, n)[1]
+        lambda k: _run_core(k, neighbors, degrees, mirror, pi, pcfg, fcfg, steps, n)[1]
     )(keys)
 
 
@@ -257,13 +290,15 @@ _run_ensemble = functools.partial(jax.jit, static_argnames=("steps", "n"))(
 
 
 @functools.partial(jax.jit, static_argnames=("steps", "n"))
-def _run_sweep(keys, neighbors, degrees, pi, pcfgs, fcfgs, steps, n):
+def _run_sweep(keys, neighbors, degrees, mirror, pi, pcfgs, fcfgs, steps, n):
     """Stacked configs (leaves with leading (S,) axis) + (seeds,) keys ->
     StepOutputs with leading (S, seeds) axes, all in one XLA program."""
 
     def one_scenario(pcfg, fcfg):
         return jax.vmap(
-            lambda k: _run_core(k, neighbors, degrees, pi, pcfg, fcfg, steps, n)[1]
+            lambda k: _run_core(
+                k, neighbors, degrees, mirror, pi, pcfg, fcfg, steps, n
+            )[1]
         )(keys)
 
     return jax.vmap(one_scenario)(pcfgs, fcfgs)
@@ -272,12 +307,13 @@ def _run_sweep(keys, neighbors, degrees, pi, pcfgs, fcfgs, steps, n):
 def _graph_arrays(graph: Graph, pcfg: prt.ProtocolConfig):
     neighbors = jnp.asarray(graph.neighbors)
     degrees = jnp.asarray(graph.degrees)
+    mirror = jnp.asarray(mirror_indices(graph))
     pi = (
         jnp.asarray(stationary_distribution(graph), jnp.float32)
         if pcfg.analytic_survival
         else None
     )
-    return neighbors, degrees, pi
+    return neighbors, degrees, mirror, pi
 
 
 def run_simulation(
@@ -290,8 +326,8 @@ def run_simulation(
     """Run one trajectory; returns (final SimState, StepOutputs over time)."""
     if isinstance(key, int):
         key = jax.random.key(key)
-    neighbors, degrees, pi = _graph_arrays(graph, pcfg)
-    return _run(key, neighbors, degrees, pi, pcfg, fcfg, steps, graph.n)
+    neighbors, degrees, mirror, pi = _graph_arrays(graph, pcfg)
+    return _run(key, neighbors, degrees, mirror, pi, pcfg, fcfg, steps, graph.n)
 
 
 def run_ensemble(
@@ -310,8 +346,10 @@ def run_ensemble(
     if isinstance(base_key, int):
         base_key = jax.random.key(base_key)
     keys = jax.random.split(base_key, seeds)
-    neighbors, degrees, pi = _graph_arrays(graph, pcfg)
-    return _run_ensemble(keys, neighbors, degrees, pi, pcfg, fcfg, steps, graph.n)
+    neighbors, degrees, mirror, pi = _graph_arrays(graph, pcfg)
+    return _run_ensemble(
+        keys, neighbors, degrees, mirror, pi, pcfg, fcfg, steps, graph.n
+    )
 
 
 def run_sweep(
@@ -328,7 +366,8 @@ def run_sweep(
     ``scenarios`` is a sequence of ``(pcfg, fcfg)`` pairs (or any objects
     with ``.pcfg``/``.fcfg``) sharing one static structure: same
     ``algorithm`` / ``estimator_impl`` / ``max_walks`` / ``rt_bins`` /
-    burst count (pad with ``failures.pad_bursts``). Use
+    burst + node-crash schedule lengths (pad with ``failures.pad_bursts``).
+    Use
     ``repro.sweep.run_scenarios`` to mix static structures — it groups
     them and issues one compiled call per group.
 
@@ -347,14 +386,16 @@ def run_sweep(
     keys = jax.random.split(base_key, seeds)
     pcfgs, fcfgs = stack_configs(scenarios)
     pcfg0 = as_pair(scenarios[0])[0]
-    neighbors, degrees, pi = _graph_arrays(graph, pcfg0)
+    neighbors, degrees, mirror, pi = _graph_arrays(graph, pcfg0)
     if sharded or sharded is None:
         from repro.sweep.engine import maybe_shard_scenarios
 
         pcfgs, fcfgs = maybe_shard_scenarios(
             pcfgs, fcfgs, len(scenarios), explicit=bool(sharded)
         )
-    return _run_sweep(keys, neighbors, degrees, pi, pcfgs, fcfgs, steps, graph.n)
+    return _run_sweep(
+        keys, neighbors, degrees, mirror, pi, pcfgs, fcfgs, steps, graph.n
+    )
 
 
 # ---------------------------------------------------------------------------

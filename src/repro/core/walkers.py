@@ -33,18 +33,74 @@ def init_walks(z0: int, max_walks: int, n_nodes: int, key: jax.Array) -> WalkSta
     return WalkState(pos=pos0, active=slots < z0, track=slots)
 
 
-def move_walks(ws: WalkState, neighbors: jax.Array, degrees: jax.Array, key: jax.Array) -> WalkState:
-    """One synchronous hop: each active walk moves to a uniform neighbor."""
+def move_walks(
+    ws: WalkState,
+    neighbors: jax.Array,
+    degrees: jax.Array,
+    key: jax.Array,
+    avail: jax.Array | None = None,
+) -> WalkState:
+    """One synchronous hop: each active walk moves to a uniform *available*
+    neighbor.
+
+    ``avail`` is the (n, max_deg) traversability mask from
+    ``graphs.state.availability`` (None == everything up). Sampling is
+    branch-free over masked slots: draw u ~ U[0,1), scale by the count of
+    available incident edges, and take the edge of that rank. When every
+    mask is full the available slots are exactly ``[0, degree)`` in order,
+    so rank == slot index and the hop is bitwise the unmasked
+    ``neighbors[pos, min(floor(u * degree), degree - 1)]``. A walk whose
+    node has no available incident edge (stranded on an isolated node)
+    holds position.
+    """
     W = ws.pos.shape[0]
+    D = neighbors.shape[1]
     u = jax.random.uniform(key, (W,))
-    deg = degrees[ws.pos]
-    idx = jnp.minimum((u * deg).astype(jnp.int32), deg - 1)
-    nxt = neighbors[ws.pos, idx]
-    return ws._replace(pos=jnp.where(ws.active, nxt, ws.pos))
+    if avail is None:
+        row_mask = jnp.arange(D, dtype=degrees.dtype)[None, :] < degrees[ws.pos, None]
+    else:
+        row_mask = avail[ws.pos]  # (W, D)
+    adeg = jnp.sum(row_mask, axis=1, dtype=degrees.dtype)  # == degree when full
+    idx = jnp.minimum((u * adeg).astype(jnp.int32), adeg - 1)
+    # rank available slots per row; select the idx-th one
+    rank = jnp.cumsum(row_mask, axis=1) - 1
+    sel = jnp.argmax((rank == idx[:, None]) & row_mask, axis=1)
+    nxt = neighbors[ws.pos, sel]
+    can_move = ws.active & (adeg > 0)
+    return ws._replace(pos=jnp.where(can_move, nxt, ws.pos))
 
 
 def execute_terminations(ws: WalkState, term: jax.Array) -> WalkState:
     return ws._replace(active=ws.active & ~term)
+
+
+def allocate_fork_slots(active: jax.Array, ev_mask: jax.Array):
+    """Match fork events to free walk slots (capacity-capped, drop overflow).
+
+    Ranks the free slots and the requested events, then pairs the r-th
+    event with the r-th free slot. Returns ``(safe_slot, ev_ok, ev_slot)``:
+    ``ev_ok`` marks events that got a slot, ``ev_slot`` is the slot each
+    surviving event lands in (garbage where ``~ev_ok``), and ``safe_slot``
+    is ``ev_slot`` with dropped events redirected to the out-of-range index
+    ``W`` so callers can scatter with ``mode="drop"``. Shared by the
+    single-host path (``execute_forks``) and the shard_map'd distributed
+    step, which must allocate identically to stay replicated.
+    """
+    W = active.shape[0]
+    slots = jnp.arange(W, dtype=jnp.int32)
+    free = ~active
+    n_free = jnp.sum(free)
+    free_rank = jnp.cumsum(free) - 1  # rank of each slot among free ones
+    ev_rank = jnp.cumsum(ev_mask) - 1  # rank of each event
+    ev_ok = ev_mask & (ev_rank < n_free)
+    rank_to_slot = (
+        jnp.zeros((W,), jnp.int32)
+        .at[jnp.where(free, free_rank, W)]
+        .set(slots, mode="drop")
+    )
+    ev_slot = rank_to_slot[jnp.clip(ev_rank, 0, W - 1)]  # valid where ev_ok
+    safe_slot = jnp.where(ev_ok, ev_slot, W)  # W = drop
+    return safe_slot, ev_ok, ev_slot
 
 
 def execute_forks(
@@ -65,19 +121,7 @@ def execute_forks(
     """
     W = ws.pos.shape[0]
     slots = jnp.arange(W, dtype=jnp.int32)
-    free = ~ws.active
-    n_free = jnp.sum(free)
-    # rank r-th free slot / r-th event; match them up
-    free_rank = jnp.cumsum(free) - 1  # rank of each slot among free ones
-    ev_rank = jnp.cumsum(ev_mask) - 1  # rank of each event
-    ev_ok = ev_mask & (ev_rank < n_free)
-    rank_to_slot = (
-        jnp.zeros((W,), jnp.int32)
-        .at[jnp.where(free, free_rank, W)]
-        .set(slots, mode="drop")
-    )
-    ev_slot = rank_to_slot[jnp.clip(ev_rank, 0, W - 1)]  # valid where ev_ok
-    safe_slot = jnp.where(ev_ok, ev_slot, W)  # W = drop
+    safe_slot, ev_ok, ev_slot = allocate_fork_slots(ws.active, ev_mask)
 
     if ev_parent is None:
         ev_parent = jnp.arange(ev_mask.shape[0], dtype=jnp.int32)

@@ -9,6 +9,12 @@ from repro.graphs.generators import (
     make_graph,
     GRAPH_FAMILIES,
 )
+from repro.graphs.state import (
+    GraphState,
+    availability,
+    init_graph_state,
+    mirror_indices,
+)
 from repro.graphs.spectral import (
     stationary_distribution,
     expected_return_times,
@@ -21,6 +27,10 @@ from repro.graphs.spectral import (
 
 __all__ = [
     "Graph",
+    "GraphState",
+    "availability",
+    "init_graph_state",
+    "mirror_indices",
     "complete_graph",
     "erdos_renyi_graph",
     "power_law_graph",

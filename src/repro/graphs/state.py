@@ -1,0 +1,94 @@
+"""Dynamic topology as traced runtime state.
+
+The paper's opening premise is that random walks "can fail due to node or
+link failures" — which requires the *graph itself* to be mutable at run
+time, not a constant frozen into the compiled program. ``GraphState``
+carries the live topology as two boolean masks over the static padded
+adjacency of a :class:`repro.graphs.generators.Graph`:
+
+  node_up : (n,) bool        — node i is operational
+  edge_up : (n, max_deg) bool — directed slot (i, k), i.e. the edge from i
+                                to ``neighbors[i, k]``, is operational
+
+Both leaves are jax arrays threaded through the simulator's ``lax.scan``
+carry, so crashes persist across steps, recoveries are stochastic events,
+and every knob that drives them lives in ``FailureConfig`` as a traced
+(vmap-batchable) leaf. The static ``Graph`` remains the superset topology:
+dynamic state can only *mask* edges, never add them.
+
+Undirected edges appear in two slots — (i, k) and its mirror (j, k') with
+``neighbors[j, k'] == i``. ``mirror_indices`` precomputes that involution
+(numpy, trace-time) so link-failure sampling can draw one uniform per
+undirected edge and keep the two directed slots in lockstep.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graphs.generators import Graph
+
+
+class GraphState(NamedTuple):
+    """Live topology masks; all-True == the static graph (the no-op state)."""
+
+    node_up: jax.Array  # (n,) bool
+    edge_up: jax.Array  # (n, max_deg) bool, aligned with Graph.neighbors
+
+
+def init_graph_state(n: int, max_deg: int) -> GraphState:
+    """Fully-operational topology (every mask True)."""
+    return GraphState(
+        node_up=jnp.ones((n,), bool),
+        edge_up=jnp.ones((n, max_deg), bool),
+    )
+
+
+def mirror_indices(graph: Graph) -> np.ndarray:
+    """(n, max_deg) int32 M with ``neighbors[neighbors[i,k], M[i,k]] == i``.
+
+    Padded slots (k >= degrees[i]) map to themselves — harmless because
+    availability masks them out before any sampling. O(n * max_deg) via a
+    sort over directed-edge keys; memoized on the (immutable) graph since
+    every run_* call needs it.
+    """
+    cached = getattr(graph, "_mirror_cache", None)
+    if cached is not None:
+        return cached
+    nbrs = np.asarray(graph.neighbors)
+    degs = np.asarray(graph.degrees)
+    n, D = nbrs.shape
+    src = np.repeat(np.arange(n, dtype=np.int64), D).reshape(n, D)
+    # directed-edge keys are unique (simple graph, no self loops except
+    # padding, and padding keys i*n+i are overwritten below anyway)
+    fwd = src * n + nbrs  # key of slot (i, k): edge i -> j
+    rev = nbrs.astype(np.int64) * n + src  # key of the mirrored slot j -> i
+    order = np.argsort(fwd.ravel(), kind="stable")
+    pos = np.searchsorted(fwd.ravel()[order], rev.ravel())
+    mirror = (order[np.clip(pos, 0, n * D - 1)] % D).astype(np.int32).reshape(n, D)
+    pad = np.arange(D, dtype=np.int32)[None, :] >= degs[:, None]
+    mirror[pad] = np.broadcast_to(np.arange(D, dtype=np.int32), (n, D))[pad]
+    object.__setattr__(graph, "_mirror_cache", mirror)  # frozen dataclass
+    return mirror
+
+
+def availability(
+    gs: GraphState, neighbors: jax.Array, degrees: jax.Array
+) -> jax.Array:
+    """(n, max_deg) bool: slot (i, k) is traversable right now.
+
+    An incident edge is available iff it exists in the static graph
+    (k < degree), the edge itself is up, and both endpoints are up. With a
+    fully-up ``GraphState`` this is exactly the static within-degree mask.
+    """
+    D = neighbors.shape[1]
+    within = jnp.arange(D, dtype=degrees.dtype)[None, :] < degrees[:, None]
+    return (
+        within
+        & gs.edge_up
+        & gs.node_up[:, None]
+        & gs.node_up[neighbors]
+    )

@@ -7,8 +7,9 @@ drop-in replacements the model code selects via ``cfg.use_pallas``:
   theta_sums_pallas(...)              <-> kernels.ref.theta_sums_ref
   ssd_pallas(x, dt, a, b, c, chunk)   <-> ssm.ssd_chunked
 
-On this CPU container the kernels always run with interpret=True; on a
-real TPU pass interpret=False (the default flips on TPU platforms).
+``interpret`` defaults are platform-aware everywhere (wrappers AND the
+underlying kernels): emulated on CPU, compiled on TPU — see
+``kernels.platform.default_interpret``. Pass an explicit bool to override.
 """
 from __future__ import annotations
 
@@ -16,12 +17,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.platform import default_interpret as _default_interpret
 from repro.kernels.ssd_scan import ssd_intra_chunk
 from repro.kernels.theta_survival import theta_sums
-
-
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 def attention_pallas(q, k, v, window: int = 0, interpret: bool | None = None):

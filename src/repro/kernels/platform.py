@@ -1,0 +1,13 @@
+"""Platform detection shared by the Pallas kernels and their wrappers.
+
+Leaf module (no intra-package imports) so both ``kernels/ops.py`` and the
+kernel modules themselves can use it without an import cycle.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def default_interpret() -> bool:
+    """Pallas ``interpret`` default: emulate on CPU, compile on TPU."""
+    return jax.default_backend() != "tpu"

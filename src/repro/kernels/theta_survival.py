@@ -31,6 +31,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.platform import default_interpret
+
 
 DEFAULT_BLOCK_NODES = 8
 
@@ -64,9 +66,15 @@ def theta_sums(
     t: jax.Array,  # scalar int32
     *,
     block_nodes: int = DEFAULT_BLOCK_NODES,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
-    """sum_c S_i(t - last_seen[i,c]) for every node i; (n,) f32."""
+    """sum_c S_i(t - last_seen[i,c]) for every node i; (n,) f32.
+
+    ``interpret=None`` resolves platform-aware: emulated on CPU, compiled
+    on TPU (``kernels.platform.default_interpret``).
+    """
+    if interpret is None:
+        interpret = default_interpret()
     n, W = last_seen.shape
     B = hist.shape[1]
     bn = min(block_nodes, n)

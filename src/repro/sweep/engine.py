@@ -11,8 +11,9 @@ is placed across the 'data' axis of the local mesh (``launch/mesh.py``),
 so groups split across devices; on a single device everything stays
 local with zero overhead.
 
-Adding a new regime (Pac-Man-style adversarial removals, multi-stream
-variants, ...) is appending a Scenario row — no new compilation units.
+Adding a new regime (node-crash schedules, link-failure churn, Pac-Man
+adversarial removals, multi-stream variants, ...) is appending a Scenario
+row — no new compilation units.
 """
 from __future__ import annotations
 

@@ -2,8 +2,11 @@
 
 A *scenario* is one (ProtocolConfig, FailureConfig) pair — one curve of a
 paper figure. Scenarios whose configs share static structure (algorithm,
-estimator, slot capacity, histogram resolution, burst count, fork_prob
-presence) batch into a single compiled program; ``stack_configs`` builds
+estimator, slot capacity, histogram resolution, burst/node-crash schedule
+lengths, fork_prob presence) batch into a single compiled program —
+topology-failure regimes (crash schedules, churn and link rates, Pac-Man
+node) are ordinary traced leaves and need no grouping at all;
+``stack_configs`` builds
 the stacked config pytrees (every numeric leaf gains a leading scenario
 axis) and ``group_scenarios`` partitions an arbitrary scenario list into
 batchable groups.
@@ -38,20 +41,26 @@ def as_pair(scenario) -> Tuple[ProtocolConfig, FailureConfig]:
 
 
 def static_signature(scenario) -> tuple:
-    """Hashable program-shape key: scenarios batch iff signatures match."""
+    """Hashable program-shape key: scenarios batch iff signatures match.
+
+    The final element collects the shape-bearing schedule lengths (walk
+    bursts, scheduled node crashes); ``group_scenarios`` strips it because
+    ``pad_bursts`` reconciles those at stacking time.
+    """
     pcfg, fcfg = as_pair(scenario)
     return (
         pcfg.static_fields,
         pcfg.fork_prob is None,  # None vs value changes the pytree structure
-        fcfg.n_bursts,
+        (fcfg.n_bursts, fcfg.n_node_crashes),
     )
 
 
 def group_scenarios(scenarios: Sequence) -> list:
     """Partition into batchable groups: list of (signature, [indices]).
 
-    Burst-count differences are reconciled later by ``pad_bursts``, so the
-    grouping key ignores ``n_bursts``; everything else must match exactly.
+    Schedule-length differences (bursts, node crashes) are reconciled
+    later by ``pad_bursts``, so the grouping key ignores them; everything
+    else must match exactly.
     """
     groups: dict = {}
     order = []

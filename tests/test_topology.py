@@ -1,0 +1,335 @@
+"""Dynamic-topology failure layer: no-op equivalence + failure semantics.
+
+The refactor's contract (ISSUE 2): with every topology knob disabled the
+simulator is *bitwise* the PR-1 simulator — verified against golden
+trajectories captured at the pre-GraphState commit
+(``tests/golden/capture_pr1.py``) — and with knobs armed the new failure
+modes (node crashes, link failures, Pac-Man absorption) behave per spec.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FailureConfig, ProtocolConfig, run_ensemble, run_simulation
+from repro.core import failures as flr
+from repro.core import walkers as wlk
+from repro.core.simulator import run_sweep
+from repro.graphs import (
+    GraphState,
+    availability,
+    init_graph_state,
+    mirror_indices,
+    random_regular_graph,
+    ring_graph,
+)
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden", "pr1_trajectories.json")
+
+# must mirror tests/golden/capture_pr1.py
+N, DEG, GRAPH_SEED = 24, 4, 3
+W, Z0, STEPS, SEEDS, BASE_KEY = 10, 5, 60, 2, 7
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return random_regular_graph(N, DEG, seed=GRAPH_SEED)
+
+
+@pytest.fixture(scope="module")
+def golden():
+    with open(GOLDEN) as f:
+        return json.load(f)
+
+
+def _pcfg(alg, **kw):
+    base = dict(algorithm=alg, z0=Z0, max_walks=W, rt_bins=32, protocol_start=10)
+    base.update(kw)
+    return ProtocolConfig(**base)
+
+
+def _golden_cases():
+    burst = FailureConfig(burst_times=(20,), burst_sizes=(2,))
+    byz = FailureConfig(
+        burst_times=(25,), burst_sizes=(1,), p_fail=0.002,
+        byzantine_node=1, p_byz=0.01, byz_start_time=15,
+    )
+    return [
+        ("decafork/burst", _pcfg("decafork", eps=1.8), burst),
+        ("decafork+/byz", _pcfg("decafork+", eps=1.6, eps2=6.0), byz),
+        ("missingperson/burst", _pcfg("missingperson", eps_mp=20.0), burst),
+        ("none/pfail", _pcfg("none"), FailureConfig(p_fail=0.004)),
+    ]
+
+
+def _assert_matches_golden(outs, ref: dict, label: str):
+    for name, arr in zip(outs._fields, outs):
+        got = np.asarray(arr)
+        want = np.asarray(ref[name], dtype=got.dtype)
+        np.testing.assert_array_equal(got, want, err_msg=f"{label}: field {name}")
+
+
+# ---------------------------------------------------------------------------
+# bitwise no-op equivalence vs PR-1 golden trajectories
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("case", range(4))
+def test_disabled_topology_is_bitwise_pr1_ensemble(graph, golden, case):
+    """All topology knobs at their defaults == the pre-refactor engine."""
+    name, pcfg, fcfg = _golden_cases()[case]
+    outs = run_ensemble(graph, pcfg, fcfg, steps=STEPS, seeds=SEEDS,
+                        base_key=BASE_KEY)
+    _assert_matches_golden(outs, golden["ensemble"][name], name)
+
+
+def test_disabled_topology_is_bitwise_pr1_sweep(graph, golden):
+    scenarios = [
+        (_pcfg("decafork", eps=1.4),
+         FailureConfig(burst_times=(20,), burst_sizes=(2,))),
+        (_pcfg("decafork", eps=2.2),
+         FailureConfig(burst_times=(30,), burst_sizes=(1,), p_fail=0.002)),
+    ]
+    outs = run_sweep(graph, scenarios, steps=STEPS, seeds=SEEDS, base_key=BASE_KEY)
+    _assert_matches_golden(outs, golden["sweep"]["decafork/eps-grid"], "sweep")
+
+
+def test_explicit_zero_knobs_match_defaults(graph):
+    """Explicitly-zero topology knobs are the same numeric no-op as the
+    default config (rates 0, ids -1, empty schedules share the program)."""
+    pcfg = _pcfg("decafork", eps=1.8)
+    base = FailureConfig(burst_times=(20,), burst_sizes=(2,))
+    zeroed = FailureConfig(
+        burst_times=(20,), burst_sizes=(2,),
+        p_node_fail=0.0, p_node_recover=0.0, p_link_fail=0.0,
+        p_link_recover=0.0, pacman_node=-1, node_crash_times=(-1,),
+        node_crash_ids=(-1,),
+    )
+    a = run_ensemble(graph, pcfg, base, steps=STEPS, seeds=SEEDS, base_key=BASE_KEY)
+    b = run_ensemble(graph, pcfg, zeroed, steps=STEPS, seeds=SEEDS, base_key=BASE_KEY)
+    for name, x, y in zip(a._fields, a, b):
+        np.testing.assert_array_equal(
+            np.asarray(x), np.asarray(y), err_msg=f"field {name}"
+        )
+
+
+# ---------------------------------------------------------------------------
+# masked movement
+# ---------------------------------------------------------------------------
+
+
+def test_move_walks_full_mask_bitwise_equal(graph):
+    """Masked sampling over a fully-up GraphState == unmasked sampling."""
+    neighbors = jnp.asarray(graph.neighbors)
+    degrees = jnp.asarray(graph.degrees)
+    gs = init_graph_state(graph.n, graph.max_degree)
+    key = jax.random.key(42)
+    ws = wlk.init_walks(Z0, W, graph.n, jax.random.key(1))
+    for i in range(5):
+        k = jax.random.fold_in(key, i)
+        plain = wlk.move_walks(ws, neighbors, degrees, k)
+        masked = wlk.move_walks(
+            ws, neighbors, degrees, k, availability(gs, neighbors, degrees)
+        )
+        np.testing.assert_array_equal(np.asarray(plain.pos), np.asarray(masked.pos))
+        ws = masked
+
+
+def test_stranded_walk_holds_position():
+    """A walk on a node with no available incident edge stays put."""
+    g = ring_graph(6)
+    neighbors = jnp.asarray(g.neighbors)
+    degrees = jnp.asarray(g.degrees)
+    # sever both edges incident to node 2 (both directed slots each)
+    edge_up = np.ones((g.n, g.max_degree), bool)
+    for k in range(int(g.degrees[2])):
+        j = int(g.neighbors[2, k])
+        edge_up[2, k] = False
+        edge_up[j, np.nonzero(g.neighbors[j] == 2)[0][0]] = False
+    gs = GraphState(node_up=jnp.ones((g.n,), bool), edge_up=jnp.asarray(edge_up))
+    ws = wlk.WalkState(
+        pos=jnp.array([2, 0], jnp.int32),
+        active=jnp.array([True, True]),
+        track=jnp.arange(2, dtype=jnp.int32),
+    )
+    out = wlk.move_walks(
+        ws, neighbors, degrees, jax.random.key(0),
+        availability(gs, neighbors, degrees),
+    )
+    assert int(out.pos[0]) == 2  # stranded: held position
+    assert int(out.pos[1]) != 0  # the free walk moved
+    assert bool(out.active[0])  # stranding is not death
+
+
+def test_availability_respects_down_nodes():
+    g = ring_graph(5)
+    gs = init_graph_state(g.n, g.max_degree)
+    gs = gs._replace(node_up=gs.node_up.at[3].set(False))
+    av = np.asarray(availability(gs, jnp.asarray(g.neighbors), jnp.asarray(g.degrees)))
+    nbrs = np.asarray(g.neighbors)
+    # no edge into node 3, and nothing out of it
+    assert not av[3].any()
+    for i in range(g.n):
+        for k in range(int(g.degrees[i])):
+            if nbrs[i, k] == 3:
+                assert not av[i, k]
+
+
+def test_mirror_indices_involution(graph):
+    m = mirror_indices(graph)
+    nbrs = np.asarray(graph.neighbors)
+    degs = np.asarray(graph.degrees)
+    for i in range(graph.n):
+        for k in range(degs[i]):
+            j = nbrs[i, k]
+            assert nbrs[j, m[i, k]] == i
+            assert m[j, m[i, k]] == k  # involution
+
+
+# ---------------------------------------------------------------------------
+# topology failure semantics
+# ---------------------------------------------------------------------------
+
+
+def test_scheduled_crash_kills_resident_walks(graph):
+    """Crashing every start node at t=0 kills the whole population."""
+    pcfg = _pcfg("none")
+    # i.i.d. crash with p=1 downs every node at t=0: all walks die at once
+    fcfg = FailureConfig(p_node_fail=1.0)
+    _, outs = run_simulation(graph, pcfg, fcfg, steps=5, key=0)
+    z = np.asarray(outs.z)
+    assert (z == 0).all()
+    assert int(np.asarray(outs.failures)[0]) == Z0
+
+
+def test_scheduled_crash_and_recovery(graph):
+    """A scheduled crash downs one node; resident walks die, others
+    survive, and with p_node_recover=1 the node is back next step."""
+    pcfg = _pcfg("none")
+    fcfg = FailureConfig(
+        node_crash_times=(3,), node_crash_ids=(0,), p_node_recover=1.0
+    )
+    final, outs = run_simulation(graph, pcfg, fcfg, steps=10, key=2)
+    z = np.asarray(outs.z)
+    lost = int(np.asarray(outs.failures).sum())
+    assert (z[3:] == Z0 - lost).all()  # only the resident kills at t=3
+    assert bool(np.asarray(final.graph.node_up).all())  # recovered
+
+
+def test_permanent_link_failures_strand_walks():
+    """p_link_fail=1 with no recovery severs every edge: all walks freeze
+    in place but stay alive (link loss is not walk death)."""
+    g = ring_graph(8)
+    pcfg = ProtocolConfig(algorithm="none", z0=4, max_walks=8)
+    fcfg = FailureConfig(p_link_fail=1.0)
+    final, outs = run_simulation(g, pcfg, fcfg, steps=6, key=1)
+    assert (np.asarray(outs.z) == 4).all()
+    assert not bool(np.asarray(final.graph.edge_up).any())
+    # frozen: every edge is down before the first hop, so positions are
+    # identical after 6 and after 12 steps (same key -> same initial spots)
+    pos0 = np.asarray(final.walks.pos)
+    final2, outs2 = run_simulation(g, pcfg, fcfg, steps=12, key=1)
+    assert (np.asarray(outs2.z) == 4).all()
+    np.testing.assert_array_equal(pos0, np.asarray(final2.walks.pos))
+
+
+def test_link_failure_symmetry(graph):
+    """step_topology keeps the two directed slots of an edge in lockstep."""
+    neighbors = jnp.asarray(graph.neighbors)
+    degrees = jnp.asarray(graph.degrees)
+    mirror = jnp.asarray(mirror_indices(graph))
+    gs = init_graph_state(graph.n, graph.max_degree)
+    fcfg = FailureConfig(p_link_fail=0.4, p_link_recover=0.3)
+    for t in range(6):
+        gs = flr.step_topology(
+            gs, jnp.int32(t), fcfg, jax.random.key(t), neighbors, mirror
+        )
+        eu = np.asarray(gs.edge_up)
+        nbrs = np.asarray(graph.neighbors)
+        m = np.asarray(mirror)
+        for i in range(graph.n):
+            for k in range(int(graph.degrees[i])):
+                j = nbrs[i, k]
+                assert eu[i, k] == eu[j, m[i, k]], (t, i, k)
+
+
+def test_pacman_absorbs_all_walks(graph):
+    """An armed Pac-Man eventually eats the whole (unregulated) walk
+    population — every walk that steps onto it disappears silently."""
+    pcfg = _pcfg("none")
+    fcfg = FailureConfig(pacman_node=0, pacman_start_time=0)
+    _, outs = run_simulation(graph, pcfg, fcfg, steps=2000, key=3)
+    z = np.asarray(outs.z)
+    assert z[-1] == 0
+    assert (np.diff(z) <= 0).all()  # absorption only, never regrowth
+
+
+def test_pacman_start_time_gates_absorption(graph):
+    pcfg = _pcfg("none")
+    fcfg = FailureConfig(pacman_node=0, pacman_start_time=50)
+    _, outs = run_simulation(graph, pcfg, fcfg, steps=100, key=3)
+    z = np.asarray(outs.z)
+    assert (z[:49] == Z0).all()  # honest before onset
+
+
+def test_crashed_byzantine_node_is_harmless(graph):
+    """Edge case from the issue: crash the Byzantine node. Its resident
+    walks die with the crash, but afterwards no walk can step onto it, so
+    the Byzantine kill mechanism never fires again."""
+    pcfg = _pcfg("none")
+    byz_only = FailureConfig(byzantine_node=1, p_byz=0.0, byz_start=True,
+                             byz_start_time=0)
+    both = FailureConfig(byzantine_node=1, p_byz=0.0, byz_start=True,
+                         byz_start_time=0,
+                         node_crash_times=(0,), node_crash_ids=(1,))
+    _, outs_byz = run_simulation(graph, pcfg, byz_only, steps=400, key=5)
+    _, outs_both = run_simulation(graph, pcfg, both, steps=400, key=5)
+    z_byz = np.asarray(outs_byz.z)
+    z_both = np.asarray(outs_both.z)
+    # byz node alone keeps killing visitors over time
+    assert z_byz[-1] < Z0
+    # crashed byz node: at most the t=0 resident kills, then a plateau
+    assert (z_both == z_both[-1]).all() or (np.diff(z_both) <= 0).all()
+    assert (np.diff(z_both[1:]) == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# sweep integration: topology knobs as scenario rows
+# ---------------------------------------------------------------------------
+
+
+def test_topology_scenarios_batch_and_match_ensemble(graph):
+    """Node-crash / link-failure / Pac-Man rows co-batch in one sweep and
+    stay bitwise equal to their per-scenario ensembles."""
+    pcfg = _pcfg("decafork", eps=1.8)
+    scenarios = [
+        (pcfg, FailureConfig(node_crash_times=(20,), node_crash_ids=(2,),
+                             p_node_recover=0.05)),
+        (pcfg, FailureConfig(p_link_fail=0.01, p_link_recover=0.2)),
+        (pcfg, FailureConfig(pacman_node=0, pacman_start_time=30)),
+        (pcfg, FailureConfig(p_node_fail=0.002, p_node_recover=0.1)),
+    ]
+    out = run_sweep(graph, scenarios, steps=STEPS, seeds=SEEDS, base_key=BASE_KEY)
+    assert out.z.shape == (4, SEEDS, STEPS)
+    for i, (pc, fc) in enumerate(scenarios):
+        ref = run_ensemble(graph, pc, fc, steps=STEPS, seeds=SEEDS,
+                           base_key=BASE_KEY)
+        for name, a, b in zip(ref._fields, ref, out):
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b[i]),
+                err_msg=f"scenario{i}: field {name}",
+            )
+
+
+def test_pad_bursts_pads_node_crash_schedules():
+    a = FailureConfig(node_crash_times=(5, 9), node_crash_ids=(1, 2))
+    b = FailureConfig(burst_times=(7,), burst_sizes=(2,))
+    pa, pb = flr.pad_bursts([a, b])
+    assert pa.n_bursts == pb.n_bursts == 1
+    assert pa.n_node_crashes == pb.n_node_crashes == 2
+    assert np.asarray(pb.node_crash_times).tolist() == [-1, -1]
+    assert np.asarray(pb.node_crash_ids).tolist() == [-1, -1]
+    assert np.asarray(pa.burst_times).tolist() == [-1]
