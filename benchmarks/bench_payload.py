@@ -1,0 +1,159 @@
+"""BENCH: fused in-scan RW-SGD payload vs the per-hop Python loop.
+
+Workload: the end-to-end decentralized-training example — DECAFORK walks
+carrying model replicas over a regular graph, one local SGD step per hop,
+a mid-run burst failure — at the example's smoke-model size, identical
+configs and seeds in both arms:
+
+  - ``fused``  : ``run_simulation(..., payload=RwSgdPayload(...))`` —
+                 protocol round, replica forking, batch sampling and the
+                 vmapped train step all inside ONE ``lax.scan`` / ONE
+                 device dispatch for the whole trajectory;
+  - ``per_hop``: the pre-payload engine (the old
+                 ``examples/decentralized_training.py`` loop): a jitted
+                 ``protocol_step`` per hop, a host round-trip to inspect
+                 ``fork_parent``, a ``fork_replica`` dispatch when forks
+                 fired, then a jitted batch-sample + train dispatch —
+                 3-4 dispatches and one device->host sync per hop.
+
+Each arm runs twice: ``cold`` includes compilation (the end-to-end
+number a user sees), ``warm`` re-runs with everything cached (isolates
+dispatch/sync overhead from compile amortization). Emits BENCH json
+(``results/bench_payload.json``) with wall clocks and speedup ratios,
+``bench_sweep.json``-style.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import FULL, save_result
+from repro.configs import get_smoke_config
+from repro.core.failures import FailureConfig
+from repro.core.protocol import ProtocolConfig
+from repro.core.simulator import init_state, protocol_step, run_simulation
+from repro.data import make_markov_task, sample_batch
+from repro.graphs import random_regular_graph
+from repro.graphs.state import mirror_indices
+from repro.models.model import Model
+from repro.optim import RwSgdPayload, adamw, fork_replica, init_replicas
+from repro.optim.rw_sgd import replica_train_step
+
+STEPS = 1000 if FULL else 200
+N, DEG, Z0, W = 32, 8, 4, 8
+BURST_AT = STEPS // 2
+PROTO_START = STEPS // 4
+LOCAL_BATCH, SEQ = 2, 32
+SEED = 0
+
+
+def _setup():
+    g = random_regular_graph(N, DEG, seed=0)
+    pcfg = ProtocolConfig(
+        algorithm="decafork", z0=Z0, max_walks=W, eps=1.2,
+        protocol_start=PROTO_START, rt_bins=512,
+    )
+    fcfg = FailureConfig(burst_times=(BURST_AT,), burst_sizes=(3,))
+    cfg = get_smoke_config("paper_rwsgd")
+    model = Model(cfg)
+    task = make_markov_task(cfg.vocab_size)
+    opt = adamw(3e-3)
+    return g, pcfg, fcfg, model, task, opt
+
+
+def bench_fused(g, pcfg, fcfg, payload):
+    t0 = time.time()
+    (_, _), (outs, learn) = run_simulation(
+        g, pcfg, fcfg, steps=STEPS, key=SEED, payload=payload
+    )
+    jax.block_until_ready(learn.mean_loss)
+    return time.time() - t0, np.asarray(outs.z), np.asarray(learn.mean_loss)
+
+
+def bench_per_hop(g, pcfg, fcfg, model, task, opt):
+    """The old example's engine, verbatim structure: per-hop dispatches."""
+    neighbors = jnp.asarray(g.neighbors)
+    degrees = jnp.asarray(g.degrees)
+    mirror = jnp.asarray(mirror_indices(g))
+    key = jax.random.key(SEED)
+    rs = init_replicas(model.init, opt.init, key, max_walks=W)
+    train = jax.jit(replica_train_step(model.loss, opt))
+    step_fn = jax.jit(
+        lambda s: protocol_step(s, pcfg, fcfg, neighbors, degrees, mirror, None)
+    )
+
+    @jax.jit
+    def node_batches_for(pos, kb):
+        return jax.vmap(
+            lambda nid: sample_batch(task, kb, LOCAL_BATCH, SEQ, nid)
+        )(pos)
+
+    t0 = time.time()
+    state = init_state(g.n, g.max_degree, pcfg, fcfg, key)
+    slots = jnp.arange(W)
+    zs, losses = [], []
+    for t in range(STEPS):
+        state, out = step_fn(state)
+        parents = out.fork_parent
+        if np.asarray(parents >= 0).any():  # host sync every hop
+            rs = fork_replica(rs, jnp.maximum(parents, 0), slots, parents >= 0)
+        kb = jax.random.fold_in(key, 10_000 + t)
+        batches = node_batches_for(state.walks.pos, kb)
+        rs, step_losses = train(rs, batches, state.walks.active)
+        z = int(out.z)
+        zs.append(z)
+        losses.append(float(step_losses.sum() / max(z, 1)))
+    return time.time() - t0, np.asarray(zs), np.asarray(losses)
+
+
+def run(verbose: bool = True):
+    g, pcfg, fcfg, model, task, opt = _setup()
+    payload = RwSgdPayload(
+        model, opt, task, max_walks=W, local_batch=LOCAL_BATCH, seq_len=SEQ
+    )
+
+    t_fused_cold, z_f, loss_f = bench_fused(g, pcfg, fcfg, payload)
+    t_fused_warm, _, _ = bench_fused(g, pcfg, fcfg, payload)
+    t_hop_cold, z_h, loss_h = bench_per_hop(g, pcfg, fcfg, model, task, opt)
+    t_hop_warm, _, _ = bench_per_hop(g, pcfg, fcfg, model, task, opt)
+
+    # same control plane in both arms (payload streams are disjoint from
+    # the simulator's): identical Z_t trajectories; both arms learn
+    assert (z_f == z_h).all(), "control plane diverged between arms"
+    assert loss_f[-20:].mean() < loss_f[:20].mean()
+    assert loss_h[-20:].mean() < loss_h[:20].mean()
+
+    rows = [
+        {"name": "bench_payload/fused_cold", "wall_s": t_fused_cold,
+         "us_per_step": t_fused_cold * 1e6 / STEPS},
+        {"name": "bench_payload/fused_warm", "wall_s": t_fused_warm,
+         "us_per_step": t_fused_warm * 1e6 / STEPS},
+        {"name": "bench_payload/per_hop_cold", "wall_s": t_hop_cold,
+         "us_per_step": t_hop_cold * 1e6 / STEPS},
+        {"name": "bench_payload/per_hop_warm", "wall_s": t_hop_warm,
+         "us_per_step": t_hop_warm * 1e6 / STEPS},
+    ]
+    extra = {
+        "steps": STEPS, "nodes": N, "z0": Z0, "max_walks": W,
+        "speedup_cold": t_hop_cold / t_fused_cold,
+        "speedup_warm": t_hop_warm / t_fused_warm,
+        "final_loss_fused": float(loss_f[-20:].mean()),
+        "final_loss_per_hop": float(loss_h[-20:].mean()),
+    }
+    save_result("bench_payload", rows, extra)
+    if verbose:
+        for r in rows:
+            print(f"{r['name']},{r['us_per_step']:.1f},wall={r['wall_s']:.2f}s")
+        print(
+            f"BENCH bench_payload speedup_cold={extra['speedup_cold']:.2f}x "
+            f"speedup_warm={extra['speedup_warm']:.2f}x "
+            f"({STEPS} steps, {W} replica slots)"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    run()

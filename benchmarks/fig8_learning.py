@@ -1,0 +1,148 @@
+"""Fig. 8 (beyond-paper): LEARNING under failure, as a batched sweep.
+
+The paper's point is that the walks execute a computational task —
+decentralized RW-SGD learning — so the figure that matters is not just
+Z_t-under-failure but *loss*-under-failure. Related work compares RW
+learning against failure regimes directly (Gholami & Seferoglu, "A Tale
+of Two Learning Algorithms"; Chen et al., "Random Walk Learning and the
+Pac-Man Attack"); with the payload API this is an ordinary scenario
+sweep: one ``RwSgdPayload`` rides ``run_scenarios``, every (protocol x
+failure regime x seed) trajectory trains its own replica set inside the
+compiled scan, and the loss curves come back batched.
+
+Grid: {decafork, decafork+, none} x {burst, Pac-Man absorption, node
+churn} — one compiled call per protocol (static-structure group), every
+failure regime a traced scenario row inside it. The 'none' rows show
+what failure does to unregulated RW-SGD: walks die, replicas stop
+training, the loss curve flatlines; the DECAFORK rows keep learning.
+
+Emits ``results/fig8_learning.json``: per-scenario loss/Z curves
+(downsampled), pre/post-failure loss means, live-replica counts, and the
+compile-count bookkeeping (one XLA program per protocol group).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import FULL, save_result
+from repro.configs import get_smoke_config
+from repro.core import FailureConfig
+from repro.core import simulator as sim
+from repro.data import make_markov_task
+from repro.graphs import random_regular_graph
+from repro.models.model import Model
+from repro.optim import RwSgdPayload, adamw
+from repro.sweep import Scenario, run_scenarios
+from repro.core.protocol import ProtocolConfig
+
+STEPS = 900 if FULL else 300
+SEEDS = 4 if FULL else 2
+PROTO_START = STEPS // 3
+FAIL_AT = STEPS // 2
+Z0, MAX_WALKS = 5, 12
+ALGS = ("decafork", "decafork+", "none")
+
+
+def _pcfg(alg: str) -> ProtocolConfig:
+    return ProtocolConfig(
+        algorithm=alg, z0=Z0, max_walks=MAX_WALKS, eps=1.6, eps2=8.0,
+        protocol_start=PROTO_START, rt_bins=256,
+    )
+
+
+def failure_regimes() -> list:
+    """(tag, FailureConfig) rows — the >= 3 failure axes of the figure."""
+    return [
+        ("burst", FailureConfig(burst_times=(FAIL_AT,), burst_sizes=(3,))),
+        ("pacman", FailureConfig(pacman_node=0, pacman_start_time=FAIL_AT)),
+        ("churn", FailureConfig(
+            p_node_fail=1e-3, p_node_recover=0.05, node_fail_start=FAIL_AT,
+        )),
+    ]
+
+
+def build_payload() -> RwSgdPayload:
+    cfg = get_smoke_config(
+        "paper_rwsgd", num_layers=1, d_model=64, d_ff=128, vocab_size=256,
+        num_heads=2, num_kv_heads=2,
+    )
+    model = Model(cfg)
+    task = make_markov_task(cfg.vocab_size, rank=4, temperature=2.5)
+    return RwSgdPayload(
+        model, adamw(5e-3), task, max_walks=MAX_WALKS,
+        local_batch=2, seq_len=16,
+    )
+
+
+def _downsample(curve: np.ndarray, points: int = 100) -> list:
+    idx = np.linspace(0, curve.shape[0] - 1, min(points, curve.shape[0]))
+    out = curve[idx.astype(int)]
+    # JSON-safe: rounds where no replica trained are null, not a number
+    return [None if np.isnan(v) else float(v) for v in out]
+
+
+def _masked_mean(x: np.ndarray):
+    """Mean over finite entries; None when every entry is masked."""
+    x = x[np.isfinite(x)]
+    return float(x.mean()) if x.size else None
+
+
+def run(verbose: bool = True):
+    g = random_regular_graph(48, 6, seed=0)
+    payload = build_payload()
+    scenarios = [
+        Scenario(f"fig8/{alg}/{tag}", _pcfg(alg), fcfg)
+        for alg in ALGS
+        for tag, fcfg in failure_regimes()
+    ]
+    compiles_before = sim._run_sweep._cache_size()
+    res = run_scenarios(
+        g, scenarios, steps=STEPS, seeds=SEEDS, payload=payload
+    )
+    compiles = sim._run_sweep._cache_size() - compiles_before
+
+    rows = []
+    for name in res.names:
+        out = res[name]
+        learn = res.payload(name)
+        z = np.asarray(out.z)  # (seeds, T)
+        trained = np.asarray(learn.trained)  # (seeds, T)
+        # a round where no replica trained has no loss (the 0.0 is a
+        # placeholder) — a fully-absorbed population must read as a dead
+        # curve, not as a perfect learner
+        loss = np.where(trained > 0, np.asarray(learn.mean_loss), np.nan)
+        live = np.sum(np.isfinite(loss), axis=0)  # seeds with a loss at t
+        mean_curve = np.where(
+            live > 0, np.nansum(loss, axis=0) / np.maximum(live, 1), np.nan
+        )
+        rows.append({
+            "name": name,
+            "loss_curve": _downsample(mean_curve),
+            "z_curve": _downsample(z.mean(0)),
+            "loss_pre_failure": _masked_mean(loss[:, max(FAIL_AT - 50, 0):FAIL_AT]),
+            "loss_final": _masked_mean(loss[:, -50:]),
+            "trained_final": float(trained[:, -1].mean()),
+            "survival_rate": float((z > 0).all(1).mean()),
+        })
+        if verbose:
+            r = rows[-1]
+            fmt = lambda v: "dead" if v is None else f"{v:.3f}"
+            print(f"{name},loss {fmt(r['loss_pre_failure'])}->{fmt(r['loss_final'])},"
+                  f"replicas@end={r['trained_final']:.1f},"
+                  f"surv={r['survival_rate']:.2f}")
+    extra = {
+        "steps": STEPS, "seeds": SEEDS, "fail_at": FAIL_AT,
+        "entropy_floor": payload.task.entropy,
+        "compiled_programs": compiles,
+        "protocol_groups": len(ALGS),
+    }
+    assert compiles <= len(ALGS), (compiles, len(ALGS))
+    save_result("fig8_learning", rows, extra)
+    if verbose:
+        print(f"# fig8: {len(scenarios)} scenarios in {compiles} compiled "
+              f"programs ({len(ALGS)} protocol groups)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -13,6 +13,7 @@ import time
 
 from benchmarks import (
     auto_eps,
+    bench_payload,
     bench_sweep,
     fig1_burst,
     fig2_probabilistic,
@@ -21,6 +22,7 @@ from benchmarks import (
     fig5_epsilon,
     fig6_graphs,
     fig7_topology,
+    fig8_learning,
     kernel_theta,
     theory_bounds,
 )
@@ -33,10 +35,12 @@ BENCHES = {
     "fig5": fig5_epsilon.run,
     "fig6": fig6_graphs.run,
     "fig7": fig7_topology.run,
+    "fig8": fig8_learning.run,
     "theory": theory_bounds.run,
     "kernel_theta": kernel_theta.run,
     "auto_eps": auto_eps.run,
     "sweep": bench_sweep.run,
+    "payload": bench_payload.run,
 }
 
 

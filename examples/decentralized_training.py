@@ -1,6 +1,6 @@
 """END-TO-END DRIVER: decentralized RW-SGD learning with DECAFORK(+).
 
-This is the paper's full system in one script:
+This is the paper's full system in one *fused, compiled* call:
 
   * a graph of data-holding nodes (each owns a Markov-chain shard);
   * Z_0 random walks, each carrying a model replica + optimizer state;
@@ -13,6 +13,11 @@ This is the paper's full system in one script:
     detects it, re-forks, and learning continues without losing the
     surviving replicas' progress.
 
+The learning workload is an ``RwSgdPayload`` plugged into the simulator
+(``core.payload``): model forks, local SGD steps and loss telemetry all
+run inside the trajectory's single ``lax.scan`` — the whole training run
+is ONE jitted device call, not a Python per-hop loop.
+
 Run:  PYTHONPATH=src python examples/decentralized_training.py
       [--nodes 64 --z0 6 --steps 1400 --burst-at 900 --burst-size 3]
 """
@@ -20,19 +25,16 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.core.failures import FailureConfig
 from repro.core.protocol import ProtocolConfig
-from repro.core.simulator import init_state, protocol_step
-from repro.data import make_markov_task, sample_batch
+from repro.core.simulator import run_simulation
+from repro.data import make_markov_task
 from repro.graphs import random_regular_graph
-from repro.graphs.state import mirror_indices
 from repro.models.model import Model
-from repro.optim import adamw, fork_replica, init_replicas
-from repro.optim.rw_sgd import replica_train_step
+from repro.optim import RwSgdPayload, adamw
 
 
 def main():
@@ -60,66 +62,56 @@ def main():
         eps=args.eps, protocol_start=args.protocol_start, rt_bins=512,
     )
     fcfg = FailureConfig(burst_times=(args.burst_at,), burst_sizes=(args.burst_size,))
-    neighbors = jnp.asarray(g.neighbors)
-    degrees = jnp.asarray(g.degrees)
 
     # --- the learning payload ------------------------------------------
     cfg = get_smoke_config("paper_rwsgd")
     model = Model(cfg)
     task = make_markov_task(cfg.vocab_size)
-    opt = adamw(args.lr)
-    key = jax.random.key(0)
-    rs = init_replicas(model.init, opt.init, key, max_walks=args.max_walks)
-    train = jax.jit(replica_train_step(model.loss, opt))
-    n_params = sum(x.size for x in jax.tree.leaves(model.init(key)))
+    payload = RwSgdPayload(
+        model, adamw(args.lr), task, max_walks=args.max_walks,
+        local_batch=args.local_batch, seq_len=args.seq,
+        train_every=args.train_every,
+    )
+    n_params = sum(
+        x.size for x in jax.tree.leaves(model.init(jax.random.key(0)))
+    )
     print(f"graph n={g.n} d={args.degree} | Z0={args.z0} walks | "
           f"payload {cfg.name} ({n_params:,} params/replica) | "
           f"entropy floor {task.entropy:.3f}")
 
-    mirror = jnp.asarray(mirror_indices(g))
-    step_fn = jax.jit(
-        lambda s: protocol_step(s, pcfg, fcfg, neighbors, degrees, mirror, None)
-    )
-
-    @jax.jit
-    def node_batches_for(pos, kb):
-        return jax.vmap(
-            lambda nid: sample_batch(task, kb, args.local_batch, args.seq, nid)
-        )(pos)
-
-    state = init_state(g.n, g.max_degree, pcfg, fcfg, key)
-    slots = jnp.arange(args.max_walks)
+    # --- the whole trajectory: ONE fused compiled call ------------------
     t0 = time.time()
-    log = []
-    for t in range(args.steps):
-        state, out = step_fn(state)
-        # replicate forked walks' models (DECAFORK's "identical copy")
-        parents = out.fork_parent
-        has_fork = np.asarray(parents >= 0).any()
-        if has_fork:
-            rs = fork_replica(rs, jnp.maximum(parents, 0), slots, parents >= 0)
-        # local SGD at each visited node, on that node's data shard
-        if t % args.train_every == 0:
-            kb = jax.random.fold_in(key, 10_000 + t)
-            batches = node_batches_for(state.walks.pos, kb)
-            rs, losses = train(rs, batches, state.walks.active)
-            z = int(out.z)
-            mean_loss = float(losses.sum() / max(z, 1))
-            log.append((t, z, mean_loss))
-        if t % 100 == 0 or t == args.burst_at:
-            z = int(out.z)
-            marker = "  <-- BURST" if t == args.burst_at else ""
-            print(f"t={t:5d}  Z={z:2d}  loss={log[-1][2]:.3f}  "
-                  f"({time.time() - t0:5.1f}s){marker}")
+    (final, replicas), (outs, learn) = run_simulation(
+        g, pcfg, fcfg, steps=args.steps, key=0, payload=payload
+    )
+    jax.block_until_ready(learn.mean_loss)
+    wall = time.time() - t0
 
-    log = np.asarray(log)
-    pre = log[(log[:, 0] > args.burst_at - 100) & (log[:, 0] < args.burst_at)]
-    post = log[log[:, 0] > args.steps - 100]
+    z = np.asarray(outs.z)
+    loss = np.asarray(learn.mean_loss)
+    trained = np.asarray(learn.trained) > 0  # rounds where a step ran
+
+    def loss_over(window: slice) -> float:
+        """Mean loss over the window's *training* rounds only (with
+        --train-every > 1 the off rounds report 0, not a loss)."""
+        w = loss[window][trained[window]]
+        return float(w.mean()) if w.size else float("nan")
+
+    for t in range(0, args.steps, 100):
+        marker = "  <-- BURST" if args.burst_at in range(t, t + 100) else ""
+        print(f"t={t:5d}  Z={z[t]:2d}  "
+              f"loss={loss_over(slice(t, t + 100)):.3f}{marker}")
+
+    pre = slice(max(args.burst_at - 100, 0), args.burst_at)
+    post = slice(args.steps - 100, args.steps)
     print("\n=== summary ===")
-    print(f"Z before burst: {pre[:, 1].mean():.1f}   Z at end: {post[:, 1].mean():.1f}")
-    print(f"loss before burst: {pre[:, 2].mean():.3f} -> end: {post[:, 2].mean():.3f} "
+    print(f"wall: {wall:.1f}s for {args.steps} fused rounds "
+          f"({wall * 1e3 / args.steps:.2f} ms/round incl. compile)")
+    print(f"Z before burst: {z[pre].mean():.1f}   Z at end: {z[post].mean():.1f}")
+    print(f"loss before burst: {loss_over(pre):.3f} -> end: {loss_over(post):.3f} "
           f"(floor {task.entropy:.3f})")
-    survived = (log[:, 1] > 0).all()
+    print(f"replica local-step counters: {np.asarray(replicas.steps).tolist()}")
+    survived = (z > 0).all()
     print(f"resilience: {'OK — at least one walk alive throughout' if survived else 'FAILED'}")
 
 

@@ -6,6 +6,7 @@ Section IV/V theory (Irwin-Hall threshold design + computable bounds).
 """
 from repro.core.protocol import ProtocolConfig, ALGORITHMS
 from repro.core.failures import FailureConfig
+from repro.core.payload import Payload
 from repro.core.simulator import (
     run_simulation,
     run_ensemble,
@@ -28,6 +29,7 @@ __all__ = [
     "ProtocolConfig",
     "ALGORITHMS",
     "FailureConfig",
+    "Payload",
     "run_simulation",
     "run_ensemble",
     "reaction_time",

@@ -8,8 +8,13 @@ O(Z) walk descriptors (positions, active flags, tracks) stay replicated.
 
 Per round each device:
   1. computes next hops for the walks currently sitting on *its* nodes
-     (it owns their neighbor lists) and contributes them to a psum —
-     the SPMD analogue of "the holding node forwards the token";
+     (it owns their neighbor lists, and the live-topology masks for its
+     rows) and contributes them to a psum — the SPMD analogue of "the
+     holding node forwards the token". Movement samples over *available*
+     incident edges (``GraphState`` semantics: down nodes/links are
+     unreachable, a stranded walk holds position, a crashed node kills
+     its residents), matching the single-device ``walkers.move_walks``
+     path bit-for-bit on a 1-device mesh;
   2. records return-time samples / last-seen updates for its own rows;
   3. evaluates theta-hat and the fork/terminate rule for walks choosing
      its nodes, and contributes decision masks to a psum — decisions are
@@ -34,6 +39,7 @@ from repro.core import estimator as est
 from repro.core import protocol as prt
 from repro.core import walkers as wlk
 from repro.core.walkers import WalkState
+from repro.graphs.state import availability_rows
 from repro.utils.compat import shard_map
 from repro.utils.prng import fold_in_time
 
@@ -58,7 +64,15 @@ def make_sharded_step(
     pcfg: prt.ProtocolConfig,
 ):
     """Build the shard_map'd protocol round for `mesh` with nodes sharded
-    over `node_axes` (e.g. ('data',) or ('pod', 'data'))."""
+    over `node_axes` (e.g. ('data',) or ('pod', 'data')).
+
+    The step takes the live-topology masks as trailing arguments:
+    ``node_up`` (n,) bool replicated — availability needs the liveness of
+    *neighbor* nodes, which live on other shards, so the cheap O(n)-bool
+    vector stays replicated rather than adding a gather collective — and
+    ``edge_up`` (n, max_deg) bool node-sharded alongside ``neighbors``.
+    Pass all-True masks for a static topology (bitwise the unmasked hop).
+    """
 
     axes = tuple(node_axes)
     n_shards = 1
@@ -81,6 +95,8 @@ def make_sharded_step(
         rep,  # key
         node_spec,  # neighbors
         P(axes),  # degrees
+        rep,  # node_up — replicated: availability needs neighbor liveness
+        node_spec,  # edge_up
     )
     out_specs = (rep, rep, rep, rep, node_spec, node_spec, P(axes), rep, rep)
 
@@ -90,19 +106,31 @@ def make_sharded_step(
             off = off * mesh.shape[a] + jax.lax.axis_index(a)
         return off * n_local
 
-    def step(t, pos, active, track, last_seen, hist, total, key, neighbors, degrees):
+    def step(
+        t, pos, active, track, last_seen, hist, total, key, neighbors, degrees,
+        node_up, edge_up,
+    ):
         W = pos.shape[0]
         lo = _shard_offset()
+        # a down node kills its resident walks (kill_resident_walks parity;
+        # node_up is replicated, so this needs no collective)
+        active = active & node_up[pos]
         local = active & (pos >= lo) & (pos < lo + n_local)
         lpos = jnp.clip(pos - lo, 0, n_local - 1)
 
-        # --- 1. movement: owner shard proposes the next hop -------------
+        # --- 1. movement: owner shard proposes the next hop over the
+        # currently *available* incident edges (the same shared
+        # rank-select as walkers.move_walks — bitwise-identical sampling
+        # is what keeps the two paths in parity); a stranded walk
+        # proposes its own position.
         k_move = fold_in_time(key, t, 0)
         u = jax.random.uniform(k_move, (W,))
-        deg = degrees[lpos]
-        idx = jnp.minimum((u * deg).astype(jnp.int32), jnp.maximum(deg - 1, 0))
-        nxt_local = neighbors[lpos, idx]
-        proposal = jnp.where(local, nxt_local, 0)
+        up_local = jax.lax.dynamic_slice_in_dim(node_up, lo, n_local)
+        avail = availability_rows(edge_up, up_local, node_up, neighbors, degrees)
+        row_mask = avail[lpos]  # (W, D)
+        adeg, sel = wlk.select_available_edge(row_mask, u, degrees.dtype)
+        nxt_local = neighbors[lpos, sel]
+        proposal = jnp.where(local, jnp.where(adeg > 0, nxt_local, pos), 0)
         new_pos = jax.lax.psum(proposal, axes)
         pos = jnp.where(active, new_pos, pos)
 

@@ -29,6 +29,17 @@ batching hierarchy is:
                       algorithm, estimator_impl, max_walks, rt_bins,
                       burst + node-crash schedule lengths).
 
+Every entry point accepts a ``payload`` (``core.payload.Payload``): the
+computational task the walks carry (flagship: RW-SGD learning via
+``optim.rw_sgd.RwSgdPayload``). The payload's carry pytree rides the same
+``lax.scan`` — its hooks run inside the compiled trajectory, so learning
+curves batch across seeds and scenarios exactly like ``Z_t`` curves, and
+the runners additionally return the stacked per-round payload outputs.
+``payload=None`` (the default) traces the hook-free program and is
+bitwise identical to the pre-payload engine; payload PRNG streams are
+disjoint from the simulator's, so even an attached payload leaves every
+``StepOutputs`` trajectory bitwise unchanged.
+
 The static ``Graph`` stays a trace-time constant (the superset topology);
 ``GraphState`` only masks it, so scenario rows vary *which parts are up
 when* without recompilation. With every topology knob disabled the masks
@@ -48,6 +59,7 @@ from repro.core import estimator as est
 from repro.core import failures as flr
 from repro.core import protocol as prt
 from repro.core import walkers as wlk
+from repro.core.payload import PAYLOAD_STREAM, payload_init_key
 from repro.graphs.generators import Graph
 from repro.graphs.spectral import stationary_distribution
 from repro.graphs.state import GraphState, availability, init_graph_state, mirror_indices
@@ -262,42 +274,78 @@ def protocol_step(
     return new_state, out
 
 
-def _run_core(key, neighbors, degrees, mirror, pi, pcfg, fcfg, steps, n):
+def _run_core(key, neighbors, degrees, mirror, pi, pcfg, fcfg, steps, n, payload=None):
     """Un-jitted single-trajectory scan; every batching wrapper traces
     through this one function so ensemble/sweep results are bitwise equal
-    to the single-run path."""
+    to the single-run path.
+
+    With ``payload=None`` this is exactly the payload-free program (same
+    scan carry, same jaxpr). With a payload, the carry becomes
+    ``(SimState, payload_carry)`` and each round runs the hook sequence
+    ``on_terminate -> on_fork -> on_visit`` after the protocol round,
+    mirroring the protocol's own order (``execute_terminations`` frees
+    slots *before* ``execute_forks`` reallocates them, so a slot can be
+    terminated and re-forked in one round — clearing must not clobber the
+    fresh copy); the forked walk trains at its origin node the very round
+    it is created, on a copy of its parent's pre-round replica. Returns
+    ``((final SimState, final carry), (StepOutputs, payload_outputs))``.
+    """
     state = init_state(n, neighbors.shape[1], pcfg, fcfg, key)
 
-    def body(s, _):
-        return protocol_step(s, pcfg, fcfg, neighbors, degrees, mirror, pi)
+    if payload is None:
 
-    return jax.lax.scan(body, state, None, length=steps)
+        def body(s, _):
+            return protocol_step(s, pcfg, fcfg, neighbors, degrees, mirror, pi)
+
+        return jax.lax.scan(body, state, None, length=steps)
+
+    pcarry = payload.init(payload_init_key(key))
+
+    def body(carry, _):
+        s, pc = carry
+        t = s.t  # pre-round step counter, matching the simulator's streams
+        k_visit = fold_in_time(s.key, t, PAYLOAD_STREAM)
+        s2, out = protocol_step(s, pcfg, fcfg, neighbors, degrees, mirror, pi)
+        pc = payload.on_terminate(pc, out.terminated)
+        pc = payload.on_fork(pc, out.fork_parent)
+        pc, pout = payload.on_visit(pc, s2.walks, t, k_visit)
+        return (s2, pc), (out, pout)
+
+    return jax.lax.scan(body, (state, pcarry), None, length=steps)
 
 
-_run = jax.jit(_run_core, static_argnames=("steps", "n"))
+_run = jax.jit(_run_core, static_argnames=("steps", "n", "payload"))
 
 
-def _run_ensemble_core(keys, neighbors, degrees, mirror, pi, pcfg, fcfg, steps, n):
-    """(seeds,) keys -> StepOutputs with leading (seeds,) axis."""
+def _run_ensemble_core(
+    keys, neighbors, degrees, mirror, pi, pcfg, fcfg, steps, n, payload=None
+):
+    """(seeds,) keys -> StepOutputs with leading (seeds,) axis (a
+    (StepOutputs, payload_outputs) pair when a payload is attached)."""
     return jax.vmap(
-        lambda k: _run_core(k, neighbors, degrees, mirror, pi, pcfg, fcfg, steps, n)[1]
+        lambda k: _run_core(
+            k, neighbors, degrees, mirror, pi, pcfg, fcfg, steps, n, payload
+        )[1]
     )(keys)
 
 
-_run_ensemble = functools.partial(jax.jit, static_argnames=("steps", "n"))(
-    _run_ensemble_core
-)
+_run_ensemble = functools.partial(
+    jax.jit, static_argnames=("steps", "n", "payload")
+)(_run_ensemble_core)
 
 
-@functools.partial(jax.jit, static_argnames=("steps", "n"))
-def _run_sweep(keys, neighbors, degrees, mirror, pi, pcfgs, fcfgs, steps, n):
+@functools.partial(jax.jit, static_argnames=("steps", "n", "payload"))
+def _run_sweep(
+    keys, neighbors, degrees, mirror, pi, pcfgs, fcfgs, steps, n, payload=None
+):
     """Stacked configs (leaves with leading (S,) axis) + (seeds,) keys ->
-    StepOutputs with leading (S, seeds) axes, all in one XLA program."""
+    StepOutputs with leading (S, seeds) axes, all in one XLA program (a
+    (StepOutputs, payload_outputs) pair when a payload is attached)."""
 
     def one_scenario(pcfg, fcfg):
         return jax.vmap(
             lambda k: _run_core(
-                k, neighbors, degrees, mirror, pi, pcfg, fcfg, steps, n
+                k, neighbors, degrees, mirror, pi, pcfg, fcfg, steps, n, payload
             )[1]
         )(keys)
 
@@ -316,18 +364,34 @@ def _graph_arrays(graph: Graph, pcfg: prt.ProtocolConfig):
     return neighbors, degrees, mirror, pi
 
 
+def _check_payload(payload, pcfg: prt.ProtocolConfig):
+    if payload is not None:
+        payload.validate(pcfg)
+
+
 def run_simulation(
     graph: Graph,
     pcfg: prt.ProtocolConfig,
     fcfg: flr.FailureConfig,
     steps: int,
     key: jax.Array | int = 0,
+    *,
+    payload=None,
 ):
-    """Run one trajectory; returns (final SimState, StepOutputs over time)."""
+    """Run one trajectory; returns (final SimState, StepOutputs over time).
+
+    With a ``payload`` the workload runs fused inside the same scan and
+    the return value becomes ``((final SimState, final payload carry),
+    (StepOutputs, payload outputs over time))``.
+    """
     if isinstance(key, int):
         key = jax.random.key(key)
+    _check_payload(payload, pcfg)
     neighbors, degrees, mirror, pi = _graph_arrays(graph, pcfg)
-    return _run(key, neighbors, degrees, mirror, pi, pcfg, fcfg, steps, graph.n)
+    return _run(
+        key, neighbors, degrees, mirror, pi, pcfg, fcfg, steps, graph.n,
+        payload=payload,
+    )
 
 
 def run_ensemble(
@@ -337,18 +401,26 @@ def run_ensemble(
     steps: int,
     seeds: int,
     base_key: jax.Array | int = 0,
+    *,
+    payload=None,
 ):
     """vmap over seeds: StepOutputs with leading (seeds,) axis.
 
     Numeric config changes (eps grids, burst schedules, failure rates)
     reuse the compiled program — only static fields retrigger XLA.
+
+    With a ``payload`` returns ``(StepOutputs, payload_outputs)``, both
+    with leading (seeds,) axes; each seed initializes its own payload
+    carry (independent model replicas per trajectory).
     """
     if isinstance(base_key, int):
         base_key = jax.random.key(base_key)
+    _check_payload(payload, pcfg)
     keys = jax.random.split(base_key, seeds)
     neighbors, degrees, mirror, pi = _graph_arrays(graph, pcfg)
     return _run_ensemble(
-        keys, neighbors, degrees, mirror, pi, pcfg, fcfg, steps, graph.n
+        keys, neighbors, degrees, mirror, pi, pcfg, fcfg, steps, graph.n,
+        payload=payload,
     )
 
 
@@ -360,6 +432,7 @@ def run_sweep(
     base_key: jax.Array | int = 0,
     *,
     sharded: bool | None = None,
+    payload=None,
 ):
     """Run MANY (protocol, failure) scenarios x seeds in one compiled call.
 
@@ -375,26 +448,39 @@ def run_sweep(
     derive from ``base_key``, so ``run_sweep(...)[i]`` is bitwise equal to
     ``run_ensemble(graph, *scenarios[i], steps, seeds, base_key)``.
 
-    Returns StepOutputs with leading (len(scenarios), seeds) axes. With
-    ``sharded`` (default: auto when >1 device and divisible) the scenario
-    axis is placed across the 'data' mesh axis of the local mesh.
+    Returns StepOutputs with leading (len(scenarios), seeds) axes; with a
+    ``payload``, a ``(StepOutputs, payload_outputs)`` pair (same leading
+    axes — the workload is just another batched scenario dimension).
+
+    ``sharded`` is an explicit tri-state controlling scenario-axis device
+    placement: ``None`` (default) auto-places across the 'data' mesh axis
+    when >1 device is visible and the count divides; ``True`` demands
+    placement (raises if impossible); ``False`` opts out entirely.
     """
     from repro.sweep.scenario import as_pair, stack_configs
 
+    # identity, not equality: 0/1 must not alias False/True into the wrong
+    # placement path (0 == False but `0 is not False` falls through to auto)
+    if not (sharded is None or sharded is True or sharded is False):
+        raise TypeError(
+            f"sharded must be True, False or None (auto); got {sharded!r}"
+        )
     if isinstance(base_key, int):
         base_key = jax.random.key(base_key)
     keys = jax.random.split(base_key, seeds)
     pcfgs, fcfgs = stack_configs(scenarios)
     pcfg0 = as_pair(scenarios[0])[0]
+    _check_payload(payload, pcfg0)
     neighbors, degrees, mirror, pi = _graph_arrays(graph, pcfg0)
-    if sharded or sharded is None:
+    if sharded is not False:
         from repro.sweep.engine import maybe_shard_scenarios
 
         pcfgs, fcfgs = maybe_shard_scenarios(
-            pcfgs, fcfgs, len(scenarios), explicit=bool(sharded)
+            pcfgs, fcfgs, len(scenarios), explicit=sharded is True
         )
     return _run_sweep(
-        keys, neighbors, degrees, mirror, pi, pcfgs, fcfgs, steps, graph.n
+        keys, neighbors, degrees, mirror, pi, pcfgs, fcfgs, steps, graph.n,
+        payload=payload,
     )
 
 

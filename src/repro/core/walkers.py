@@ -33,6 +33,29 @@ def init_walks(z0: int, max_walks: int, n_nodes: int, key: jax.Array) -> WalkSta
     return WalkState(pos=pos0, active=slots < z0, track=slots)
 
 
+def select_available_edge(row_mask: jax.Array, u: jax.Array, count_dtype):
+    """Rank-select one available incident-edge slot per row, branch-free.
+
+    ``row_mask`` is (W, D) availability over each walk's incident-edge
+    slots, ``u`` the (W,) uniforms. Returns ``(adeg, sel)``: the count of
+    available edges per row (``count_dtype``, == degree when the mask is
+    full) and the selected slot index — the ``idx``-th available slot
+    with ``idx = min(floor(u * adeg), adeg - 1)``. When every mask is
+    full the available slots are exactly ``[0, degree)`` in order, so
+    rank == slot index and the selection is bitwise the unmasked
+    ``min(floor(u * degree), degree - 1)``. ``sel`` is garbage where
+    ``adeg == 0`` (callers hold position there). Shared by the
+    single-host hop (``move_walks``) and the shard_map'd distributed
+    step, which must sample identically to stay in parity.
+    """
+    adeg = jnp.sum(row_mask, axis=1, dtype=count_dtype)
+    idx = jnp.minimum((u * adeg).astype(jnp.int32), adeg - 1)
+    # rank available slots per row; select the idx-th one
+    rank = jnp.cumsum(row_mask, axis=1) - 1
+    sel = jnp.argmax((rank == idx[:, None]) & row_mask, axis=1)
+    return adeg, sel
+
+
 def move_walks(
     ws: WalkState,
     neighbors: jax.Array,
@@ -45,13 +68,12 @@ def move_walks(
 
     ``avail`` is the (n, max_deg) traversability mask from
     ``graphs.state.availability`` (None == everything up). Sampling is
-    branch-free over masked slots: draw u ~ U[0,1), scale by the count of
-    available incident edges, and take the edge of that rank. When every
-    mask is full the available slots are exactly ``[0, degree)`` in order,
-    so rank == slot index and the hop is bitwise the unmasked
-    ``neighbors[pos, min(floor(u * degree), degree - 1)]``. A walk whose
-    node has no available incident edge (stranded on an isolated node)
-    holds position.
+    branch-free over masked slots (``select_available_edge``): draw
+    u ~ U[0,1), scale by the count of available incident edges, and take
+    the edge of that rank — bitwise the unmasked
+    ``neighbors[pos, min(floor(u * degree), degree - 1)]`` when every
+    mask is full. A walk whose node has no available incident edge
+    (stranded on an isolated node) holds position.
     """
     W = ws.pos.shape[0]
     D = neighbors.shape[1]
@@ -60,11 +82,7 @@ def move_walks(
         row_mask = jnp.arange(D, dtype=degrees.dtype)[None, :] < degrees[ws.pos, None]
     else:
         row_mask = avail[ws.pos]  # (W, D)
-    adeg = jnp.sum(row_mask, axis=1, dtype=degrees.dtype)  # == degree when full
-    idx = jnp.minimum((u * adeg).astype(jnp.int32), adeg - 1)
-    # rank available slots per row; select the idx-th one
-    rank = jnp.cumsum(row_mask, axis=1) - 1
-    sel = jnp.argmax((rank == idx[:, None]) & row_mask, axis=1)
+    adeg, sel = select_available_edge(row_mask, u, degrees.dtype)
     nxt = neighbors[ws.pos, sel]
     can_move = ws.active & (adeg > 0)
     return ws._replace(pos=jnp.where(can_move, nxt, ws.pos))

@@ -75,20 +75,39 @@ def mirror_indices(graph: Graph) -> np.ndarray:
     return mirror
 
 
+def availability_rows(
+    edge_up_rows: jax.Array,  # (rows, max_deg) edge masks for these rows
+    node_up_rows: jax.Array,  # (rows,) liveness of the rows' own nodes
+    node_up_full: jax.Array,  # (n,) global liveness (neighbor lookup)
+    neighbors_rows: jax.Array,  # (rows, max_deg)
+    degrees_rows: jax.Array,  # (rows,)
+) -> jax.Array:
+    """The traversability invariant on an arbitrary row slice: slot
+    (r, k) is available iff it exists in the static graph (k < degree),
+    the edge is up, and both endpoints are up. Rows and the global node
+    vector are passed separately so a node-sharded caller (the shard_map
+    step in ``core.distributed``, whose neighbor ids cross shards) shares
+    this single definition with the full-graph ``availability``.
+    """
+    D = neighbors_rows.shape[1]
+    within = (
+        jnp.arange(D, dtype=degrees_rows.dtype)[None, :]
+        < degrees_rows[:, None]
+    )
+    return (
+        within
+        & edge_up_rows
+        & node_up_rows[:, None]
+        & node_up_full[neighbors_rows]
+    )
+
+
 def availability(
     gs: GraphState, neighbors: jax.Array, degrees: jax.Array
 ) -> jax.Array:
-    """(n, max_deg) bool: slot (i, k) is traversable right now.
-
-    An incident edge is available iff it exists in the static graph
-    (k < degree), the edge itself is up, and both endpoints are up. With a
+    """(n, max_deg) bool: slot (i, k) is traversable right now. With a
     fully-up ``GraphState`` this is exactly the static within-degree mask.
     """
-    D = neighbors.shape[1]
-    within = jnp.arange(D, dtype=degrees.dtype)[None, :] < degrees[:, None]
-    return (
-        within
-        & gs.edge_up
-        & gs.node_up[:, None]
-        & gs.node_up[neighbors]
+    return availability_rows(
+        gs.edge_up, gs.node_up, gs.node_up, neighbors, degrees
     )

@@ -246,6 +246,8 @@ def build_protocol(mesh, n_nodes: int = 131072, max_walks: int = 64, bins: int =
         jax.ShapeDtypeStruct((), jnp.uint32, sharding=rep),  # key (raw)
         jax.ShapeDtypeStruct((n_nodes, max_deg), i32, sharding=node_sh2),  # neighbors
         jax.ShapeDtypeStruct((n_nodes,), i32, sharding=node_sh2),  # degrees
+        jax.ShapeDtypeStruct((n_nodes,), jnp.bool_, sharding=rep),  # node_up
+        jax.ShapeDtypeStruct((n_nodes, max_deg), jnp.bool_, sharding=node_sh2),  # edge_up
     )
     # the key must be a typed PRNG key struct
     key_struct = jax.eval_shape(lambda: jax.random.key(0))

@@ -8,6 +8,8 @@ from repro.optim.optimizers import (
 )
 from repro.optim.rw_sgd import (
     ReplicaSet,
+    RwSgdOutputs,
+    RwSgdPayload,
     init_replicas,
     fork_replica,
     local_sgd_step,
@@ -22,6 +24,8 @@ __all__ = [
     "cosine_schedule",
     "constant_schedule",
     "ReplicaSet",
+    "RwSgdOutputs",
+    "RwSgdPayload",
     "init_replicas",
     "fork_replica",
     "local_sgd_step",

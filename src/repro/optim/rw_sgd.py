@@ -9,7 +9,11 @@ termination simply deactivates the slot.
 
 ``replica_train_step`` vectorizes the per-walk local step with ``vmap``
 so one jitted call advances every live replica simultaneously (the
-synchronous-round semantics of the simulator).
+synchronous-round semantics of the simulator). :class:`RwSgdPayload`
+packages the whole thing as a ``core.payload.Payload``, fusing RW-SGD
+into the simulator's ``lax.scan`` — learning runs *inside* the compiled
+trajectory, batches under ``run_ensemble``/``run_sweep``, and
+accuracy-under-failure becomes an ordinary scenario axis.
 """
 from __future__ import annotations
 
@@ -17,6 +21,8 @@ from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.payload import Payload
 
 
 class ReplicaSet(NamedTuple):
@@ -96,3 +102,89 @@ def replica_train_step(loss_fn: Callable, optimizer):
         )
 
     return step
+
+
+class RwSgdOutputs(NamedTuple):
+    """Per-round learning telemetry stacked over the trajectory."""
+
+    loss: jax.Array  # (W,) per-slot local loss (0 where no step ran)
+    mean_loss: jax.Array  # scalar mean over slots that trained this round
+    trained: jax.Array  # scalar int32: slots that took a local step
+
+
+class RwSgdPayload(Payload):
+    """The paper's workload as a pluggable payload: per-walk model
+    replicas + optimizer state, advanced by batched local SGD.
+
+    carry = :class:`ReplicaSet` (leaves with a leading ``max_walks``
+    slot axis). Per round:
+
+      * ``on_fork`` duplicates the parent's (params, opt moments, step
+        counter) into the freshly allocated slot via ``fork_replica`` —
+        DECAFORK's "identical copy", and the overwrite that recycles any
+        stale state left by a terminated predecessor in that slot;
+      * ``on_visit`` samples each live walk's mini-batch from the data
+        shard of the node it just hopped to (``data.synthetic``'s
+        node-keyed Markov task) and applies the vmapped local step;
+        ``train_every`` > 1 thins updates to every k-th round (mask-based,
+        same compiled program);
+      * ``on_terminate`` is the default no-op: a dead slot's replica is
+        simply never trained again and is overwritten on re-fork.
+
+    The object is static under jit — model/optimizer/task/capacity are
+    structure, the ReplicaSet is the traced state. Reuse one instance
+    across runs to reuse the compiled program.
+    """
+
+    def __init__(
+        self,
+        model,
+        optimizer,
+        task,
+        max_walks: int,
+        local_batch: int = 2,
+        seq_len: int = 32,
+        train_every: int = 1,
+    ):
+        self.model = model
+        self.optimizer = optimizer
+        self.task = task
+        self.max_walks = int(max_walks)
+        self.local_batch = int(local_batch)
+        self.seq_len = int(seq_len)
+        self.train_every = int(train_every)
+        self._train = replica_train_step(model.loss, optimizer)
+
+    def validate(self, pcfg) -> None:
+        if pcfg.max_walks != self.max_walks:
+            raise ValueError(
+                f"payload capacity max_walks={self.max_walks} does not match "
+                f"ProtocolConfig.max_walks={pcfg.max_walks}"
+            )
+
+    def init(self, key: jax.Array) -> ReplicaSet:
+        return init_replicas(
+            self.model.init, self.optimizer.init, key, self.max_walks
+        )
+
+    def on_fork(self, rs: ReplicaSet, fork_parent: jax.Array) -> ReplicaSet:
+        slots = jnp.arange(fork_parent.shape[0], dtype=jnp.int32)
+        return fork_replica(
+            rs, jnp.maximum(fork_parent, 0), slots, fork_parent >= 0
+        )
+
+    def on_visit(self, rs: ReplicaSet, walks, t, key):
+        from repro.data.synthetic import sample_batch
+
+        batches = jax.vmap(
+            lambda nid: sample_batch(
+                self.task, key, self.local_batch, self.seq_len, nid
+            )
+        )(walks.pos)
+        do = walks.active & (t % self.train_every == 0)
+        rs, losses = self._train(rs, batches, do)
+        n_trained = jnp.sum(do)
+        mean = jnp.sum(losses) / jnp.maximum(n_trained, 1)
+        return rs, RwSgdOutputs(
+            loss=losses, mean_loss=mean, trained=n_trained.astype(jnp.int32)
+        )

@@ -13,7 +13,9 @@ local with zero overhead.
 
 Adding a new regime (node-crash schedules, link-failure churn, Pac-Man
 adversarial removals, multi-stream variants, ...) is appending a Scenario
-row — no new compilation units.
+row — no new compilation units. A walk payload (``core.payload``) rides
+every group's compiled call unchanged, which turns workload metrics
+(RW-SGD loss curves) into ordinary batched sweep outputs.
 """
 from __future__ import annotations
 
@@ -32,17 +34,28 @@ class SweepResult:
 
     Behaves as a container of scenarios: ``len`` is the scenario count,
     iteration yields per-scenario StepOutputs (leading ``(seeds,)`` axis),
-    and indexing accepts either a position or a scenario name.
+    and indexing accepts either a position or a scenario name. When the
+    sweep carried a payload, ``payloads`` is the parallel list of
+    per-scenario payload outputs (``payload(name_or_index)`` to look one
+    up); otherwise it is ``None``.
     """
 
-    def __init__(self, names: tuple, outputs: list):
+    def __init__(self, names: tuple, outputs: list, payloads: list | None = None):
         self.names = tuple(names)
         self.outputs = list(outputs)
+        self.payloads = list(payloads) if payloads is not None else None
+
+    def _index(self, i) -> int:
+        return self.names.index(i) if isinstance(i, str) else i
 
     def __getitem__(self, i):
-        if isinstance(i, str):
-            return self.outputs[self.names.index(i)]
-        return self.outputs[i]
+        return self.outputs[self._index(i)]
+
+    def payload(self, i):
+        """Per-scenario payload outputs by position or scenario name."""
+        if self.payloads is None:
+            raise KeyError("sweep ran without a payload")
+        return self.payloads[self._index(i)]
 
     def __len__(self):
         return len(self.outputs)
@@ -99,6 +112,7 @@ def run_scenarios(
     base_key: jax.Array | int = 0,
     *,
     sharded: bool | None = None,
+    payload=None,
 ) -> SweepResult:
     """Run a mixed scenario list; one compiled call per static group.
 
@@ -107,17 +121,29 @@ def run_scenarios(
     one batched ``run_sweep`` call, and results come back per scenario in
     the input order. Each scenario's (seeds,)-leading outputs are bitwise
     what ``run_ensemble`` would produce for it under the same ``base_key``.
+
+    A ``payload`` (``core.payload.Payload``) rides every group's compiled
+    call; per-scenario payload outputs land in ``SweepResult.payloads``
+    (workload-under-failure — e.g. loss curves — as ordinary sweep rows).
     """
     scenarios = list(scenarios)
     names = tuple(
         getattr(s, "name", f"scenario{i}") for i, s in enumerate(scenarios)
     )
     outputs = [None] * len(scenarios)
+    payloads = [None] * len(scenarios) if payload is not None else None
     for _sig, idxs in group_scenarios(scenarios):
         group = [(as_pair(scenarios[i])) for i in idxs]
         stacked = sim.run_sweep(
-            graph, group, steps, seeds, base_key, sharded=sharded
+            graph, group, steps, seeds, base_key, sharded=sharded,
+            payload=payload,
         )
+        if payload is not None:
+            stacked, stacked_payload = stacked
         for j, i in enumerate(idxs):
             outputs[i] = jax.tree_util.tree_map(lambda x: x[j], stacked)
-    return SweepResult(names=names, outputs=outputs)
+            if payload is not None:
+                payloads[i] = jax.tree_util.tree_map(
+                    lambda x: x[j], stacked_payload
+                )
+    return SweepResult(names=names, outputs=outputs, payloads=payloads)

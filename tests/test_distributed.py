@@ -4,10 +4,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import walkers as wlk
 from repro.core.distributed import make_sharded_step
-from repro.utils.compat import AxisType, make_mesh
 from repro.core.protocol import ProtocolConfig
-from repro.graphs import random_regular_graph
+from repro.graphs import GraphState, availability, random_regular_graph
+from repro.utils.compat import AxisType, make_mesh
+from repro.utils.prng import fold_in_time
 
 
 @pytest.fixture(scope="module")
@@ -33,18 +35,24 @@ def _init(g, pcfg, key):
     return pos, active, track, last_seen, hist, total
 
 
+def _full_masks(g):
+    return jnp.ones((g.n,), bool), jnp.ones((g.n, g.max_degree), bool)
+
+
 @pytest.mark.slow
 def test_distributed_step_runs_and_self_regulates(setup):
     g, pcfg, mesh, step = setup
     key = jax.random.key(0)
     pos, active, track, last_seen, hist, total = _init(g, pcfg, key)
     nbrs, degs = jnp.asarray(g.neighbors), jnp.asarray(g.degrees)
+    node_up, edge_up = _full_masks(g)
     t = jnp.int32(0)
     zs = []
     with mesh:
         for _ in range(600):
             t, pos, active, track, last_seen, hist, total, key, z = step(
-                t, pos, active, track, last_seen, hist, total, key, nbrs, degs
+                t, pos, active, track, last_seen, hist, total, key, nbrs, degs,
+                node_up, edge_up,
             )
             zs.append(int(z))
     zs = np.asarray(zs)
@@ -60,17 +68,79 @@ def test_distributed_movement_follows_edges(setup):
     key = jax.random.key(1)
     pos, active, track, last_seen, hist, total = _init(g, pcfg, key)
     nbrs, degs = jnp.asarray(g.neighbors), jnp.asarray(g.degrees)
+    node_up, edge_up = _full_masks(g)
     adj = g.adjacency()
     t = jnp.int32(0)
     with mesh:
         for _ in range(25):
             old_pos = np.asarray(pos)
-            old_active = np.asarray(pos * 0 + 1)
             t, pos, active, track, last_seen, hist, total, key, z = step(
-                t, pos, active, track, last_seen, hist, total, key, nbrs, degs
+                t, pos, active, track, last_seen, hist, total, key, nbrs, degs,
+                node_up, edge_up,
             )
             new_pos = np.asarray(pos)
             act = np.asarray(active)
             for w in range(pcfg.max_walks):
                 if act[w] and old_pos[w] != new_pos[w]:
                     assert adj[old_pos[w], new_pos[w]], (old_pos[w], new_pos[w])
+
+
+def test_distributed_masked_movement_parity_with_single_device(setup):
+    """GraphState masks through the shard_map'd step: resident-walk kills
+    and masked movement match the single-device path (kill_resident_walks
+    + walkers.move_walks over the same availability) bit-for-bit."""
+    g, pcfg, mesh, step = setup
+    nbrs, degs = jnp.asarray(g.neighbors), jnp.asarray(g.degrees)
+    rng = np.random.default_rng(7)
+    node_up = jnp.asarray(rng.random(g.n) > 0.15)
+    edge_np = rng.random((g.n, g.max_degree)) > 0.2
+    # keep the mask symmetric like step_topology does (not required for
+    # parity, but it is the state space the simulator actually produces)
+    for i in range(g.n):
+        for k in range(int(g.degrees[i])):
+            j = int(g.neighbors[i, k])
+            if j > i:
+                kk = int(np.nonzero(np.asarray(g.neighbors[j]) == i)[0][0])
+                edge_np[j, kk] = edge_np[i, k]
+    edge_up = jnp.asarray(edge_np)
+    gs = GraphState(node_up=node_up, edge_up=edge_up)
+    avail = availability(gs, nbrs, degs)
+
+    key = jax.random.key(3)
+    pos, active, track, last_seen, hist, total = _init(g, pcfg, key)
+    t = jnp.int32(0)
+    with mesh:
+        for _ in range(8):
+            # single-device reference for this round, same key stream
+            ref_active = active & node_up[pos]
+            ws = wlk.WalkState(pos=pos, active=ref_active, track=track)
+            ref = wlk.move_walks(
+                ws, nbrs, degs, fold_in_time(key, t, 0), avail
+            )
+            t, pos, active, track, last_seen, hist, total, key, z = step(
+                t, pos, active, track, last_seen, hist, total, key, nbrs, degs,
+                node_up, edge_up,
+            )
+            # protocol_start=200 >> t: no forks/terminations interfere
+            np.testing.assert_array_equal(np.asarray(active), np.asarray(ref.active))
+            np.testing.assert_array_equal(np.asarray(pos), np.asarray(ref.pos))
+
+
+def test_distributed_full_masks_bitwise_equal_unmasked(setup):
+    """All-True masks reproduce the pre-mask step exactly: positions equal
+    the unmasked uniform-neighbor hop under the same key."""
+    g, pcfg, mesh, step = setup
+    nbrs, degs = jnp.asarray(g.neighbors), jnp.asarray(g.degrees)
+    node_up, edge_up = _full_masks(g)
+    key = jax.random.key(5)
+    pos, active, track, last_seen, hist, total = _init(g, pcfg, key)
+    t = jnp.int32(0)
+    with mesh:
+        for _ in range(5):
+            ws = wlk.WalkState(pos=pos, active=active, track=track)
+            ref = wlk.move_walks(ws, nbrs, degs, fold_in_time(key, t, 0))
+            t, pos, active, track, last_seen, hist, total, key, z = step(
+                t, pos, active, track, last_seen, hist, total, key, nbrs, degs,
+                node_up, edge_up,
+            )
+            np.testing.assert_array_equal(np.asarray(pos), np.asarray(ref.pos))

@@ -1,0 +1,337 @@
+"""Pluggable walk-payload API (ISSUE 3).
+
+Contract under test:
+  * ``payload=None`` is the exact pre-payload engine — bitwise against
+    the PR-2 golden trajectories;
+  * attaching a payload (even the hook-free base class) leaves every
+    simulator stream and ``StepOutputs`` trajectory bitwise unchanged;
+  * the fused in-scan hook sequence equals a hand-rolled per-round hook
+    loop (the old example's structure);
+  * payload outputs batch under ensemble/sweep exactly like StepOutputs
+    (``run_sweep[i]`` bitwise ``run_ensemble`` — losses included);
+  * ``run_scenarios`` threads payload outputs through mixed groups.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FailureConfig, Payload, ProtocolConfig
+from repro.core import run_ensemble, run_simulation
+from repro.core.payload import PAYLOAD_STREAM, payload_init_key
+from repro.core.simulator import init_state, protocol_step, run_sweep
+from repro.data import make_markov_task
+from repro.graphs import random_regular_graph
+from repro.graphs.state import mirror_indices
+from repro.models.config import ModelConfig
+from repro.models.model import Model
+from repro.optim import RwSgdPayload, adamw
+from repro.sweep import Scenario, run_scenarios
+from repro.utils.prng import fold_in_time
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden", "pr1_trajectories.json")
+
+# must mirror tests/golden/capture_pr1.py
+N, DEG, GRAPH_SEED = 24, 4, 3
+W, Z0, STEPS, SEEDS, BASE_KEY = 10, 5, 60, 2, 7
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return random_regular_graph(N, DEG, seed=GRAPH_SEED)
+
+
+@pytest.fixture(scope="module")
+def golden():
+    with open(GOLDEN) as f:
+        return json.load(f)
+
+
+def _pcfg(alg="decafork", **kw):
+    base = dict(algorithm=alg, z0=Z0, max_walks=W, rt_bins=32, protocol_start=10)
+    base.update(kw)
+    return ProtocolConfig(**base)
+
+
+def _tiny_payload(max_walks=W, train_every=1):
+    cfg = ModelConfig(
+        name="tiny", arch_type="dense", num_layers=1, d_model=32, d_ff=64,
+        vocab_size=64, num_heads=2, num_kv_heads=2, head_dim=16,
+        dtype="float32",
+    )
+    model = Model(cfg)
+    task = make_markov_task(cfg.vocab_size, rank=4)
+    return RwSgdPayload(
+        model, adamw(1e-2), task, max_walks=max_walks, local_batch=1,
+        seq_len=8, train_every=train_every,
+    )
+
+
+def _assert_outputs_equal(ref, got, label):
+    for name, a, b in zip(ref._fields, ref, got):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b), err_msg=f"{label}: field {name}"
+        )
+
+
+# ---------------------------------------------------------------------------
+# payload invariance of the control plane
+# ---------------------------------------------------------------------------
+
+
+def test_payload_none_is_bitwise_pr2_golden(graph, golden):
+    """The payload-capable engine with payload=None reproduces the PR-2
+    golden ensemble trajectories exactly."""
+    pcfg = _pcfg("decafork", eps=1.8)
+    fcfg = FailureConfig(burst_times=(20,), burst_sizes=(2,))
+    outs = run_ensemble(graph, pcfg, fcfg, steps=STEPS, seeds=SEEDS,
+                        base_key=BASE_KEY, payload=None)
+    ref = golden["ensemble"]["decafork/burst"]
+    for name, arr in zip(outs._fields, outs):
+        got = np.asarray(arr)
+        np.testing.assert_array_equal(
+            got, np.asarray(ref[name], dtype=got.dtype), err_msg=name
+        )
+
+
+def test_null_payload_leaves_golden_trajectories_bitwise(graph, golden):
+    """Attaching the hook-free base Payload must not perturb a single
+    simulator stream: StepOutputs stay bitwise the PR-2 goldens."""
+    pcfg = _pcfg("decafork", eps=1.8)
+    fcfg = FailureConfig(burst_times=(20,), burst_sizes=(2,))
+    outs, pouts = run_ensemble(graph, pcfg, fcfg, steps=STEPS, seeds=SEEDS,
+                               base_key=BASE_KEY, payload=Payload())
+    assert pouts == ()
+    ref = golden["ensemble"]["decafork/burst"]
+    for name, arr in zip(outs._fields, outs):
+        got = np.asarray(arr)
+        np.testing.assert_array_equal(
+            got, np.asarray(ref[name], dtype=got.dtype), err_msg=name
+        )
+
+
+@pytest.mark.slow
+def test_rw_sgd_payload_leaves_sim_outputs_bitwise(graph):
+    """Even a real training payload is invisible to the control plane."""
+    pcfg = _pcfg("decafork+", eps=1.6, eps2=6.0)
+    fcfg = FailureConfig(burst_times=(15,), burst_sizes=(2,))
+    ref = run_ensemble(graph, pcfg, fcfg, steps=25, seeds=SEEDS, base_key=3)
+    outs, learn = run_ensemble(graph, pcfg, fcfg, steps=25, seeds=SEEDS,
+                               base_key=3, payload=_tiny_payload())
+    _assert_outputs_equal(ref, outs, "rw-sgd attached")
+    assert learn.loss.shape == (SEEDS, 25, W)
+    assert np.isfinite(np.asarray(learn.loss)).all()
+
+
+def test_run_simulation_return_shapes(graph):
+    pcfg = _pcfg()
+    fcfg = FailureConfig()
+    final, outs = run_simulation(graph, pcfg, fcfg, steps=10, key=1)
+    assert outs.z.shape == (10,)
+    (final2, carry), (outs2, learn) = run_simulation(
+        graph, pcfg, fcfg, steps=10, key=1, payload=_tiny_payload()
+    )
+    _assert_outputs_equal(outs, outs2, "payload run")
+    assert carry.steps.shape == (W,)
+    assert learn.mean_loss.shape == (10,)
+
+
+# ---------------------------------------------------------------------------
+# fused hooks == hand-rolled per-round loop
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_fused_scan_matches_per_round_hook_loop(graph):
+    """The in-scan hook sequence (on_terminate -> on_fork -> on_visit)
+    reproduces a hand-rolled per-round loop, per-slot losses included."""
+    payload = _tiny_payload()
+    pcfg = _pcfg("decafork", eps=1.8)
+    fcfg = FailureConfig(burst_times=(8,), burst_sizes=(2,))
+    T = 15
+    (_, rs_fused), (outs, learn) = run_simulation(
+        graph, pcfg, fcfg, steps=T, key=0, payload=payload
+    )
+
+    key = jax.random.key(0)
+    neighbors = jnp.asarray(graph.neighbors)
+    degrees = jnp.asarray(graph.degrees)
+    mirror = jnp.asarray(mirror_indices(graph))
+    state = init_state(graph.n, graph.max_degree, pcfg, fcfg, key)
+    rs = payload.init(payload_init_key(key))
+    step = jax.jit(
+        lambda s: protocol_step(s, pcfg, fcfg, neighbors, degrees, mirror, None)
+    )
+    losses = []
+    for _ in range(T):
+        k_visit = fold_in_time(state.key, state.t, PAYLOAD_STREAM)
+        state, out = step(state)
+        rs = payload.on_terminate(rs, out.terminated)
+        rs = payload.on_fork(rs, out.fork_parent)
+        rs, pout = payload.on_visit(rs, state.walks, state.t - 1, k_visit)
+        losses.append(np.asarray(pout.loss))
+    np.testing.assert_allclose(
+        np.asarray(learn.loss), np.stack(losses), rtol=2e-5, atol=1e-6
+    )
+    np.testing.assert_array_equal(
+        np.asarray(rs_fused.steps), np.asarray(rs.steps)
+    )
+
+
+def test_hook_order_is_terminate_fork_visit(graph):
+    """The protocol frees slots (execute_terminations) BEFORE it
+    reallocates them (execute_forks), so a slot can be terminated and
+    re-forked in one round; the hooks must run in that order or a
+    clearing payload would clobber the fresh copy. The scan body is
+    traced once, so trace-time recording observes the per-round order."""
+    calls = []
+
+    class Recorder(Payload):
+        def on_terminate(self, carry, terminated):
+            calls.append("terminate")
+            return carry
+
+        def on_fork(self, carry, fork_parent):
+            calls.append("fork")
+            return carry
+
+        def on_visit(self, carry, walks, t, key):
+            calls.append("visit")
+            return carry, ()
+
+    run_simulation(graph, _pcfg(), FailureConfig(), steps=3, key=0,
+                   payload=Recorder())
+    assert calls == ["terminate", "fork", "visit"]
+
+
+# ---------------------------------------------------------------------------
+# RwSgdPayload hook semantics
+# ---------------------------------------------------------------------------
+
+
+def test_rw_sgd_on_fork_duplicates_parent_replica():
+    payload = _tiny_payload(max_walks=4)
+    rs = payload.init(jax.random.key(0))
+    # make slot 0 distinct: one train step with only slot 0 active
+    walks = type("WS", (), {})()
+    walks.pos = jnp.zeros((4,), jnp.int32)
+    walks.active = jnp.asarray([True, False, False, False])
+    rs, _ = payload.on_visit(rs, walks, jnp.int32(0), jax.random.key(1))
+    fork_parent = jnp.asarray([-1, -1, 0, -1], jnp.int32)
+    rs2 = payload.on_fork(rs, fork_parent)
+    for a, b in zip(jax.tree.leaves(rs2.params), jax.tree.leaves(rs.params)):
+        np.testing.assert_array_equal(np.asarray(a[2]), np.asarray(b[0]))
+        np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+    assert int(rs2.steps[2]) == int(rs.steps[0]) == 1
+    # no-fork round: fork_parent all -1 is a no-op
+    rs3 = payload.on_fork(rs2, jnp.full((4,), -1, jnp.int32))
+    for a, b in zip(jax.tree.leaves(rs3.params), jax.tree.leaves(rs2.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_rw_sgd_on_visit_trains_only_active_slots():
+    payload = _tiny_payload(max_walks=3)
+    rs = payload.init(jax.random.key(0))
+    walks = type("WS", (), {})()
+    walks.pos = jnp.asarray([0, 1, 2], jnp.int32)
+    walks.active = jnp.asarray([True, True, False])
+    rs2, out = payload.on_visit(rs, walks, jnp.int32(0), jax.random.key(1))
+    assert int(out.trained) == 2
+    losses = np.asarray(out.loss)
+    assert losses[0] > 0 and losses[1] > 0 and losses[2] == 0.0
+    for a, b in zip(jax.tree.leaves(rs2.params), jax.tree.leaves(rs.params)):
+        assert not np.array_equal(np.asarray(a[0]), np.asarray(b[0]))
+        np.testing.assert_array_equal(np.asarray(a[2]), np.asarray(b[2]))
+    np.testing.assert_array_equal(np.asarray(rs2.steps), [1, 1, 0])
+
+
+def test_rw_sgd_train_every_thins_updates():
+    payload = _tiny_payload(max_walks=2, train_every=2)
+    rs = payload.init(jax.random.key(0))
+    walks = type("WS", (), {})()
+    walks.pos = jnp.asarray([0, 1], jnp.int32)
+    walks.active = jnp.asarray([True, True])
+    _, out_odd = payload.on_visit(rs, walks, jnp.int32(1), jax.random.key(1))
+    assert int(out_odd.trained) == 0 and float(out_odd.mean_loss) == 0.0
+    _, out_even = payload.on_visit(rs, walks, jnp.int32(2), jax.random.key(1))
+    assert int(out_even.trained) == 2
+
+
+def test_payload_validate_capacity_mismatch(graph):
+    payload = _tiny_payload(max_walks=W + 1)
+    with pytest.raises(ValueError, match="max_walks"):
+        run_simulation(graph, _pcfg(), FailureConfig(), steps=5, payload=payload)
+
+
+# ---------------------------------------------------------------------------
+# batching: payload outputs are ordinary sweep axes
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def small_payload():
+    return _tiny_payload()
+
+
+@pytest.mark.slow
+def test_sweep_payload_matches_ensemble_bitwise(graph, small_payload):
+    """run_sweep with a payload == per-scenario run_ensemble, bitwise —
+    StepOutputs AND learning telemetry."""
+    scenarios = [
+        (_pcfg("decafork", eps=1.4),
+         FailureConfig(burst_times=(8,), burst_sizes=(2,))),
+        (_pcfg("decafork", eps=2.2), FailureConfig(p_fail=0.002)),
+    ]
+    T = 12
+    outs, learn = run_sweep(graph, scenarios, steps=T, seeds=SEEDS,
+                            base_key=BASE_KEY, payload=small_payload)
+    assert outs.z.shape == (2, SEEDS, T)
+    assert learn.loss.shape == (2, SEEDS, T, W)
+    for i, (pc, fc) in enumerate(scenarios):
+        ref, ref_learn = run_ensemble(graph, pc, fc, steps=T, seeds=SEEDS,
+                                      base_key=BASE_KEY, payload=small_payload)
+        got = jax.tree_util.tree_map(lambda x: x[i], outs)
+        _assert_outputs_equal(ref, got, f"scenario{i}")
+        for name, a, b in zip(ref_learn._fields, ref_learn, learn):
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b[i]),
+                err_msg=f"scenario{i}: payload field {name}",
+            )
+
+
+@pytest.mark.slow
+def test_run_scenarios_threads_payloads_through_groups(graph, small_payload):
+    """Mixed static groups each carry the payload; per-scenario payload
+    outputs come back in input order, name-addressable."""
+    fc = FailureConfig(burst_times=(8,), burst_sizes=(2,))
+    scenarios = [
+        Scenario("dfk", _pcfg("decafork", eps=1.6), fc),
+        Scenario("none", _pcfg("none"), fc),
+        Scenario("dfk2", _pcfg("decafork", eps=2.0), fc),
+    ]
+    T = 12
+    res = run_scenarios(graph, scenarios, steps=T, seeds=SEEDS,
+                        base_key=3, payload=small_payload)
+    assert res.names == ("dfk", "none", "dfk2")
+    assert res.payloads is not None and len(res.payloads) == 3
+    for s in scenarios:
+        ref, ref_learn = run_ensemble(
+            graph, s.pcfg, s.fcfg, steps=T, seeds=SEEDS, base_key=3,
+            payload=small_payload,
+        )
+        _assert_outputs_equal(ref, res[s.name], s.name)
+        np.testing.assert_array_equal(
+            np.asarray(ref_learn.loss), np.asarray(res.payload(s.name).loss),
+            err_msg=s.name,
+        )
+
+
+def test_run_scenarios_without_payload_has_no_payloads(graph):
+    fc = FailureConfig()
+    res = run_scenarios(graph, [Scenario("a", _pcfg(), fc)], steps=5, seeds=1)
+    assert res.payloads is None
+    with pytest.raises(KeyError):
+        res.payload("a")

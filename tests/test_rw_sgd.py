@@ -1,0 +1,118 @@
+"""``fork_replica`` slot-copy edge cases (ISSUE 3 satellite).
+
+The payload layer leans on three properties of the slot-to-slot copy:
+dropped events (out-of-range destination) are exact no-ops, all source
+reads happen against the pre-copy state (chained forks in one round), and
+a re-fork into a previously terminated slot overwrites every leaf of the
+stale state (params, both optimizer moments, step counter).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import walkers as wlk
+from repro.optim import adamw, fork_replica, init_replicas
+from repro.optim.rw_sgd import replica_train_step
+
+
+def _replicas(n_slots=4, distinct=True):
+    """ReplicaSet with per-slot-distinct params and non-trivial moments."""
+    init_fn = lambda key: {"w": jax.random.normal(key, (3,))}
+    opt = adamw(1e-1)
+    rs = init_replicas(init_fn, opt.init, jax.random.key(0), max_walks=n_slots)
+    if distinct:
+        # one masked train step per slot against slot-specific targets
+        # makes params, mu and nu all slot-distinct
+        loss_fn = lambda p, b: (jnp.sum((p["w"] - b) ** 2), {})
+        step = replica_train_step(loss_fn, opt)
+        targets = jnp.arange(n_slots, dtype=jnp.float32)[:, None] * jnp.ones((3,))
+        for _ in range(2):
+            rs, _ = step(rs, targets, jnp.ones((n_slots,), bool))
+    return rs
+
+
+def _leaves(rs):
+    return jax.tree.leaves((rs.params, rs.opt_state, rs.steps))
+
+
+def _assert_slot_equal(rs_a, slot_a, rs_b, slot_b):
+    for x, y in zip(_leaves(rs_a), _leaves(rs_b)):
+        np.testing.assert_array_equal(np.asarray(x[slot_a]), np.asarray(y[slot_b]))
+
+
+def test_fork_into_out_of_range_slot_is_noop():
+    """A dropped fork event (destination == W, the allocate_fork_slots
+    overflow encoding) must leave every slot untouched."""
+    rs = _replicas(4)
+    W = rs.steps.shape[0]
+    out = fork_replica(rs, jnp.int32(0), jnp.int32(W), jnp.asarray(True))
+    for x, y in zip(_leaves(out), _leaves(rs)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    # and a masked-off event with an in-range destination is equally inert
+    out2 = fork_replica(rs, jnp.int32(0), jnp.int32(2), jnp.asarray(False))
+    for x, y in zip(_leaves(out2), _leaves(rs)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_chained_fork_reads_pre_round_state():
+    """Two events in one round where one destination is another event's
+    source: all copies read the PRE-copy state (gather-then-scatter), so
+    a parent that is itself overwritten this round still hands its
+    original replica to its child."""
+    rs = _replicas(4)
+    src = jnp.asarray([1, 0], jnp.int32)
+    dst = jnp.asarray([0, 3], jnp.int32)  # slot 0 is overwritten AND read
+    out = fork_replica(rs, src, dst, jnp.asarray([True, True]))
+    _assert_slot_equal(out, 0, rs, 1)  # dst 0 <- old slot 1
+    _assert_slot_equal(out, 3, rs, 0)  # dst 3 <- old slot 0 (pre-overwrite)
+    _assert_slot_equal(out, 1, rs, 1)  # sources themselves untouched
+    _assert_slot_equal(out, 2, rs, 2)
+
+
+def test_parent_forked_then_parent_fails_child_keeps_copy():
+    """Fork chained with the parent's death in the same round: the child
+    slot keeps the copied replica after the parent slot is deactivated
+    and even after the parent's replica is later clobbered."""
+    rs = _replicas(4)
+    ws = wlk.WalkState(
+        pos=jnp.asarray([0, 1, 2, 3], jnp.int32),
+        active=jnp.asarray([True, True, False, False]),
+        track=jnp.arange(4, dtype=jnp.int32),
+    )
+    ls = jnp.full((5, 4), -1, jnp.int32)
+    ev = jnp.asarray([True, False, False, False])  # walk 0 forks
+    new_ws, _, n, fork_parent = wlk.execute_forks(ws, ls, ev, ws.pos, None, jnp.int32(3))
+    assert int(n) == 1
+    child = int(np.nonzero(np.asarray(fork_parent) >= 0)[0][0])
+    out = fork_replica(
+        rs, jnp.maximum(fork_parent, 0), jnp.arange(4, dtype=jnp.int32),
+        fork_parent >= 0,
+    )
+    _assert_slot_equal(out, child, rs, 0)
+    # parent dies (burst) right after: the child's copy is unaffected
+    dead = new_ws.active.at[0].set(False)
+    assert bool(dead[child])
+    _assert_slot_equal(out, child, rs, 0)
+
+
+def test_terminate_then_refork_overwrites_stale_payload_state():
+    """Slot reuse: a replica left behind by a terminated walk must be
+    fully replaced on re-fork — params, BOTH adamw moments, and the local
+    step counter (no stale-state leakage into the new walk)."""
+    rs = _replicas(4)  # every slot has nonzero moments + steps == 2
+    # the doomed walk takes one extra local step before terminating, so
+    # every leaf of its slot (params, moments, counters) is distinguishable
+    loss_fn = lambda p, b: (jnp.sum((p["w"] - b) ** 2), {})
+    step = replica_train_step(loss_fn, adamw(1e-1))
+    only2 = jnp.asarray([False, False, True, False])
+    rs, _ = step(rs, jnp.full((4, 3), 9.0), only2)
+    # walk 2 terminates; later walk 1 forks into the freed slot 2
+    out = fork_replica(rs, jnp.int32(1), jnp.int32(2), jnp.asarray(True))
+    _assert_slot_equal(out, 2, rs, 1)
+    # explicitly: nothing of the stale slot-2 state survives anywhere
+    stale = _leaves(rs)
+    fresh = _leaves(out)
+    for x, y in zip(fresh, stale):
+        assert not np.array_equal(np.asarray(x[2]), np.asarray(y[2])), (
+            "stale leaf survived slot reuse"
+        )

@@ -155,6 +155,37 @@ def test_sharded_path_single_device(graph):
     np.testing.assert_array_equal(np.asarray(a.z), np.asarray(b.z))
 
 
+def test_sharded_tristate_dispatch(graph, monkeypatch):
+    """The sharded knob is an explicit tri-state: None auto-places
+    (explicit=False), True demands placement (explicit=True), False
+    never touches device placement, and anything else is a TypeError."""
+    import repro.sweep.engine as eng
+
+    calls = []
+
+    def spy(pcfgs, fcfgs, n_scenarios, *, explicit=False):
+        calls.append(explicit)
+        return pcfgs, fcfgs
+
+    monkeypatch.setattr(eng, "maybe_shard_scenarios", spy)
+    fc = FailureConfig(burst_times=(20,), burst_sizes=(2,))
+    scenarios = [(_pcfg("decafork", "gather", eps=e), fc) for e in (1.6, 2.0)]
+
+    run_sweep(graph, scenarios, steps=5, seeds=1, sharded=False)
+    assert calls == []  # explicit opt-out: placement never consulted
+    run_sweep(graph, scenarios, steps=5, seeds=1, sharded=None)
+    assert calls == [False]  # auto mode
+    run_sweep(graph, scenarios, steps=5, seeds=1, sharded=True)
+    assert calls == [False, True]  # explicit demand
+    with pytest.raises(TypeError, match="sharded"):
+        run_sweep(graph, scenarios, steps=5, seeds=1, sharded="auto")
+    # bool-equal ints must not silently alias into the wrong path
+    for bad in (0, 1):
+        with pytest.raises(TypeError, match="sharded"):
+            run_sweep(graph, scenarios, steps=5, seeds=1, sharded=bad)
+    assert calls == [False, True]  # nothing leaked through
+
+
 def test_traced_config_leaves_do_not_recompile(graph):
     """Numeric knobs are traced: run_ensemble reuses one program across an
     epsilon grid and across failure rates (the pre-sweep per-curve compile
