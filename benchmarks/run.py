@@ -5,6 +5,11 @@ set BENCH_FULL=1 for the paper-scale ensembles (50 seeds, 9000 steps).
 
   PYTHONPATH=src python -m benchmarks.run             # all figures
   PYTHONPATH=src python -m benchmarks.run fig1 fig3   # a subset
+  PYTHONPATH=src python -m benchmarks.run --smoke     # seconds-fast CI lane
+
+``--smoke`` runs no timings: it asserts the estimator implementations
+(gather / compare / pallas / fused, jnp AND interpret-mode kernels) agree
+on tiny shapes — the drift tripwire for every PR's fast CI lane.
 """
 from __future__ import annotations
 
@@ -40,11 +45,94 @@ BENCHES = {
     "kernel_theta": kernel_theta.run,
     "auto_eps": auto_eps.run,
     "sweep": bench_sweep.run,
+    "round": bench_sweep.run_round,
     "payload": bench_payload.run,
 }
 
 
+def smoke() -> None:
+    """Estimator-impl agreement tripwire (tiny shapes, no timing).
+
+    Asserts, in a few seconds:
+      * one fused observation round (ref AND interpret-mode Pallas
+        round_update, AND the theta_survival kernel) is bitwise the
+        unfused gather/compare sequence, on a non-tile-multiple n;
+      * a short simulation drives the same trajectory under every
+        estimator_impl (gather vs compare/pallas/fused decisions may
+        round differently in float, so trajectories are compared within
+        the node-sum family and the gather family separately).
+    """
+    import jax
+    import numpy as np
+
+    from repro.core import FailureConfig, ProtocolConfig, run_simulation
+    from repro.core import estimator as est
+    from repro.graphs import random_regular_graph
+    from repro.kernels import (
+        round_update_pallas,
+        round_update_ref,
+        theta_sums_pallas,
+    )
+    from repro.kernels.round_update import random_round_inputs
+
+    # --- one-round bitwise agreement on an odd n ------------------------
+    args = random_round_inputs(jax.random.key(7), 13, 6, 32, 6)
+    ls, hist, total, pos, track, r, valid, upd, t = args
+    want = round_update_ref(*args)
+    got = round_update_pallas(*args, interpret=True)
+    for name, a, b in zip(("last_seen", "hist", "total", "sums"), want, got):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b), err_msg=f"round_update: {name}"
+        )
+    sums_kernel = theta_sums_pallas(want[0], want[1], want[2], t, interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(sums_kernel), np.asarray(want[3]), err_msg="theta_sums"
+    )
+    cum = est.survival_cumulative(est.ReturnTimeState(want[1], want[2]))
+    theta_g = est.theta_hat(want[0], cum, want[2], t, pos, track)
+    theta_r = est.theta_hat_rows(want[0], want[1], want[2], t, pos, track)
+    np.testing.assert_array_equal(
+        np.asarray(theta_g), np.asarray(theta_r), err_msg="theta rows"
+    )
+    # node-sum theta assumes the walk's own column was just stamped with t,
+    # which only holds for ACTIVE walks (exactly where the protocol reads it)
+    act = np.asarray(upd) >= 0
+    np.testing.assert_allclose(
+        np.asarray(theta_g)[act],
+        np.asarray(est.theta_hat_from_node_sums(want[3], pos))[act],
+        rtol=1e-5, atol=1e-5, err_msg="gather vs node sums",
+    )
+
+    # --- trajectory agreement across estimator_impl ---------------------
+    g = random_regular_graph(19, 4, seed=2)
+    fcfg = FailureConfig(burst_times=(30,), burst_sizes=(2,))
+    zs = {}
+    for impl in ("gather", "compare", "pallas", "fused", "auto"):
+        pcfg = ProtocolConfig(
+            algorithm="decafork", z0=4, max_walks=8, eps=1.4,
+            protocol_start=15, rt_bins=32, estimator_impl=impl,
+        )
+        _, o = run_simulation(g, pcfg, fcfg, steps=60, key=5)
+        zs[impl] = np.asarray(o.z)
+    for impl in ("pallas", "fused"):
+        np.testing.assert_array_equal(
+            zs[impl], zs["compare"], err_msg=f"{impl} vs compare trajectory"
+        )
+    # 'auto' must resolve to the backend's best impl's exact trajectory
+    auto_family = "fused" if jax.default_backend() == "tpu" else "gather"
+    np.testing.assert_array_equal(
+        zs["auto"], zs[auto_family],
+        err_msg=f"auto vs {auto_family} trajectory",
+    )
+    print("SMOKE ok: estimator impls agree (round bitwise, trajectories)")
+
+
 def main() -> None:
+    if "--smoke" in sys.argv[1:]:
+        t0 = time.time()
+        smoke()
+        print(f"# smoke wall time: {time.time() - t0:.1f}s", file=sys.stderr)
+        return
     names = [a for a in sys.argv[1:] if not a.startswith("-")] or list(BENCHES)
     print("name,us_per_call,derived")
     t0 = time.time()

@@ -6,6 +6,13 @@ Section IV/V theory (Irwin-Hall threshold design + computable bounds).
 """
 from repro.core.protocol import ProtocolConfig, ALGORITHMS
 from repro.core.failures import FailureConfig
+from repro.core.outputs import (
+    FULL,
+    SCALARS,
+    OutputSpec,
+    RecordedOutputs,
+    StepOutputs,
+)
 from repro.core.payload import Payload
 from repro.core.simulator import (
     run_simulation,
@@ -14,7 +21,6 @@ from repro.core.simulator import (
     max_overshoot,
     survived,
     SimState,
-    StepOutputs,
 )
 from repro.core.irwin_hall import (
     irwin_hall_cdf,
@@ -29,6 +35,10 @@ __all__ = [
     "ProtocolConfig",
     "ALGORITHMS",
     "FailureConfig",
+    "FULL",
+    "SCALARS",
+    "OutputSpec",
+    "RecordedOutputs",
     "Payload",
     "run_simulation",
     "run_ensemble",

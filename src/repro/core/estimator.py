@@ -121,6 +121,90 @@ def theta_hat(
     return 0.5 + jnp.sum(jnp.where(mask, s, 0.0), axis=1)
 
 
+def theta_hat_rows(
+    last_seen: jax.Array,  # (n, C) int32
+    hist: jax.Array,  # (n, B)
+    total: jax.Array,  # (n,)
+    t: jax.Array,  # scalar int32 current time
+    pos: jax.Array,  # (W,) node of each visiting walk
+    track: jax.Array,  # (W,) column owned by each walk
+    *,
+    pi: jax.Array | None = None,  # if set, use analytic survival instead
+    max_elapsed: int | None = None,  # static upper bound on t (see below)
+) -> jax.Array:
+    """Row-restricted Eq. (1): gather the <= W visited rows FIRST, then
+    run the cumsum + survival lookup on those rows only.
+
+    Bitwise-identical to ``theta_hat(last_seen, survival_cumulative(rts),
+    ...)`` — per-row cumsums and the elementwise survival evaluation do
+    not depend on the other rows — but the per-round work drops from
+    O(n*B) (full cumulative table every round) to O(W*B): proportional
+    to the walks actually observing, not the graph. This is the default
+    ``estimator_impl="gather"`` hot path.
+
+    ``max_elapsed`` (static) is an upper bound on ``t`` over the whole
+    run (the simulator passes its ``steps``): no elapsed time — and so
+    no cumulative-table lookup index — can exceed it, so the per-row
+    cumsum is trimmed to ``min(B, max_elapsed)`` bins. Prefix sums at
+    the surviving indices do not involve the trimmed tail, so the
+    result stays bitwise identical while a short run over a
+    high-resolution histogram (steps < rt_bins) skips the dead tail's
+    work entirely.
+    """
+    W = pos.shape[0]
+    C = last_seen.shape[1]
+    ls = last_seen[pos]  # (W, C)
+    elapsed = t - ls  # (W, C)
+    if pi is not None:
+        nodes_b = jnp.broadcast_to(pos[:, None], (W, C))
+        s = analytic_survival_eval(pi, nodes_b, elapsed)
+    else:
+        bins = hist.shape[1]
+        if max_elapsed is not None:
+            bins = min(bins, max(int(max_elapsed), 1))
+        csum = jnp.cumsum(hist[pos][:, :bins], axis=1)  # visited rows only
+        cum = jnp.concatenate([jnp.zeros_like(csum[:, :1]), csum], axis=1)
+        r_cl = jnp.clip(elapsed, 0, bins)
+        tot = jnp.broadcast_to(total[pos][:, None], (W, C))
+        seen_mass = jnp.take_along_axis(cum, r_cl, axis=1)
+        s = 1.0 - seen_mass / jnp.maximum(tot, 1.0)
+        s = jnp.where(tot > 0, s, 1.0)
+        s = jnp.where(elapsed <= 0, 1.0, s)
+    cols = jnp.arange(C)[None, :]
+    mask = (ls != NEVER) & (cols != track[:, None])
+    return 0.5 + jnp.sum(jnp.where(mask, s, 0.0), axis=1)
+
+
+def survival_node_sums_rows(
+    last_seen: jax.Array,  # (R, C) — any row block (full table or a tile)
+    hist: jax.Array,  # (R, B)
+    total: jax.Array,  # (R,)
+    t: jax.Array,
+) -> jax.Array:
+    """The compare-accumulate survival core: sum_c S_i(t - L_{i,c}) per
+    row, no gather — cum_i(r) = sum_b hist[i,b] [r > b].
+
+    This is THE single source of the formula: ``node_sums_compare`` calls
+    it on the full node table, and the Pallas kernels
+    (``kernels/theta_survival.py``, ``kernels/round_update.py``) call it
+    on their VMEM-resident node tiles — one implementation, so the
+    survival conventions (optimistic no-sample prior, S(r<=0)=1 via the
+    r=0 clamp) can never drift between the jnp oracle and the kernels.
+    Plain jnp on arrays; traceable inside and outside kernel bodies.
+    """
+    R, C = last_seen.shape
+    B = hist.shape[1]
+    valid = last_seen != NEVER
+    r = jnp.where(valid, t - last_seen, 0)  # (R, C)
+    bidx = jax.lax.broadcasted_iota(jnp.int32, (R, C, B), 2)
+    over = (r[:, :, None] > bidx) & valid[:, :, None]
+    cnt = jnp.sum(over.astype(jnp.float32), axis=1)  # (R, B)
+    mass = jnp.sum(cnt * hist, axis=1)
+    n_valid = jnp.sum(valid.astype(jnp.float32), axis=1)
+    s = n_valid - mass / jnp.maximum(total, 1.0)
+    return jnp.where(total > 0, s, n_valid)
+
+
 def node_sums_compare(
     last_seen: jax.Array,  # (n, C)
     hist: jax.Array,  # (n, B)
@@ -128,21 +212,10 @@ def node_sums_compare(
     t: jax.Array,
 ) -> jax.Array:
     """sum_c S_i(t - L_{i,c}) per node via the TPU compare-accumulate
-    formulation (no gather): cum_i(r) = sum_b hist[i,b] [r > b].
-
-    Same math as kernels/theta_survival.py; exists in pure jnp both as
-    the kernel oracle and as a measurable CPU/XLA variant.
-    """
-    B = hist.shape[1]
-    valid = last_seen != NEVER
-    r = jnp.where(valid, t - last_seen, 0)  # (n, C)
-    bidx = jnp.arange(B, dtype=jnp.int32)
-    over = (r[:, :, None] > bidx[None, None, :]) & valid[:, :, None]
-    cnt = jnp.sum(over.astype(jnp.float32), axis=1)  # (n, B)
-    mass = jnp.sum(cnt * hist, axis=1)
-    n_valid = jnp.sum(valid, axis=1).astype(jnp.float32)
-    s = n_valid - mass / jnp.maximum(total, 1.0)
-    return jnp.where(total > 0, s, n_valid)
+    formulation (``survival_node_sums_rows`` on the full table); exists
+    in pure jnp both as the kernel oracle and as a measurable CPU/XLA
+    variant."""
+    return survival_node_sums_rows(last_seen, hist, total, t)
 
 
 def theta_hat_from_node_sums(node_sums: jax.Array, pos: jax.Array) -> jax.Array:

@@ -1,0 +1,184 @@
+"""Trajectory output selection: which ``StepOutputs`` fields the scan stacks.
+
+Every simulator round produces a full :class:`StepOutputs` *inside* the
+compiled trajectory — that part is free. What is NOT free is stacking a
+field over ``steps`` (x seeds x scenarios) in the scan's output buffers:
+the per-walk fields (``fork_parent``, ``terminated``) are ``(W,)`` wide,
+so recording them costs O(W) more HBM traffic per round than the five
+scalar diagnostics, for every trajectory of every sweep.
+
+An :class:`OutputSpec` names the fields a run materializes. The default
+is scalars-only; attaching a payload auto-selects the full set (payload
+hooks consume the per-walk fields, and their post-hoc replay — e.g. the
+``bench_payload`` dispatch-loop arm — needs them recorded). Pass
+``outputs=`` to any runner to override either way.
+
+Recorded trajectories come back as a :class:`RecordedOutputs` — a
+namedtuple-like, pytree-registered view over exactly the selected fields.
+Asking it for a field the spec dropped raises an ``AttributeError`` that
+says how to get it back, instead of silently returning stale data.
+
+The spec is static under ``jax.jit`` (hashable, equality by field set):
+two runs differing only in their OutputSpec are different compiled
+programs, which is the point — the thinned program never allocates the
+dropped stacks at all.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Sequence, Tuple
+
+import jax
+
+
+class StepOutputs(NamedTuple):
+    """Everything one synchronous round can report (see simulator.py)."""
+
+    z: jax.Array  # live walk count after the step
+    forks: jax.Array  # forks executed this step
+    terms: jax.Array  # deliberate terminations this step
+    failures: jax.Array  # walks lost to the threat model this step
+    theta_mean: jax.Array  # mean theta-hat over chosen walks (diagnostic)
+    fork_parent: jax.Array  # (W,) parent slot of a walk forked into s, else -1
+    terminated: jax.Array  # (W,) walks deliberately terminated this step
+
+
+ALL_FIELDS: Tuple[str, ...] = StepOutputs._fields
+SCALAR_FIELDS: Tuple[str, ...] = ("z", "forks", "terms", "failures", "theta_mean")
+PER_WALK_FIELDS: Tuple[str, ...] = ("fork_parent", "terminated")
+
+
+@dataclasses.dataclass(frozen=True)
+class OutputSpec:
+    """The set of ``StepOutputs`` fields a run records (static under jit).
+
+    Field order is canonicalized to ``StepOutputs`` order, so two specs
+    naming the same set are equal (and hit the same compiled program)
+    regardless of how they were written.
+    """
+
+    fields: Tuple[str, ...] = SCALAR_FIELDS
+
+    def __post_init__(self):
+        wanted = tuple(self.fields)
+        unknown = [f for f in wanted if f not in ALL_FIELDS]
+        if unknown:
+            raise ValueError(
+                f"unknown StepOutputs field(s) {unknown!r}; valid fields are "
+                f"{list(ALL_FIELDS)}"
+            )
+        if not wanted:
+            raise ValueError("OutputSpec needs at least one field")
+        canonical = tuple(f for f in ALL_FIELDS if f in set(wanted))
+        object.__setattr__(self, "fields", canonical)
+
+    def select(self, out: StepOutputs) -> "RecordedOutputs":
+        """The thinned per-round view the scan actually stacks."""
+        return RecordedOutputs(
+            self.fields, tuple(getattr(out, f) for f in self.fields)
+        )
+
+
+SCALARS = OutputSpec(SCALAR_FIELDS)
+FULL = OutputSpec(ALL_FIELDS)
+
+
+def resolve_spec(outputs: Any, payload: Any) -> OutputSpec:
+    """Resolve a runner's ``outputs=`` argument to a concrete OutputSpec.
+
+    ``None`` means auto: scalars-only for a payload-free run, the full
+    field set when a payload is attached (its hooks mirror the per-walk
+    fork/terminate events, so recording them costs nothing extra to
+    debuggability and keeps replay tooling working).
+    """
+    if outputs is None:
+        return FULL if payload is not None else SCALARS
+    if isinstance(outputs, OutputSpec):
+        return outputs
+    if isinstance(outputs, str):
+        named = {"scalars": SCALARS, "full": FULL}
+        if outputs in named:
+            return named[outputs]
+        raise ValueError(
+            f"unknown outputs shorthand {outputs!r}; use 'scalars', 'full', "
+            "an OutputSpec, or a tuple of StepOutputs field names"
+        )
+    if isinstance(outputs, Sequence):
+        return OutputSpec(tuple(outputs))
+    raise TypeError(
+        f"outputs must be None, 'scalars', 'full', an OutputSpec or a "
+        f"sequence of field names; got {outputs!r}"
+    )
+
+
+class RecordedOutputs:
+    """Namedtuple-like view over the fields an OutputSpec recorded.
+
+    Supports attribute access (``outs.z``), iteration/len/indexing and
+    ``_fields`` (so code written against the old ``StepOutputs`` tuple
+    keeps working), plus dict-style ``_asdict``. Accessing a known
+    ``StepOutputs`` field that the spec dropped raises immediately with
+    the fix, instead of an opaque ``None``.
+    """
+
+    __slots__ = ("_fields", "_values")
+
+    def __init__(self, fields: Tuple[str, ...], values: Tuple[Any, ...]):
+        if len(fields) != len(values):
+            raise ValueError("fields/values length mismatch")
+        object.__setattr__(self, "_fields", tuple(fields))
+        object.__setattr__(self, "_values", tuple(values))
+
+    def __getattr__(self, name):
+        fields = object.__getattribute__(self, "_fields")
+        if name in fields:
+            values = object.__getattribute__(self, "_values")
+            return values[fields.index(name)]
+        if name in ALL_FIELDS:
+            raise AttributeError(
+                f"StepOutputs field {name!r} was not recorded: this run's "
+                f"OutputSpec is {fields!r}. Re-run with outputs='full' (or an "
+                f"OutputSpec including {name!r}) to record it."
+            )
+        raise AttributeError(name)
+
+    def __setattr__(self, name, value):
+        raise AttributeError("RecordedOutputs is immutable")
+
+    def __reduce__(self):
+        # pickle/deepcopy support: reconstruct through __init__ (plain
+        # slot restoration would trip the immutability guard)
+        return (RecordedOutputs, (self._fields, self._values))
+
+    def __iter__(self):
+        return iter(self._values)
+
+    def __len__(self):
+        return len(self._values)
+
+    def __getitem__(self, i):
+        if isinstance(i, str):
+            return getattr(self, i)
+        return self._values[i]
+
+    def _asdict(self) -> dict:
+        return dict(zip(self._fields, self._values))
+
+    def __repr__(self):
+        body = ", ".join(
+            f"{f}={v!r}" for f, v in zip(self._fields, self._values)
+        )
+        return f"RecordedOutputs({body})"
+
+
+def _recorded_flatten(ro: RecordedOutputs):
+    return ro._values, ro._fields
+
+
+def _recorded_unflatten(fields, values) -> RecordedOutputs:
+    return RecordedOutputs(tuple(fields), tuple(values))
+
+
+jax.tree_util.register_pytree_node(
+    RecordedOutputs, _recorded_flatten, _recorded_unflatten
+)

@@ -70,7 +70,10 @@ class ProtocolConfig:
     rt_bins: int = 1024  # return-time histogram resolution, static
     protocol_start: int | jax.Array = 0  # no decisions before this step
     analytic_survival: bool = False  # footnote 5: geometric survival from pi
-    estimator_impl: str = "gather"  # 'gather' | 'compare' | 'pallas'
+    # 'gather' (row-restricted cumsum+gather) | 'compare' (dense compare-
+    # accumulate) | 'pallas' (theta_survival kernel) | 'fused' (one
+    # round_update pass: scatter+max+sums) | 'auto' (best per backend)
+    estimator_impl: str = "gather"
     # ---- beyond-paper: self-calibrating thresholds ----------------------
     # The paper hand-tunes eps per graph (Fig. 4 uses eps in {1.85,2,2.1})
     # and its Irwin-Hall rule ignores the inspection-paradox bias

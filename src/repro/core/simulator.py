@@ -40,6 +40,12 @@ bitwise identical to the pre-payload engine; payload PRNG streams are
 disjoint from the simulator's, so even an attached payload leaves every
 ``StepOutputs`` trajectory bitwise unchanged.
 
+Every entry point also accepts ``outputs=`` (``core.outputs.OutputSpec``)
+selecting which ``StepOutputs`` fields the trajectory scan stacks over
+time — scalars-only by default (the per-walk ``(W,)`` fields are
+auto-recorded only when a payload is attached), so the dropped
+``(..., steps, W)`` buffers are never allocated.
+
 The static ``Graph`` stays a trace-time constant (the superset topology);
 ``GraphState`` only masks it, so scenario rows vary *which parts are up
 when* without recompilation. With every topology knob disabled the masks
@@ -59,6 +65,14 @@ from repro.core import estimator as est
 from repro.core import failures as flr
 from repro.core import protocol as prt
 from repro.core import walkers as wlk
+from repro.core.outputs import (
+    FULL,
+    SCALARS,
+    OutputSpec,
+    RecordedOutputs,
+    StepOutputs,
+    resolve_spec,
+)
 from repro.core.payload import PAYLOAD_STREAM, payload_init_key
 from repro.graphs.generators import Graph
 from repro.graphs.spectral import stationary_distribution
@@ -75,16 +89,6 @@ class SimState(NamedTuple):
     key: jax.Array
     theta_hist: jax.Array  # (n, TB) warmup theta-hat histogram (auto_eps)
     graph: GraphState  # live topology masks (node_up, edge_up)
-
-
-class StepOutputs(NamedTuple):
-    z: jax.Array  # live walk count after the step
-    forks: jax.Array  # forks executed this step
-    terms: jax.Array  # deliberate terminations this step
-    failures: jax.Array  # walks lost to the threat model this step
-    theta_mean: jax.Array  # mean theta-hat over chosen walks (diagnostic)
-    fork_parent: jax.Array  # (W,) parent slot of a walk forked into s, else -1
-    terminated: jax.Array  # (W,) walks deliberately terminated this step
 
 
 def init_state(
@@ -136,8 +140,16 @@ def protocol_step(
     degrees: jax.Array,
     mirror: jax.Array,
     pi: jax.Array | None,
+    *,
+    max_elapsed: int | None = None,
 ):
-    """One synchronous round; returns (next state, per-step outputs)."""
+    """One synchronous round; returns (next state, per-step outputs).
+
+    ``max_elapsed`` (static) is an optional upper bound on ``t`` over the
+    whole run — the trajectory scan passes its ``steps`` — letting the
+    estimator trim the dead tail of the cumulative return-time table
+    (bitwise-identical results; see ``estimator.theta_hat_rows``).
+    """
     t = state.t
     key = state.key
     k_move = fold_in_time(key, t, 0)
@@ -172,34 +184,60 @@ def protocol_step(
     n_failed = n_before - jnp.sum(active)
 
     # 4. observations: return samples + last-seen updates for ALL visitors
+    impl = pcfg.estimator_impl
+    if impl == "auto":
+        # function-level import: the kernels package (and with it
+        # jax.experimental.pallas) loads only when a round actually asks
+        from repro.kernels.platform import best_estimator_impl
+
+        impl = best_estimator_impl()
     last_seen = state.last_seen
     prev = last_seen[ws.pos, ws.track]  # (W,)
     r = t - prev
     valid = ws.active & (prev != est.NEVER) & (r >= 1)
-    rts = est.record_returns(state.rts, ws.pos, r, valid)
     upd = jnp.where(ws.active, t, est.NEVER)
-    last_seen = last_seen.at[ws.pos, ws.track].max(upd, mode="drop")
+    node_sums = None
+    fuse = (
+        impl == "fused"
+        and pcfg.algorithm in ("decafork", "decafork+")
+        and pi is None
+    )
+    if fuse:
+        # one fused pass: scatter + max-update + node theta-sums
+        # (kernels/round_update.py; Pallas tiles on TPU, jnp elsewhere)
+        from repro.kernels.round_update import round_update
+
+        last_seen, hist, tot, node_sums = round_update(
+            last_seen, state.rts.hist, state.rts.total,
+            ws.pos, ws.track, r, valid, upd, t,
+        )
+        rts = est.ReturnTimeState(hist=hist, total=tot)
+    else:
+        rts = est.record_returns(state.rts, ws.pos, r, valid)
+        last_seen = last_seen.at[ws.pos, ws.track].max(upd, mode="drop")
 
     # 5. estimation + decisions for chosen walks
     chosen = prt.choose_walks(ws.pos, ws.active, degrees.shape[0])
     enabled = t >= pcfg.protocol_start
     theta_hist = state.theta_hist
     if pcfg.algorithm in ("decafork", "decafork+"):
-        if pcfg.estimator_impl == "gather" or pi is not None:
-            cum = est.survival_cumulative(rts)
-            theta = est.theta_hat(
-                last_seen, cum, rts.total, t, ws.pos, ws.track, pi=pi
+        if fuse:
+            theta = est.theta_hat_from_node_sums(node_sums, ws.pos)
+        elif impl == "gather" or pi is not None:
+            theta = est.theta_hat_rows(
+                last_seen, rts.hist, rts.total, t, ws.pos, ws.track, pi=pi,
+                max_elapsed=max_elapsed,
             )
-        elif pcfg.estimator_impl == "compare":
+        elif impl == "compare":
             sums = est.node_sums_compare(last_seen, rts.hist, rts.total, t)
             theta = est.theta_hat_from_node_sums(sums, ws.pos)
-        elif pcfg.estimator_impl == "pallas":
+        elif impl == "pallas":
             from repro.kernels import theta_sums_pallas
 
             sums = theta_sums_pallas(last_seen, rts.hist, rts.total, t)
             theta = est.theta_hat_from_node_sums(sums, ws.pos)
         else:
-            raise ValueError(pcfg.estimator_impl)
+            raise ValueError(impl)
         # beyond-paper: per-node self-calibrated thresholds (auto_eps)
         if pcfg.auto_eps:
             warmup = ~enabled
@@ -230,20 +268,11 @@ def protocol_step(
         ev = prt.missingperson_decisions(
             last_seen, ws.pos, ws.track, chosen, t, k_dec, pcfg, enabled
         )  # (W, C) — only initial-id columns (< z0) can fire
-        W, C = ev.shape
-        ev_mask = ev.reshape(-1)
-        ev_origin = jnp.broadcast_to(ws.pos[:, None], (W, C)).reshape(-1)
-        ev_track = jnp.broadcast_to(
-            jnp.arange(C, dtype=jnp.int32)[None, :], (W, C)
-        ).reshape(-1)
-        ev_parent = jnp.broadcast_to(
-            jnp.arange(W, dtype=jnp.int32)[:, None], (W, C)
-        ).reshape(-1)
-        ws, last_seen, n_forks, fork_parent = wlk.execute_forks(
-            ws, last_seen, ev_mask, ev_origin, ev_track, t, ev_parent
+        ws, last_seen, n_forks, fork_parent = wlk.execute_grid_forks(
+            ws, last_seen, ev, t
         )
         n_terms = jnp.int32(0)
-        term_mask = jnp.zeros((W,), bool)
+        term_mask = jnp.zeros((ev.shape[0],), bool)
         theta_mean = jnp.float32(0.0)
     else:  # 'none': plain multi-RW system without self-regulation
         n_forks = jnp.int32(0)
@@ -274,10 +303,20 @@ def protocol_step(
     return new_state, out
 
 
-def _run_core(key, neighbors, degrees, mirror, pi, pcfg, fcfg, steps, n, payload=None):
+def _run_core(
+    key, neighbors, degrees, mirror, pi, pcfg, fcfg, steps, n,
+    payload=None, spec=SCALARS,
+):
     """Un-jitted single-trajectory scan; every batching wrapper traces
     through this one function so ensemble/sweep results are bitwise equal
     to the single-run path.
+
+    ``spec`` (an ``OutputSpec``, static) selects which ``StepOutputs``
+    fields the scan stacks over time: the full per-round StepOutputs is
+    free *inside* the round, but every recorded field costs a
+    ``(steps, ...)`` output buffer — O(W) extra HBM traffic per round for
+    the per-walk fields — so the thinned view is the default and the
+    dropped stacks are never allocated at all.
 
     With ``payload=None`` this is exactly the payload-free program (same
     scan carry, same jaxpr). With a payload, the carry becomes
@@ -288,14 +327,18 @@ def _run_core(key, neighbors, degrees, mirror, pi, pcfg, fcfg, steps, n, payload
     terminated and re-forked in one round — clearing must not clobber the
     fresh copy); the forked walk trains at its origin node the very round
     it is created, on a copy of its parent's pre-round replica. Returns
-    ``((final SimState, final carry), (StepOutputs, payload_outputs))``.
+    ``((final SimState, final carry), (RecordedOutputs, payload_outputs))``.
     """
     state = init_state(n, neighbors.shape[1], pcfg, fcfg, key)
 
     if payload is None:
 
         def body(s, _):
-            return protocol_step(s, pcfg, fcfg, neighbors, degrees, mirror, pi)
+            s2, out = protocol_step(
+                s, pcfg, fcfg, neighbors, degrees, mirror, pi,
+                max_elapsed=steps,
+            )
+            return s2, spec.select(out)
 
         return jax.lax.scan(body, state, None, length=steps)
 
@@ -305,47 +348,60 @@ def _run_core(key, neighbors, degrees, mirror, pi, pcfg, fcfg, steps, n, payload
         s, pc = carry
         t = s.t  # pre-round step counter, matching the simulator's streams
         k_visit = fold_in_time(s.key, t, PAYLOAD_STREAM)
-        s2, out = protocol_step(s, pcfg, fcfg, neighbors, degrees, mirror, pi)
+        s2, out = protocol_step(
+            s, pcfg, fcfg, neighbors, degrees, mirror, pi, max_elapsed=steps
+        )
         pc = payload.on_terminate(pc, out.terminated)
         pc = payload.on_fork(pc, out.fork_parent)
         pc, pout = payload.on_visit(pc, s2.walks, t, k_visit)
-        return (s2, pc), (out, pout)
+        return (s2, pc), (spec.select(out), pout)
 
     return jax.lax.scan(body, (state, pcarry), None, length=steps)
 
 
-_run = jax.jit(_run_core, static_argnames=("steps", "n", "payload"))
+# deliberately NO input donation on any entry point: the trajectory
+# outputs never alias the (tiny) key/config inputs, and donating a
+# caller-owned key would break the standard same-key-different-config
+# comparison on accelerators. The memory win that matters — reusing the
+# scan carry (last_seen/hist/topology state) in place every round — is
+# already done by XLA inside the compiled program.
+_run = jax.jit(_run_core, static_argnames=("steps", "n", "payload", "spec"))
 
 
 def _run_ensemble_core(
-    keys, neighbors, degrees, mirror, pi, pcfg, fcfg, steps, n, payload=None
+    keys, neighbors, degrees, mirror, pi, pcfg, fcfg, steps, n,
+    payload=None, spec=SCALARS,
 ):
-    """(seeds,) keys -> StepOutputs with leading (seeds,) axis (a
-    (StepOutputs, payload_outputs) pair when a payload is attached)."""
+    """(seeds,) keys -> RecordedOutputs with leading (seeds,) axis (a
+    (RecordedOutputs, payload_outputs) pair when a payload is attached)."""
     return jax.vmap(
         lambda k: _run_core(
-            k, neighbors, degrees, mirror, pi, pcfg, fcfg, steps, n, payload
+            k, neighbors, degrees, mirror, pi, pcfg, fcfg, steps, n,
+            payload, spec,
         )[1]
     )(keys)
 
 
 _run_ensemble = functools.partial(
-    jax.jit, static_argnames=("steps", "n", "payload")
+    jax.jit, static_argnames=("steps", "n", "payload", "spec")
 )(_run_ensemble_core)
 
 
-@functools.partial(jax.jit, static_argnames=("steps", "n", "payload"))
+@functools.partial(jax.jit, static_argnames=("steps", "n", "payload", "spec"))
 def _run_sweep(
-    keys, neighbors, degrees, mirror, pi, pcfgs, fcfgs, steps, n, payload=None
+    keys, neighbors, degrees, mirror, pi, pcfgs, fcfgs, steps, n,
+    payload=None, spec=SCALARS,
 ):
     """Stacked configs (leaves with leading (S,) axis) + (seeds,) keys ->
-    StepOutputs with leading (S, seeds) axes, all in one XLA program (a
-    (StepOutputs, payload_outputs) pair when a payload is attached)."""
+    RecordedOutputs with leading (S, seeds) axes, all in one XLA program
+    (a (RecordedOutputs, payload_outputs) pair when a payload is
+    attached)."""
 
     def one_scenario(pcfg, fcfg):
         return jax.vmap(
             lambda k: _run_core(
-                k, neighbors, degrees, mirror, pi, pcfg, fcfg, steps, n, payload
+                k, neighbors, degrees, mirror, pi, pcfg, fcfg, steps, n,
+                payload, spec,
             )[1]
         )(keys)
 
@@ -377,20 +433,29 @@ def run_simulation(
     key: jax.Array | int = 0,
     *,
     payload=None,
+    outputs=None,
 ):
-    """Run one trajectory; returns (final SimState, StepOutputs over time).
+    """Run one trajectory; returns (final SimState, RecordedOutputs over
+    time).
+
+    ``outputs`` selects the recorded ``StepOutputs`` fields (see
+    ``core.outputs``): ``None`` auto-resolves to scalars-only for a
+    payload-free run and the full set when a payload is attached; pass
+    ``'full'``/``'scalars'``, an ``OutputSpec`` or a field-name tuple to
+    override.
 
     With a ``payload`` the workload runs fused inside the same scan and
     the return value becomes ``((final SimState, final payload carry),
-    (StepOutputs, payload outputs over time))``.
+    (RecordedOutputs, payload outputs over time))``.
     """
     if isinstance(key, int):
         key = jax.random.key(key)
     _check_payload(payload, pcfg)
+    spec = resolve_spec(outputs, payload)
     neighbors, degrees, mirror, pi = _graph_arrays(graph, pcfg)
     return _run(
         key, neighbors, degrees, mirror, pi, pcfg, fcfg, steps, graph.n,
-        payload=payload,
+        payload=payload, spec=spec,
     )
 
 
@@ -403,24 +468,28 @@ def run_ensemble(
     base_key: jax.Array | int = 0,
     *,
     payload=None,
+    outputs=None,
 ):
-    """vmap over seeds: StepOutputs with leading (seeds,) axis.
+    """vmap over seeds: RecordedOutputs with leading (seeds,) axis.
 
     Numeric config changes (eps grids, burst schedules, failure rates)
     reuse the compiled program — only static fields retrigger XLA.
+    ``outputs`` selects the recorded fields (``core.outputs``; ``None`` =
+    scalars-only, or everything when a payload is attached).
 
-    With a ``payload`` returns ``(StepOutputs, payload_outputs)``, both
-    with leading (seeds,) axes; each seed initializes its own payload
+    With a ``payload`` returns ``(RecordedOutputs, payload_outputs)``,
+    both with leading (seeds,) axes; each seed initializes its own payload
     carry (independent model replicas per trajectory).
     """
     if isinstance(base_key, int):
         base_key = jax.random.key(base_key)
     _check_payload(payload, pcfg)
+    spec = resolve_spec(outputs, payload)
     keys = jax.random.split(base_key, seeds)
     neighbors, degrees, mirror, pi = _graph_arrays(graph, pcfg)
     return _run_ensemble(
         keys, neighbors, degrees, mirror, pi, pcfg, fcfg, steps, graph.n,
-        payload=payload,
+        payload=payload, spec=spec,
     )
 
 
@@ -433,6 +502,7 @@ def run_sweep(
     *,
     sharded: bool | None = None,
     payload=None,
+    outputs=None,
 ):
     """Run MANY (protocol, failure) scenarios x seeds in one compiled call.
 
@@ -448,9 +518,12 @@ def run_sweep(
     derive from ``base_key``, so ``run_sweep(...)[i]`` is bitwise equal to
     ``run_ensemble(graph, *scenarios[i], steps, seeds, base_key)``.
 
-    Returns StepOutputs with leading (len(scenarios), seeds) axes; with a
-    ``payload``, a ``(StepOutputs, payload_outputs)`` pair (same leading
-    axes — the workload is just another batched scenario dimension).
+    Returns RecordedOutputs with leading (len(scenarios), seeds) axes;
+    with a ``payload``, a ``(RecordedOutputs, payload_outputs)`` pair
+    (same leading axes — the workload is just another batched scenario
+    dimension). ``outputs`` selects the recorded fields (``core.outputs``)
+    — the default scalars-only spec means a payload-free sweep never
+    allocates the ``(S, seeds, steps, W)`` per-walk stacks at all.
 
     ``sharded`` is an explicit tri-state controlling scenario-axis device
     placement: ``None`` (default) auto-places across the 'data' mesh axis
@@ -471,6 +544,7 @@ def run_sweep(
     pcfgs, fcfgs = stack_configs(scenarios)
     pcfg0 = as_pair(scenarios[0])[0]
     _check_payload(payload, pcfg0)
+    spec = resolve_spec(outputs, payload)
     neighbors, degrees, mirror, pi = _graph_arrays(graph, pcfg0)
     if sharded is not False:
         from repro.sweep.engine import maybe_shard_scenarios
@@ -480,7 +554,7 @@ def run_sweep(
         )
     return _run_sweep(
         keys, neighbors, degrees, mirror, pi, pcfgs, fcfgs, steps, graph.n,
-        payload=payload,
+        payload=payload, spec=spec,
     )
 
 

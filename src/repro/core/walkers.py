@@ -121,6 +121,29 @@ def allocate_fork_slots(active: jax.Array, ev_mask: jax.Array):
     return safe_slot, ev_ok, ev_slot
 
 
+def execute_grid_forks(
+    ws: WalkState,
+    last_seen: jax.Array,  # (n, C)
+    ev: jax.Array,  # (W, C) bool event grid: (parent walk, identity)
+    t: jax.Array,
+):
+    """MISSINGPERSON-shaped fork grid: event ``(k, l)`` forks a duplicate
+    of walk ``k`` carrying identity ``l`` (replacing missing walk ``l``).
+
+    The flat per-event origin/track/parent indices are *derived* from the
+    event's grid coordinates (row = parent, column = track, origin =
+    parent's node) instead of materializing three broadcast ``(W*C,)``
+    index arrays at every call site.
+    """
+    W, C = ev.shape
+    e = jnp.arange(W * C, dtype=jnp.int32)
+    parent = e // C
+    track = e % C
+    return execute_forks(
+        ws, last_seen, ev.reshape(-1), ws.pos[parent], track, t, parent
+    )
+
+
 def execute_forks(
     ws: WalkState,
     last_seen: jax.Array,  # (n, C)

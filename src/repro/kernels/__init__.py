@@ -1,12 +1,27 @@
-"""Pallas TPU kernels for the system's three compute hot loops:
+"""Pallas TPU kernels for the system's compute hot loops:
 
-  theta_survival — the DECAFORK estimator sweep (the paper's hot-spot)
+  round_update — the fused per-round observation pass (scatter + max-
+                 update + theta sums), ``estimator_impl="fused"``
+  theta_survival — the standalone DECAFORK estimator sweep
   flash_attention — payload attention (causal + sliding-window, GQA)
   ssd_scan — Mamba-2 intra-chunk SSD block
 
-Each kernel has a pure-jnp oracle in ref.py and interpret-mode allclose
-sweeps in tests/.
+Each kernel has a pure-jnp oracle (``ref.py``, or the unfused reference
+sequence in ``round_update.round_update_ref``) and interpret-mode sweeps
+in tests/ — ``round_update`` is held to *bitwise* oracle equality.
 """
 from repro.kernels.ops import attention_pallas, ssd_pallas, theta_sums_pallas
+from repro.kernels.round_update import (
+    round_update,
+    round_update_pallas,
+    round_update_ref,
+)
 
-__all__ = ["attention_pallas", "ssd_pallas", "theta_sums_pallas"]
+__all__ = [
+    "attention_pallas",
+    "ssd_pallas",
+    "theta_sums_pallas",
+    "round_update",
+    "round_update_pallas",
+    "round_update_ref",
+]

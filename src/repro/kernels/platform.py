@@ -1,4 +1,4 @@
-"""Platform detection shared by the Pallas kernels and their wrappers.
+"""Platform detection + small shared helpers for the Pallas kernels.
 
 Leaf module (no intra-package imports) so both ``kernels/ops.py`` and the
 kernel modules themselves can use it without an import cycle.
@@ -6,8 +6,51 @@ kernel modules themselves can use it without an import cycle.
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 
 def default_interpret() -> bool:
     """Pallas ``interpret`` default: emulate on CPU, compile on TPU."""
     return jax.default_backend() != "tpu"
+
+
+def best_estimator_impl() -> str:
+    """Best DECAFORK ``estimator_impl`` for the current backend.
+
+    TPU: the fused round kernel (``kernels/round_update.py``) — one
+    VMEM pass over node tiles, no full cumulative table, no gathers.
+    CPU/GPU: the row-restricted gather path (``estimator.theta_hat_rows``)
+    — gathers are cheap there and the per-round work is O(W*B), not
+    O(n*W*B). ``ProtocolConfig(estimator_impl="auto")`` resolves through
+    this at trace time.
+    """
+    return "fused" if jax.default_backend() == "tpu" else "gather"
+
+
+def pad_node_axis(bn: int, last_seen, hist, total):
+    """Pad the node axis up to a multiple of the tile ``bn`` with masked
+    "no data" rows — ``last_seen = NEVER`` (-1), empty histograms, zero
+    totals — that no walk can hit and whose theta sums are exactly 0.
+
+    Shared by every node-tiled kernel so arbitrary graph sizes work;
+    callers slice ``[:n]`` off the outputs. Returns the (possibly
+    unchanged) arrays plus the pad count.
+    """
+    n = last_seen.shape[0]
+    pad = (-n) % bn
+    if pad:
+        last_seen = jnp.concatenate(
+            [last_seen, jnp.full((pad,) + last_seen.shape[1:], -1, last_seen.dtype)]
+        )
+        hist = jnp.concatenate(
+            [hist, jnp.zeros((pad,) + hist.shape[1:], hist.dtype)]
+        )
+        total = jnp.concatenate([total, jnp.zeros((pad,), total.dtype)])
+    return last_seen, hist, total, pad
+
+
+def best_round_impl() -> str:
+    """Implementation backing ``estimator_impl='fused'``: the Pallas
+    kernel on TPU, the fused pure-jnp reference elsewhere (interpret-mode
+    Pallas inside a long scan would be pure overhead on CPU)."""
+    return "pallas" if jax.default_backend() == "tpu" else "ref"

@@ -1,0 +1,229 @@
+"""Fused per-round observation kernel: scatter + max-update + theta sums.
+
+Every simulator round runs the observation pipeline at the visited nodes
+(``core/simulator.py`` step 4-5):
+
+  1. ``record_returns``   — scatter observed return times into the
+                            per-node histograms ``hist (n, B)`` / ``total``;
+  2. ``last_seen`` update — scatter-max the visit times into ``(n, C)``;
+  3. node theta sums      — sum_c S_i(t - last_seen[i, c]) per node
+                            (Eq. 1's node-side reduction).
+
+Unfused, 3. alone either re-builds the full ``(n, B+1)`` cumulative table
+every round (gather path) or re-materializes an ``(n, C, B)`` compare
+intermediate from HBM (compare path), and 1.-2. are separate scatter
+dispatches touching the same rows again. This module fuses all three into
+ONE node-tiled Pallas pass: each grid program holds a ``(bn, ...)`` tile
+of ``last_seen`` / ``hist`` / ``total`` in VMEM, applies the round's walk
+events to its tile (one-hot contractions — no scatter, no gather), and
+reduces the theta sums for its rows while they are still resident. The
+``(bn, C, B)`` compare intermediate never leaves VMEM, and per-round HBM
+traffic drops to one read + one write of the observation state.
+
+Exactness contract: ``hist``/``total`` hold event *counts* (integer-valued
+f32, as ``record_returns`` maintains) and the walk weights are 0/1, so the
+one-hot matmul accumulates exactly the same floats as the reference
+scatter-adds; the max-updates are integer ops. The kernel is therefore
+*bitwise* equal to the unfused reference sequence — ``round_update_ref``
+(which literally IS that sequence, with ``estimator.node_sums_compare``
+as the sums oracle) — and is golden-tested as such, including node counts
+that are not a multiple of the tile (padded with masked "no data" rows).
+
+``round_update`` dispatches per backend (``kernels.platform``): the
+Pallas kernel on TPU, the fused-at-the-jnp-level reference elsewhere.
+The simulator selects this whole path with ``estimator_impl="fused"``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import estimator as est
+from repro.kernels.platform import (
+    best_round_impl,
+    default_interpret,
+    pad_node_axis,
+)
+
+DEFAULT_BLOCK_NODES = 8
+NEVER = est.NEVER
+
+
+def random_round_inputs(key, n, C, B, W, t=70, p_active=0.8):
+    """A plausible mid-trajectory observation round honoring the input
+    contract (integer-valued count histograms, ``r``/``valid``/``upd``
+    derived exactly as the simulator derives them) — the shared fixture
+    for the bitwise oracle tests, the benchmark grid and the CI smoke
+    tripwire. Returns ``(last_seen, hist, total, pos, track, r, valid,
+    upd, t)``, i.e. ``round_update``'s argument tuple."""
+    ks = jax.random.split(key, 5)
+    ls = jax.random.randint(ks[0], (n, C), -1, t, dtype=jnp.int32)
+    hist = jnp.floor(jax.random.uniform(ks[1], (n, B)) * 3).astype(jnp.float32)
+    total = hist.sum(1)
+    pos = jax.random.randint(ks[2], (W,), 0, n, dtype=jnp.int32)
+    track = jax.random.randint(ks[3], (W,), 0, C, dtype=jnp.int32)
+    active = jax.random.uniform(ks[4], (W,)) < p_active
+    t = jnp.int32(t)
+    prev = ls[pos, track]
+    r = t - prev
+    valid = active & (prev != NEVER) & (r >= 1)
+    upd = jnp.where(active, t, NEVER)
+    return ls, hist, total, pos, track, r, valid, upd, t
+
+
+def round_update_ref(last_seen, hist, total, pos, track, r, valid, upd, t):
+    """The unfused reference sequence (and the Pallas kernel's bitwise
+    oracle): ``record_returns`` -> ``last_seen`` scatter-max ->
+    ``node_sums_compare``. Returns ``(last_seen, hist, total, sums)``."""
+    rts = est.record_returns(est.ReturnTimeState(hist, total), pos, r, valid)
+    ls = last_seen.at[pos, track].max(upd, mode="drop")
+    sums = est.node_sums_compare(ls, rts.hist, rts.total, t)
+    return ls, rts.hist, rts.total, sums
+
+
+def _round_kernel(
+    t_ref, pos_ref, track_ref, rbin_ref, w_ref, upd_ref,
+    ls_ref, hist_ref, tot_ref,
+    ls_out, hist_out, tot_out, sums_out,
+):
+    t = t_ref[0, 0]
+    pos = pos_ref[0, :]  # (W,) node visited by each walk slot
+    track = track_ref[0, :]  # (W,) column each walk writes
+    rbin = rbin_ref[0, :]  # (W,) histogram bin of the observed return
+    w = w_ref[0, :]  # (W,) 0/1 observation weight
+    upd = upd_ref[0, :]  # (W,) last-seen update value (NEVER if inactive)
+    ls = ls_ref[...]  # (bn, C) int32
+    hist = hist_ref[...]  # (bn, B) f32
+    tot = tot_ref[...]  # (bn, 1) f32
+    bn, C = ls.shape
+    B = hist.shape[1]
+    W = pos.shape[0]
+
+    base = pl.program_id(0) * bn
+    rows = jax.lax.broadcasted_iota(jnp.int32, (bn, W), 0) + base
+    hit = rows == pos[None, :]  # (bn, W): walk j visits row i of this tile
+
+    # 1. return-time scatter as a one-hot contraction: counts are exact
+    #    integer-valued f32, so the matmul accumulates bitwise what the
+    #    reference scatter-adds would
+    bin_iota = jax.lax.broadcasted_iota(jnp.int32, (W, B), 1)
+    ev = jnp.where(bin_iota == rbin[:, None], w[:, None], 0.0)  # (W, B)
+    hist = hist + jnp.dot(hit.astype(jnp.float32), ev)
+    tot = tot + jnp.sum(jnp.where(hit, w[None, :], 0.0), axis=1, keepdims=True)
+
+    # 2. last-seen scatter-max at (pos[j], track[j]) <- upd[j]
+    col_iota = jax.lax.broadcasted_iota(jnp.int32, (W, C), 1)
+    m = jnp.where(col_iota == track[:, None], upd[:, None], NEVER)  # (W, C)
+    upd_rows = jnp.max(
+        jnp.where(hit[:, :, None], m[None, :, :], NEVER), axis=1
+    )  # (bn, C)
+    ls = jnp.maximum(ls, upd_rows)
+
+    # 3. theta sums on the updated tile: the shared compare-accumulate
+    #    core (estimator.survival_node_sums_rows), VMEM-resident
+    ls_out[...] = ls
+    hist_out[...] = hist
+    tot_out[...] = tot
+    sums_out[...] = est.survival_node_sums_rows(ls, hist, tot[:, 0], t)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_nodes", "interpret"))
+def round_update_pallas(
+    last_seen: jax.Array,  # (n, C) int32
+    hist: jax.Array,  # (n, B) f32 counts
+    total: jax.Array,  # (n,) f32 counts
+    pos: jax.Array,  # (W,) int32
+    track: jax.Array,  # (W,) int32
+    r: jax.Array,  # (W,) int32 observed return times (t - prev)
+    valid: jax.Array,  # (W,) bool
+    upd: jax.Array,  # (W,) int32 last-seen update (NEVER if inactive)
+    t: jax.Array,  # scalar int32
+    *,
+    block_nodes: int = DEFAULT_BLOCK_NODES,
+    interpret: bool | None = None,
+):
+    """One fused observation round over node tiles; see module docstring.
+
+    Returns ``(last_seen, hist, total, sums)`` with the round's walk
+    events applied and ``sums[i] = sum_c S_i(t - last_seen[i, c])``.
+    ``n`` need not divide the tile: the node axis is padded with masked
+    "no data" rows (sliced off again) that no walk can hit. NB the
+    pad+slice happens per call, so a non-tile-multiple ``n`` inside a
+    scanned trajectory pays one extra copy of the observation state per
+    round — pick ``n`` (or ``block_nodes``) tile-aligned on the hot
+    path, or carry pre-padded state (ROADMAP follow-up).
+    """
+    n, C = last_seen.shape
+    B = hist.shape[1]
+    W = pos.shape[0]
+    if interpret is None:
+        interpret = default_interpret()
+    bn = min(block_nodes, n)
+    last_seen, hist, total, pad = pad_node_axis(bn, last_seen, hist, total)
+    npad = n + pad
+    rbin = jnp.clip(r, 1, B) - 1  # record_returns' bin rule
+    w = valid.astype(jnp.float32)
+    t_arr = jnp.asarray(t, jnp.int32).reshape(1, 1)
+    walk_spec = pl.BlockSpec((1, W), lambda i: (0, 0))  # broadcast to tiles
+    ls_o, hist_o, tot_o, sums_o = pl.pallas_call(
+        _round_kernel,
+        grid=(npad // bn,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),  # t (broadcast)
+            walk_spec,  # pos
+            walk_spec,  # track
+            walk_spec,  # rbin
+            walk_spec,  # w
+            walk_spec,  # upd
+            pl.BlockSpec((bn, C), lambda i: (i, 0)),  # last_seen tile
+            pl.BlockSpec((bn, B), lambda i: (i, 0)),  # hist tile
+            pl.BlockSpec((bn, 1), lambda i: (i, 0)),  # total tile
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, C), lambda i: (i, 0)),
+            pl.BlockSpec((bn, B), lambda i: (i, 0)),
+            pl.BlockSpec((bn, 1), lambda i: (i, 0)),
+            pl.BlockSpec((bn, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((npad, C), last_seen.dtype),
+            jax.ShapeDtypeStruct((npad, B), jnp.float32),
+            jax.ShapeDtypeStruct((npad, 1), jnp.float32),
+            jax.ShapeDtypeStruct((npad, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        t_arr,
+        pos[None, :],
+        track[None, :],
+        rbin[None, :],
+        w[None, :],
+        upd[None, :],
+        last_seen,
+        hist,
+        total[:, None],
+    )
+    return ls_o[:n], hist_o[:n], tot_o[:n, 0], sums_o[:n, 0]
+
+
+def round_update(
+    last_seen, hist, total, pos, track, r, valid, upd, t,
+    *, impl: str | None = None,
+):
+    """Backend-dispatched fused round: ``impl=None`` resolves through
+    ``kernels.platform.best_round_impl`` ('pallas' on TPU, 'ref' on
+    CPU/GPU). Both implementations are bitwise-interchangeable."""
+    if impl is None:
+        impl = best_round_impl()
+    if impl == "pallas":
+        return round_update_pallas(
+            last_seen, hist, total, pos, track, r, valid, upd, t
+        )
+    if impl == "ref":
+        return round_update_ref(
+            last_seen, hist, total, pos, track, r, valid, upd, t
+        )
+    raise ValueError(f"unknown round impl {impl!r}; use 'pallas' or 'ref'")

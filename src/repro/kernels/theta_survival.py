@@ -31,7 +31,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.platform import default_interpret
+from repro.core.estimator import survival_node_sums_rows
+from repro.kernels.platform import default_interpret, pad_node_axis
 
 
 DEFAULT_BLOCK_NODES = 8
@@ -42,20 +43,9 @@ def _theta_kernel(t_ref, ls_ref, hist_ref, tot_ref, out_ref):
     ls = ls_ref[...]  # (bn, W) int32
     hist = hist_ref[...]  # (bn, B) f32
     tot = tot_ref[...]  # (bn, 1) f32
-    bn, W = ls.shape
-    B = hist.shape[1]
-
-    valid = ls >= 0
-    r = jnp.where(valid, t - ls, 0)  # (bn, W)
-    bidx = jax.lax.broadcasted_iota(jnp.int32, (bn, W, B), 2)
-    over = (r[:, :, None] > bidx) & valid[:, :, None]  # (bn, W, B)
-    cnt = jnp.sum(over.astype(jnp.float32), axis=1)  # (bn, B)
-    mass = jnp.sum(cnt * hist, axis=1, keepdims=True)  # (bn, 1)
-    n_valid = jnp.sum(valid.astype(jnp.float32), axis=1, keepdims=True)
-    tot_safe = jnp.maximum(tot, 1.0)
-    s = n_valid - mass / tot_safe
-    s = jnp.where(tot > 0, s, n_valid)
-    out_ref[...] = s
+    # the (bn, W, B) compare intermediate stays VMEM-resident; the math
+    # itself is the shared estimator.survival_node_sums_rows core
+    out_ref[...] = survival_node_sums_rows(ls, hist, tot[:, 0], t)[:, None]
 
 
 @functools.partial(jax.jit, static_argnames=("block_nodes", "interpret"))
@@ -78,9 +68,8 @@ def theta_sums(
     n, W = last_seen.shape
     B = hist.shape[1]
     bn = min(block_nodes, n)
-    if n % bn:
-        raise ValueError(f"n={n} must be a multiple of block_nodes={bn}")
-    grid = (n // bn,)
+    last_seen, hist, total, pad = pad_node_axis(bn, last_seen, hist, total)
+    grid = ((n + pad) // bn,)
     t_arr = jnp.asarray(t, jnp.int32).reshape(1, 1)
     out = pl.pallas_call(
         _theta_kernel,
@@ -92,7 +81,7 @@ def theta_sums(
             pl.BlockSpec((bn, 1), lambda i: (i, 0)),  # total tile
         ],
         out_specs=pl.BlockSpec((bn, 1), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((n + pad, 1), jnp.float32),
         interpret=interpret,
     )(t_arr, last_seen, hist, total[:, None])
-    return out[:, 0]
+    return out[:n, 0]

@@ -113,6 +113,7 @@ def run_scenarios(
     *,
     sharded: bool | None = None,
     payload=None,
+    outputs=None,
 ) -> SweepResult:
     """Run a mixed scenario list; one compiled call per static group.
 
@@ -122,6 +123,10 @@ def run_scenarios(
     the input order. Each scenario's (seeds,)-leading outputs are bitwise
     what ``run_ensemble`` would produce for it under the same ``base_key``.
 
+    ``outputs`` selects the recorded ``StepOutputs`` fields per group
+    (``core.outputs``): the default records scalars only — no
+    ``(seeds, steps, W)`` per-walk stacks — unless a payload is attached.
+
     A ``payload`` (``core.payload.Payload``) rides every group's compiled
     call; per-scenario payload outputs land in ``SweepResult.payloads``
     (workload-under-failure — e.g. loss curves — as ordinary sweep rows).
@@ -130,20 +135,20 @@ def run_scenarios(
     names = tuple(
         getattr(s, "name", f"scenario{i}") for i, s in enumerate(scenarios)
     )
-    outputs = [None] * len(scenarios)
+    results = [None] * len(scenarios)
     payloads = [None] * len(scenarios) if payload is not None else None
     for _sig, idxs in group_scenarios(scenarios):
         group = [(as_pair(scenarios[i])) for i in idxs]
         stacked = sim.run_sweep(
             graph, group, steps, seeds, base_key, sharded=sharded,
-            payload=payload,
+            payload=payload, outputs=outputs,
         )
         if payload is not None:
             stacked, stacked_payload = stacked
         for j, i in enumerate(idxs):
-            outputs[i] = jax.tree_util.tree_map(lambda x: x[j], stacked)
+            results[i] = jax.tree_util.tree_map(lambda x: x[j], stacked)
             if payload is not None:
                 payloads[i] = jax.tree_util.tree_map(
                     lambda x: x[j], stacked_payload
                 )
-    return SweepResult(names=names, outputs=outputs, payloads=payloads)
+    return SweepResult(names=names, outputs=results, payloads=payloads)

@@ -58,7 +58,7 @@ def main() -> None:
     payload = {"ensemble": {}, "sweep": {}}
     for name, pcfg, fcfg in cases():
         outs = run_ensemble(graph, pcfg, fcfg, steps=STEPS, seeds=SEEDS,
-                            base_key=BASE_KEY)
+                            base_key=BASE_KEY, outputs="full")
         payload["ensemble"][name] = _outputs_to_dict(outs)
 
     sweep_cases = [
@@ -66,7 +66,8 @@ def main() -> None:
         for e, f in zip((1.4, 2.2), (FailureConfig(burst_times=(20,), burst_sizes=(2,)),
                                      FailureConfig(burst_times=(30,), burst_sizes=(1,), p_fail=0.002)))
     ]
-    outs = run_sweep(graph, sweep_cases, steps=STEPS, seeds=SEEDS, base_key=BASE_KEY)
+    outs = run_sweep(graph, sweep_cases, steps=STEPS, seeds=SEEDS,
+                     base_key=BASE_KEY, outputs="full")
     payload["sweep"]["decafork/eps-grid"] = _outputs_to_dict(outs)
 
     with open(OUT, "w") as f:

@@ -31,6 +31,23 @@ def test_theta_shapes(n, W, B):
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.parametrize("n", [3, 13, 17, 101])
+def test_theta_odd_n_pads_instead_of_raising(n):
+    """Arbitrary graph sizes: n that is not a multiple of block_nodes is
+    padded with masked rows and matches the compare oracle bitwise."""
+    from repro.core.estimator import node_sums_compare
+
+    k1, k2 = jax.random.split(jax.random.fold_in(KEY, n))
+    ls = jax.random.randint(k1, (n, 6), -1, 40, dtype=jnp.int32)
+    hist = jnp.floor(jax.random.uniform(k2, (n, 32)) * 3).astype(jnp.float32)
+    total = hist.sum(1)
+    t = jnp.int32(50)
+    got = theta_sums(ls, hist, total, t, block_nodes=8, interpret=True)
+    want = node_sums_compare(ls, hist, total, t)
+    assert got.shape == (n,)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
 def test_theta_block_size_invariance():
     k1, k2 = jax.random.split(KEY)
     ls = jax.random.randint(k1, (16, 8), -1, 30, dtype=jnp.int32)

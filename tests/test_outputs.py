@@ -1,0 +1,217 @@
+"""OutputSpec / RecordedOutputs: the thinned trajectory-recording path.
+
+Contract under test:
+  * a thinned run's recorded fields are bitwise the corresponding fields
+    of a full run (the spec only selects what is STACKED, never what is
+    computed) — payload-free and with a real training payload attached;
+  * the default payload-free spec is scalars-only: no (.., steps, W)
+    per-walk stacks anywhere in the output pytree;
+  * attaching a payload auto-records the full set;
+  * requesting a dropped field raises immediately with the fix;
+  * bad specs fail fast with clear errors.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    FULL,
+    SCALARS,
+    FailureConfig,
+    OutputSpec,
+    ProtocolConfig,
+    RecordedOutputs,
+    run_ensemble,
+    run_simulation,
+)
+from repro.core.outputs import ALL_FIELDS, SCALAR_FIELDS, resolve_spec
+from repro.core.simulator import run_sweep
+from repro.graphs import random_regular_graph
+
+N, W, Z0, STEPS, SEEDS = 24, 10, 5, 40, 2
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return random_regular_graph(N, 4, seed=3)
+
+
+def _pcfg(**kw):
+    base = dict(
+        algorithm="decafork", z0=Z0, max_walks=W, rt_bins=32,
+        protocol_start=10, eps=1.8,
+    )
+    base.update(kw)
+    return ProtocolConfig(**base)
+
+
+FCFG = FailureConfig(burst_times=(15,), burst_sizes=(2,))
+
+
+# ---------------------------------------------------------------------------
+# spec construction / resolution
+# ---------------------------------------------------------------------------
+
+
+def test_spec_canonicalizes_and_validates():
+    assert OutputSpec(("terminated", "z")).fields == ("z", "terminated")
+    assert OutputSpec(("z", "z")).fields == ("z",)
+    assert FULL.fields == ALL_FIELDS
+    assert SCALARS.fields == SCALAR_FIELDS
+    with pytest.raises(ValueError, match="unknown StepOutputs field"):
+        OutputSpec(("z", "bogus"))
+    with pytest.raises(ValueError, match="at least one"):
+        OutputSpec(())
+
+
+def test_resolve_spec_modes():
+    assert resolve_spec(None, None) is SCALARS
+    assert resolve_spec(None, object()) is FULL
+    assert resolve_spec("full", None) == FULL
+    assert resolve_spec("scalars", object()) == SCALARS
+    assert resolve_spec(("z",), None) == OutputSpec(("z",))
+    assert resolve_spec(FULL, None) is FULL
+    with pytest.raises(ValueError, match="shorthand"):
+        resolve_spec("everything", None)
+    with pytest.raises(TypeError, match="outputs must be"):
+        resolve_spec(7, None)
+
+
+def test_dropped_field_access_raises(graph):
+    outs = run_ensemble(graph, _pcfg(), FCFG, steps=10, seeds=1)
+    with pytest.raises(AttributeError, match="not recorded.*outputs='full'"):
+        outs.fork_parent
+    with pytest.raises(AttributeError):
+        outs.definitely_not_a_field
+
+
+# ---------------------------------------------------------------------------
+# thinned == slices of full, bitwise
+# ---------------------------------------------------------------------------
+
+
+def test_thinned_equals_full_slices_payload_free(graph):
+    full = run_ensemble(graph, _pcfg(), FCFG, steps=STEPS, seeds=SEEDS,
+                        base_key=7, outputs="full")
+    assert full._fields == ALL_FIELDS
+    for spec in (None, "scalars", ("z", "terminated"), OutputSpec(("forks",))):
+        thin = run_ensemble(graph, _pcfg(), FCFG, steps=STEPS, seeds=SEEDS,
+                            base_key=7, outputs=spec)
+        for name in thin._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(thin, name)),
+                np.asarray(getattr(full, name)),
+                err_msg=f"outputs={spec!r}: field {name}",
+            )
+
+
+@pytest.mark.slow
+def test_thinned_equals_full_slices_with_payload(graph):
+    from repro.data import make_markov_task
+    from repro.models.config import ModelConfig
+    from repro.models.model import Model
+    from repro.optim import RwSgdPayload, adamw
+
+    cfg = ModelConfig(
+        name="tiny", arch_type="dense", num_layers=1, d_model=32, d_ff=64,
+        vocab_size=64, num_heads=2, num_kv_heads=2, head_dim=16,
+        dtype="float32",
+    )
+    payload = RwSgdPayload(
+        Model(cfg), adamw(1e-2), make_markov_task(cfg.vocab_size, rank=4),
+        max_walks=W, local_batch=1, seq_len=8,
+    )
+    T = 12
+    full, learn_full = run_ensemble(
+        graph, _pcfg(), FCFG, steps=T, seeds=SEEDS, base_key=3,
+        payload=payload,
+    )
+    assert full._fields == ALL_FIELDS  # payload auto-records everything
+    thin, learn_thin = run_ensemble(
+        graph, _pcfg(), FCFG, steps=T, seeds=SEEDS, base_key=3,
+        payload=payload, outputs=("z",),
+    )
+    assert thin._fields == ("z",)
+    np.testing.assert_array_equal(np.asarray(thin.z), np.asarray(full.z))
+    # the payload outputs are untouched by the spec (hooks see everything)
+    np.testing.assert_array_equal(
+        np.asarray(learn_thin.loss), np.asarray(learn_full.loss)
+    )
+
+
+# ---------------------------------------------------------------------------
+# pytree structure: the dropped stacks are never materialized
+# ---------------------------------------------------------------------------
+
+
+def test_payload_free_sweep_has_no_per_walk_stacks(graph):
+    scenarios = [(_pcfg(eps=e), FCFG) for e in (1.6, 2.0, 2.4)]
+    out = run_sweep(graph, scenarios, steps=STEPS, seeds=SEEDS, base_key=5)
+    assert isinstance(out, RecordedOutputs)
+    assert out._fields == SCALAR_FIELDS
+    leaves = jax.tree_util.tree_leaves(out)
+    assert len(leaves) == len(SCALAR_FIELDS)
+    for leaf in leaves:
+        assert leaf.shape == (len(scenarios), SEEDS, STEPS), leaf.shape
+    # nothing in the output pytree carries a (.., W) trailing axis
+    assert not any(leaf.ndim == 4 for leaf in leaves)
+
+
+def test_sweep_thinned_matches_ensemble(graph):
+    """The spec composes with the sweep/ensemble bitwise contract."""
+    scenarios = [(_pcfg(eps=e), FCFG) for e in (1.6, 2.2)]
+    out = run_sweep(graph, scenarios, steps=STEPS, seeds=SEEDS, base_key=9,
+                    outputs=("z", "fork_parent"))
+    assert out._fields == ("z", "fork_parent")
+    assert out.fork_parent.shape == (2, SEEDS, STEPS, W)
+    for i, (pc, fc) in enumerate(scenarios):
+        ref = run_ensemble(graph, pc, fc, steps=STEPS, seeds=SEEDS,
+                           base_key=9, outputs=("z", "fork_parent"))
+        for name in ref._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(ref, name)),
+                np.asarray(getattr(out, name)[i]),
+                err_msg=f"scenario{i}: {name}",
+            )
+
+
+def test_run_scenarios_threads_outputs(graph):
+    from repro.sweep import Scenario, run_scenarios
+
+    scenarios = [
+        Scenario("a", _pcfg(eps=1.6), FCFG),
+        Scenario("mp", _pcfg(algorithm="missingperson", eps_mp=20.0), FCFG),
+    ]
+    res = run_scenarios(graph, scenarios, steps=10, seeds=1,
+                        outputs=("z", "terminated"))
+    for name in res.names:
+        assert res[name]._fields == ("z", "terminated")
+        assert res[name].terminated.shape == (1, 10, W)
+
+
+# ---------------------------------------------------------------------------
+# container behavior
+# ---------------------------------------------------------------------------
+
+
+def test_recorded_outputs_container_protocol():
+    ro = RecordedOutputs(("z", "forks"), (jnp.arange(3), jnp.zeros(3)))
+    assert len(ro) == 2
+    assert list(ro._fields) == ["z", "forks"]
+    np.testing.assert_array_equal(np.asarray(ro[0]), np.asarray(ro.z))
+    np.testing.assert_array_equal(np.asarray(ro["forks"]), np.zeros(3))
+    assert set(ro._asdict()) == {"z", "forks"}
+    with pytest.raises(AttributeError, match="immutable"):
+        ro.z = jnp.ones(3)
+    # pytree round-trip preserves fields
+    mapped = jax.tree_util.tree_map(lambda x: x * 2, ro)
+    assert mapped._fields == ro._fields
+    np.testing.assert_array_equal(np.asarray(mapped.z), 2 * np.arange(3))
+    # results are persistable: pickle and deepcopy round-trip
+    import copy
+    import pickle
+
+    for clone in (pickle.loads(pickle.dumps(ro)), copy.deepcopy(ro)):
+        assert clone._fields == ro._fields
+        np.testing.assert_array_equal(np.asarray(clone.z), np.asarray(ro.z))

@@ -88,7 +88,7 @@ def test_payload_none_is_bitwise_pr2_golden(graph, golden):
     pcfg = _pcfg("decafork", eps=1.8)
     fcfg = FailureConfig(burst_times=(20,), burst_sizes=(2,))
     outs = run_ensemble(graph, pcfg, fcfg, steps=STEPS, seeds=SEEDS,
-                        base_key=BASE_KEY, payload=None)
+                        base_key=BASE_KEY, payload=None, outputs="full")
     ref = golden["ensemble"]["decafork/burst"]
     for name, arr in zip(outs._fields, outs):
         got = np.asarray(arr)

@@ -1,0 +1,144 @@
+"""Fused round kernel (``estimator_impl="fused"``): bitwise oracle tests.
+
+The contract is *bitwise* (not allclose): the fused pass must be freely
+interchangeable with the unfused sequence — ``record_returns`` ->
+``last_seen`` scatter-max -> ``node_sums_compare`` — in the middle of a
+compiled trajectory, so every output (updated observation state AND node
+theta sums) must match the reference exactly, on arbitrary shapes
+including node counts that are not a multiple of the Pallas tile.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import estimator as est
+from repro.kernels.round_update import (
+    random_round_inputs as _random_round,  # the shared round fixture
+    round_update,
+    round_update_pallas,
+    round_update_ref,
+)
+
+KEY = jax.random.key(123)
+
+FIELDS = ("last_seen", "hist", "total", "sums")
+
+
+def _unfused_reference(ls, hist, total, pos, track, r, valid, upd, t):
+    rts = est.record_returns(est.ReturnTimeState(hist, total), pos, r, valid)
+    ls2 = ls.at[pos, track].max(upd, mode="drop")
+    sums = est.node_sums_compare(ls2, rts.hist, rts.total, t)
+    return ls2, rts.hist, rts.total, sums
+
+
+def _assert_bitwise(got, want, label):
+    for name, a, b in zip(FIELDS, got, want):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b), err_msg=f"{label}: {name}"
+        )
+
+
+# shapes deliberately include n that are NOT multiples of the node tile
+SHAPES = [(8, 4, 16, 4), (30, 12, 64, 12), (13, 7, 33, 7), (17, 5, 16, 5),
+          (64, 40, 128, 40), (100, 64, 256, 64)]
+
+
+@pytest.mark.parametrize("n,C,B,W", SHAPES)
+def test_ref_is_the_unfused_sequence(n, C, B, W):
+    args = _random_round(jax.random.fold_in(KEY, n * B + W), n, C, B, W)
+    _assert_bitwise(
+        round_update_ref(*args), _unfused_reference(*args), f"ref n={n}"
+    )
+
+
+@pytest.mark.parametrize("n,C,B,W", SHAPES)
+def test_pallas_bitwise_vs_oracle(n, C, B, W):
+    """The node-tiled Pallas kernel (interpret mode) == the unfused
+    reference, bitwise, including padded (non-tile-multiple) n."""
+    args = _random_round(jax.random.fold_in(KEY, 7 * n + B), n, C, B, W)
+    got = round_update_pallas(*args, interpret=True)
+    _assert_bitwise(got, _unfused_reference(*args), f"pallas n={n}")
+
+
+@pytest.mark.parametrize("block_nodes", [3, 8, 16, 100])
+def test_pallas_block_size_invariance(block_nodes):
+    args = _random_round(jax.random.fold_in(KEY, block_nodes), 22, 6, 32, 6)
+    got = round_update_pallas(*args, block_nodes=block_nodes, interpret=True)
+    _assert_bitwise(got, _unfused_reference(*args), f"bn={block_nodes}")
+
+
+def test_round_update_dispatch():
+    args = _random_round(jax.random.fold_in(KEY, 999), 16, 5, 24, 5)
+    want = _unfused_reference(*args)
+    _assert_bitwise(round_update(*args, impl="ref"), want, "impl=ref")
+    # default dispatch resolves per backend and stays on the contract
+    _assert_bitwise(round_update(*args), want, "impl=auto")
+    with pytest.raises(ValueError, match="round impl"):
+        round_update(*args, impl="bogus")
+
+
+def test_no_observations_round():
+    """A round where no walk records anything (all inactive) must leave
+    the state untouched and still produce the oracle sums."""
+    ls, hist, total, pos, track, r, valid, upd, t = _random_round(
+        jax.random.fold_in(KEY, 5), 14, 4, 16, 4
+    )
+    valid = jnp.zeros_like(valid)
+    upd = jnp.full_like(upd, est.NEVER)
+    args = (ls, hist, total, pos, track, r, valid, upd, t)
+    got = round_update_pallas(*args, interpret=True)
+    _assert_bitwise(got, _unfused_reference(*args), "silent round")
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(hist))
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(ls))
+
+
+# ---------------------------------------------------------------------------
+# in-simulator equivalence
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("alg", ["decafork", "decafork+"])
+def test_fused_impl_matches_compare_trajectory(alg):
+    """estimator_impl='fused' drives the exact same protocol trajectory
+    as 'compare' (its oracle) inside a real multi-round simulation."""
+    from repro.core import FailureConfig, ProtocolConfig, run_simulation
+    from repro.graphs import random_regular_graph
+
+    g = random_regular_graph(19, 4, seed=2)  # n=19: not a tile multiple
+    fcfg = FailureConfig(burst_times=(40,), burst_sizes=(2,))
+    outs = {}
+    for impl in ("compare", "fused"):
+        pcfg = ProtocolConfig(
+            algorithm=alg, z0=4, max_walks=8, eps=1.4, eps2=6.0,
+            protocol_start=20, rt_bins=64, estimator_impl=impl,
+        )
+        _, o = run_simulation(g, pcfg, fcfg, steps=120, key=11, outputs="full")
+        outs[impl] = o
+    for name in outs["compare"]._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(outs["fused"], name)),
+            np.asarray(getattr(outs["compare"], name)),
+            err_msg=f"{alg}: field {name}",
+        )
+
+
+def test_auto_impl_resolves_per_backend():
+    """estimator_impl='auto' picks the backend's best implementation and
+    (on CPU) is bitwise the gather path."""
+    from repro.core import FailureConfig, ProtocolConfig, run_simulation
+    from repro.graphs import random_regular_graph
+    from repro.kernels.platform import best_estimator_impl
+
+    g = random_regular_graph(16, 4, seed=4)
+    want_impl = best_estimator_impl()
+    assert want_impl in ("gather", "fused")
+    ref_z = {}
+    for impl in ("auto", want_impl):
+        pcfg = ProtocolConfig(
+            algorithm="decafork", z0=4, max_walks=8, eps=1.4,
+            protocol_start=20, rt_bins=32, estimator_impl=impl,
+        )
+        _, o = run_simulation(g, pcfg, FailureConfig(), steps=80, key=3)
+        ref_z[impl] = np.asarray(o.z)
+    np.testing.assert_array_equal(ref_z["auto"], ref_z[want_impl])

@@ -81,8 +81,10 @@ def _assert_matches_golden(outs, ref: dict, label: str):
 def test_disabled_topology_is_bitwise_pr1_ensemble(graph, golden, case):
     """All topology knobs at their defaults == the pre-refactor engine."""
     name, pcfg, fcfg = _golden_cases()[case]
+    # outputs="full": keep the per-walk fork/terminate streams under
+    # golden coverage too, not just the default scalar diagnostics
     outs = run_ensemble(graph, pcfg, fcfg, steps=STEPS, seeds=SEEDS,
-                        base_key=BASE_KEY)
+                        base_key=BASE_KEY, outputs="full")
     _assert_matches_golden(outs, golden["ensemble"][name], name)
 
 
@@ -93,7 +95,8 @@ def test_disabled_topology_is_bitwise_pr1_sweep(graph, golden):
         (_pcfg("decafork", eps=2.2),
          FailureConfig(burst_times=(30,), burst_sizes=(1,), p_fail=0.002)),
     ]
-    outs = run_sweep(graph, scenarios, steps=STEPS, seeds=SEEDS, base_key=BASE_KEY)
+    outs = run_sweep(graph, scenarios, steps=STEPS, seeds=SEEDS,
+                     base_key=BASE_KEY, outputs="full")
     _assert_matches_golden(outs, golden["sweep"]["decafork/eps-grid"], "sweep")
 
 
