@@ -5,7 +5,7 @@ carrying model replicas over a regular graph, one local SGD step per hop,
 a mid-run burst failure — at the example's smoke-model size, identical
 configs and seeds in both arms:
 
-  - ``fused``  : ``run_simulation(..., payload=RwSgdPayload(...))`` —
+  - ``fused``  : ``Experiment(..., payload=RwSgdPayload(...)).run()`` —
                  protocol round, replica forking, batch sampling and the
                  vmapped train step all inside ONE ``lax.scan`` / ONE
                  device dispatch for the whole trajectory;
@@ -34,7 +34,8 @@ from benchmarks.common import FULL, save_result
 from repro.configs import get_smoke_config
 from repro.core.failures import FailureConfig
 from repro.core.protocol import ProtocolConfig
-from repro.core.simulator import init_state, protocol_step, run_simulation
+from repro.api import Experiment
+from repro.core.simulator import init_state, protocol_step
 from repro.data import make_markov_task, sample_batch
 from repro.graphs import random_regular_graph
 from repro.graphs.state import mirror_indices
@@ -66,9 +67,9 @@ def _setup():
 
 def bench_fused(g, pcfg, fcfg, payload):
     t0 = time.time()
-    (_, _), (outs, learn) = run_simulation(
-        g, pcfg, fcfg, steps=STEPS, key=SEED, payload=payload
-    )
+    (_, _), (outs, learn) = Experiment(
+        graph=g, protocol=pcfg, failures=fcfg, steps=STEPS, payload=payload
+    ).run(key=SEED)
     jax.block_until_ready(learn.mean_loss)
     return time.time() - t0, np.asarray(outs.z), np.asarray(learn.mean_loss)
 

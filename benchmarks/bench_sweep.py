@@ -44,9 +44,8 @@ import numpy as np
 from benchmarks.common import (
     FULL, burst_failures, default_graph, pcfg_for, save_result,
 )
-from repro.core import run_ensemble
+from repro.api import Experiment
 from repro.core import simulator as sim
-from repro.core.simulator import run_sweep
 
 STEPS = 2000 if FULL else 600
 SEEDS = 8 if FULL else 4
@@ -65,7 +64,8 @@ def _scenarios():
 
 def bench_sweep(graph, scenarios):
     t0 = time.time()
-    out = run_sweep(graph, scenarios, steps=STEPS, seeds=SEEDS, base_key=0)
+    out = Experiment(graph=graph, scenarios=scenarios, steps=STEPS)\
+        .plan().sweep_stacked(seeds=SEEDS, base_key=0)
     z = np.asarray(out.z)
     return time.time() - t0, z
 
@@ -95,7 +95,8 @@ def bench_loop_warm(graph, scenarios):
     t0 = time.time()
     zs = [
         np.asarray(
-            run_ensemble(graph, pcfg, fcfg, steps=STEPS, seeds=SEEDS, base_key=0).z
+            Experiment(graph=graph, protocol=pcfg, failures=fcfg, steps=STEPS)
+            .ensemble(SEEDS, base_key=0).z
         )
         for pcfg, fcfg in scenarios
     ]

@@ -2,10 +2,10 @@
 
 Every figure is a *scenario sweep*: its curves are (protocol, failure)
 regimes run over a seed ensemble. ``run_sweep_cases`` hands the whole
-curve set to the batched sweep engine (``repro.sweep``) — one compiled
-XLA program and one device dispatch per static-structure group instead of
-one per curve — and reports wall time per simulated (scenario x step x
-seed) plus the paper's qualitative metrics: stability (mean |Z_t - Z_0|),
+curve set to one declarative ``repro.api.Experiment`` — one compiled XLA
+program and one device dispatch per static-structure group instead of one
+per curve — and reports wall time per simulated (scenario x step x seed)
+plus the paper's qualitative metrics: stability (mean |Z_t - Z_0|),
 reaction time to each burst, max overshoot, and survival rate.
 ``run_case`` remains for genuinely unbatchable cases (per-graph sweeps).
 
@@ -22,9 +22,10 @@ import time
 
 import numpy as np
 
-from repro.core import FailureConfig, ProtocolConfig, run_ensemble
+from repro.api import Experiment
+from repro.core import FailureConfig, ProtocolConfig
 from repro.graphs import make_graph
-from repro.sweep import Scenario, run_scenarios
+from repro.sweep import Scenario
 
 FULL = os.environ.get("BENCH_FULL", "0") == "1"
 
@@ -113,7 +114,9 @@ def run_case(
     steps = steps or STEPS
     seeds = seeds or SEEDS
     t0 = time.time()
-    outs = run_ensemble(graph, pcfg, fcfg, steps=steps, seeds=seeds)
+    outs = Experiment(
+        graph=graph, protocol=pcfg, failures=fcfg, steps=steps
+    ).ensemble(seeds)
     z = np.asarray(outs.z)
     wall = time.time() - t0
     return EnsembleResult(
@@ -141,7 +144,9 @@ def run_sweep_cases(
     steps = steps or STEPS
     seeds = seeds or SEEDS
     t0 = time.time()
-    res = run_scenarios(graph, scenarios, steps=steps, seeds=seeds)
+    res = Experiment(graph=graph, scenarios=scenarios, steps=steps).sweep(
+        seeds=seeds
+    )
     zs = [np.asarray(o.z) for o in res.outputs]  # blocks until done
     wall = time.time() - t0
     us = wall * 1e6 / (steps * seeds * len(scenarios))

@@ -6,7 +6,7 @@ Z_t-under-failure but *loss*-under-failure. Related work compares RW
 learning against failure regimes directly (Gholami & Seferoglu, "A Tale
 of Two Learning Algorithms"; Chen et al., "Random Walk Learning and the
 Pac-Man Attack"); with the payload API this is an ordinary scenario
-sweep: one ``RwSgdPayload`` rides ``run_scenarios``, every (protocol x
+sweep: one ``RwSgdPayload`` rides ``Experiment.sweep``, every (protocol x
 failure regime x seed) trajectory trains its own replica set inside the
 compiled scan, and the loss curves come back batched.
 
@@ -25,14 +25,14 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import FULL, save_result
+from repro.api import Experiment, cache_stats
 from repro.configs import get_smoke_config
 from repro.core import FailureConfig
-from repro.core import simulator as sim
 from repro.data import make_markov_task
 from repro.graphs import random_regular_graph
 from repro.models.model import Model
 from repro.optim import RwSgdPayload, adamw
-from repro.sweep import Scenario, run_scenarios
+from repro.sweep import Scenario
 from repro.core.protocol import ProtocolConfig
 
 STEPS = 900 if FULL else 300
@@ -95,11 +95,11 @@ def run(verbose: bool = True):
         for alg in ALGS
         for tag, fcfg in failure_regimes()
     ]
-    compiles_before = sim._run_sweep._cache_size()
-    res = run_scenarios(
-        g, scenarios, steps=STEPS, seeds=SEEDS, payload=payload
-    )
-    compiles = sim._run_sweep._cache_size() - compiles_before
+    compiles_before = cache_stats()["xla_compiles"]
+    res = Experiment(
+        graph=g, scenarios=scenarios, steps=STEPS, payload=payload
+    ).sweep(seeds=SEEDS)
+    compiles = cache_stats()["xla_compiles"] - compiles_before
 
     rows = []
     for name in res.names:

@@ -51,7 +51,7 @@ BENCHES = {
 
 
 def smoke() -> None:
-    """Estimator-impl agreement tripwire (tiny shapes, no timing).
+    """Estimator-impl + API agreement tripwire (tiny shapes, no timing).
 
     Asserts, in a few seconds:
       * one fused observation round (ref AND interpret-mode Pallas
@@ -60,12 +60,18 @@ def smoke() -> None:
       * a short simulation drives the same trajectory under every
         estimator_impl (gather vs compare/pallas/fused decisions may
         round differently in float, so trajectories are compared within
-        the node-sum family and the gather family separately).
+        the node-sum family and the gather family separately);
+      * the legacy runner shims (run_simulation / run_ensemble /
+        run_sweep / run_scenarios) are bitwise the new Experiment API —
+        the deprecation layer must never drift from the real path.
     """
+    import warnings
+
     import jax
     import numpy as np
 
-    from repro.core import FailureConfig, ProtocolConfig, run_simulation
+    from repro.api import Experiment
+    from repro.core import FailureConfig, ProtocolConfig
     from repro.core import estimator as est
     from repro.graphs import random_regular_graph
     from repro.kernels import (
@@ -74,6 +80,7 @@ def smoke() -> None:
         theta_sums_pallas,
     )
     from repro.kernels.round_update import random_round_inputs
+    from repro.utils.deprecation import APIDeprecationWarning
 
     # --- one-round bitwise agreement on an odd n ------------------------
     args = random_round_inputs(jax.random.key(7), 13, 6, 32, 6)
@@ -112,7 +119,9 @@ def smoke() -> None:
             algorithm="decafork", z0=4, max_walks=8, eps=1.4,
             protocol_start=15, rt_bins=32, estimator_impl=impl,
         )
-        _, o = run_simulation(g, pcfg, fcfg, steps=60, key=5)
+        _, o = Experiment(
+            graph=g, protocol=pcfg, failures=fcfg, steps=60
+        ).run(key=5)
         zs[impl] = np.asarray(o.z)
     for impl in ("pallas", "fused"):
         np.testing.assert_array_equal(
@@ -124,7 +133,58 @@ def smoke() -> None:
         zs["auto"], zs[auto_family],
         err_msg=f"auto vs {auto_family} trajectory",
     )
-    print("SMOKE ok: estimator impls agree (round bitwise, trajectories)")
+
+    # --- new API vs legacy-shim bitwise agreement ------------------------
+    from repro.core import run_ensemble, run_simulation
+    from repro.core.simulator import run_sweep
+    from repro.sweep import Scenario, run_scenarios
+
+    pcfg = ProtocolConfig(
+        algorithm="decafork", z0=4, max_walks=8, eps=1.6,
+        protocol_start=15, rt_bins=32,
+    )
+    pcfg2 = ProtocolConfig(
+        algorithm="missingperson", z0=4, max_walks=8, eps_mp=20.0,
+        protocol_start=15, rt_bins=32,
+    )
+    scen = [Scenario("dfk", pcfg, fcfg), Scenario("mp", pcfg2, fcfg)]
+    exp = Experiment(graph=g, protocol=pcfg, failures=fcfg, steps=60,
+                     outputs="full", scenarios=scen)
+    plan = exp.plan()
+    _, new_run = plan.run(key=5)
+    new_ens = plan.ensemble(2, base_key=5)
+    new_stack = plan.sweep_stacked([scen[0]], seeds=2, base_key=5)
+    new_mixed = plan.sweep(seeds=2, base_key=5)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", APIDeprecationWarning)
+        _, old_run = run_simulation(g, pcfg, fcfg, steps=60, key=5,
+                                    outputs="full")
+        old_ens = run_ensemble(g, pcfg, fcfg, steps=60, seeds=2, base_key=5,
+                               outputs="full")
+        old_stack = run_sweep(g, [scen[0]], steps=60, seeds=2, base_key=5,
+                              outputs="full")
+        old_mixed = run_scenarios(g, scen, steps=60, seeds=2, base_key=5,
+                                  outputs="full")
+    for label, a, b in (
+        ("run_simulation", new_run, old_run),
+        ("run_ensemble", new_ens, old_ens),
+        ("run_sweep", new_stack, old_stack),
+    ):
+        for name, x, y in zip(a._fields, a, b):
+            np.testing.assert_array_equal(
+                np.asarray(x), np.asarray(y),
+                err_msg=f"shim drift: {label}.{name}",
+            )
+    assert old_mixed.names == new_mixed.names
+    for name in new_mixed.names:
+        for f, x, y in zip(new_mixed[name]._fields, new_mixed[name],
+                           old_mixed[name]):
+            np.testing.assert_array_equal(
+                np.asarray(x), np.asarray(y),
+                err_msg=f"shim drift: run_scenarios[{name}].{f}",
+            )
+    print("SMOKE ok: estimator impls agree (round bitwise, trajectories); "
+          "legacy shims bitwise == Experiment API")
 
 
 def main() -> None:

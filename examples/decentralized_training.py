@@ -13,10 +13,10 @@ This is the paper's full system in one *fused, compiled* call:
     detects it, re-forks, and learning continues without losing the
     surviving replicas' progress.
 
-The learning workload is an ``RwSgdPayload`` plugged into the simulator
-(``core.payload``): model forks, local SGD steps and loss telemetry all
-run inside the trajectory's single ``lax.scan`` — the whole training run
-is ONE jitted device call, not a Python per-hop loop.
+The learning workload is an ``RwSgdPayload`` plugged into one declarative
+``repro.api.Experiment``: model forks, local SGD steps and loss telemetry
+all run inside the trajectory's single ``lax.scan`` — the whole training
+run is ONE jitted device call, not a Python per-hop loop.
 
 Run:  PYTHONPATH=src python examples/decentralized_training.py
       [--nodes 64 --z0 6 --steps 1400 --burst-at 900 --burst-size 3]
@@ -27,10 +27,10 @@ import time
 import jax
 import numpy as np
 
+from repro.api import Experiment
 from repro.configs import get_smoke_config
 from repro.core.failures import FailureConfig
 from repro.core.protocol import ProtocolConfig
-from repro.core.simulator import run_simulation
 from repro.data import make_markov_task
 from repro.graphs import random_regular_graph
 from repro.models.model import Model
@@ -81,9 +81,10 @@ def main():
 
     # --- the whole trajectory: ONE fused compiled call ------------------
     t0 = time.time()
-    (final, replicas), (outs, learn) = run_simulation(
-        g, pcfg, fcfg, steps=args.steps, key=0, payload=payload
-    )
+    (final, replicas), (outs, learn) = Experiment(
+        graph=g, protocol=pcfg, failures=fcfg, steps=args.steps,
+        payload=payload,
+    ).run(key=0)
     jax.block_until_ready(learn.mean_loss)
     wall = time.time() - t0
 

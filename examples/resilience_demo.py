@@ -9,7 +9,8 @@ import argparse
 
 import numpy as np
 
-from repro.core import FailureConfig, ProtocolConfig, run_simulation
+from repro.api import Experiment
+from repro.core import FailureConfig, ProtocolConfig
 from repro.graphs import random_regular_graph
 
 
@@ -50,7 +51,9 @@ def main():
         pcfg = ProtocolConfig(
             algorithm=alg, z0=z0, max_walks=64, protocol_start=proto_start, **kw
         )
-        _, outs = run_simulation(g, pcfg, fcfg, steps=steps, key=0)
+        _, outs = Experiment(
+            graph=g, protocol=pcfg, failures=fcfg, steps=steps
+        ).run(key=0)
         z = np.asarray(outs.z)
         ascii_plot(z, z0, title=title)
         print(f"   forks={int(np.asarray(outs.forks).sum())} "

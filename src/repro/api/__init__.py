@@ -1,0 +1,35 @@
+"""The declarative Experiment API: spec -> compiled Plan -> results.
+
+ONE public surface over the paper's trajectory core, replacing the four
+divergent runners (``run_simulation`` / ``run_ensemble`` / ``run_sweep``
+/ ``run_scenarios`` — now deprecation shims over this package):
+
+    from repro.api import Experiment, Placement
+
+    exp = Experiment(graph=g, protocol=pcfg, failures=fcfg, steps=4500,
+                     payload=None, outputs=None, placement="auto")
+    final, outs = exp.run(key=0)              # one trajectory
+    outs = exp.ensemble(seeds=50)             # seed ensemble (vmap)
+    res = exp.sweep(scenarios, seeds=50)      # mixed regimes, grouped by
+                                              # static signature, ONE
+                                              # compile per group
+
+``Experiment.plan()`` exposes the lowered :class:`Plan` — the object that
+owns static-signature grouping, the process-wide compile cache
+(``repro.api.plan.cache_stats``) and the :class:`Placement` decision —
+for callers that want to introspect grouping or amortize many calls over
+one plan explicitly.
+"""
+from repro.api.experiment import Experiment
+from repro.api.placement import Placement
+from repro.api.plan import Plan, cache_stats, plan_signature
+from repro.api.results import SweepResult
+
+__all__ = [
+    "Experiment",
+    "Placement",
+    "Plan",
+    "SweepResult",
+    "cache_stats",
+    "plan_signature",
+]

@@ -1,0 +1,138 @@
+"""The declarative Experiment spec: describe a study, then ``plan()`` it.
+
+One object names everything a run of the paper's system needs — graph,
+protocol, failures, payload, output selection, placement policy — and
+every execution mode hangs off the compiled :class:`~repro.api.Plan` it
+lowers to:
+
+    from repro.api import Experiment
+
+    exp = Experiment(graph=g, protocol=pcfg, failures=fcfg, steps=4500)
+    final, outs = exp.run(key=0)            # one trajectory
+    outs = exp.ensemble(seeds=50)           # the paper's seed ensembles
+    res = exp.sweep(scenarios, seeds=50)    # mixed regimes, grouped,
+                                            # one compile per structure
+
+Comparative studies — multi-stream RW vs gossip, Pac-Man-attack regimes,
+epsilon grids, topology churn — are a scenario-list swap on the same
+Experiment, not a choice of runner: the Plan owns static-signature
+grouping, the process-wide compile cache and the placement decision, so
+every mode batches and caches identically. ``run``/``ensemble``/``sweep``
+on the Experiment are conveniences for ``exp.plan().<mode>(...)``;
+re-planning is cheap (compiled executables live in the process-wide
+cache, keyed on static structure, never on the Experiment instance).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+
+from repro.api.placement import Placement
+from repro.api.plan import Plan
+from repro.api.results import SweepResult
+from repro.core.failures import FailureConfig
+from repro.core.outputs import split_outputs
+from repro.core.protocol import ProtocolConfig
+
+__all__ = ["Experiment"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Experiment:
+    """A declarative experiment spec (see module docstring).
+
+    Fields:
+      graph       the static superset topology (``repro.graphs.Graph``);
+      protocol    the base :class:`ProtocolConfig` — required for
+                  ``run``/``ensemble``; optional when only sweeping;
+      failures    the base :class:`FailureConfig` (defaults to the
+                  failure-free config when a protocol is given);
+      steps       trajectory length (static);
+      scenarios   optional declared scenario rows (``Scenario`` /
+                  ``(pcfg, fcfg)`` pairs / ``.pcfg``/``.fcfg`` objects)
+                  — the default list ``sweep()`` runs;
+      payload     optional :class:`~repro.core.payload.Payload` workload;
+      outputs     what the trajectory scan records: ``None`` /
+                  ``'scalars'`` / ``'full'`` / an ``OutputSpec`` / a
+                  field-name sequence that may mix ``StepOutputs`` names
+                  with the payload's own output fields (thinning BOTH
+                  sides — see ``core.outputs.split_outputs``);
+      placement   scenario-axis device placement policy
+                  (:class:`Placement` or ``'auto'|'sharded'|'local'``);
+      name        optional label (reports, repr).
+    """
+
+    graph: Any
+    protocol: ProtocolConfig | None = None
+    failures: FailureConfig | None = None
+    steps: int | None = None
+    scenarios: Sequence | None = None
+    payload: Any = None
+    outputs: Any = None
+    placement: Placement | str | None = "auto"
+    name: str | None = None
+
+    def __post_init__(self):
+        if self.steps is None:
+            raise TypeError("Experiment needs steps= (trajectory length)")
+        if self.failures is not None and self.protocol is None:
+            raise TypeError("failures= given without protocol=")
+        if self.protocol is None and not self.scenarios:
+            raise TypeError(
+                "Experiment needs a base scenario (protocol=/failures=) "
+                "and/or scenarios=[...]"
+            )
+        if self.protocol is not None and self.failures is None:
+            object.__setattr__(self, "failures", FailureConfig())
+        object.__setattr__(
+            self, "placement", Placement.resolve(self.placement)
+        )
+        if self.scenarios is not None:
+            object.__setattr__(self, "scenarios", tuple(self.scenarios))
+        object.__setattr__(self, "steps", int(self.steps))
+        # resolve output selection once, eagerly: bad field names fail at
+        # spec time, not at trace time
+        spec, pspec = split_outputs(self.outputs, self.payload)
+        object.__setattr__(self, "_spec", spec)
+        object.__setattr__(self, "_pspec", pspec)
+
+    # -- lowering ----------------------------------------------------------
+
+    def plan(self) -> Plan:
+        """Lower the spec to a compiled :class:`Plan` (cheap: executables
+        come from the process-wide signature-keyed cache)."""
+        return Plan(self)
+
+    # -- conveniences (each delegates to a fresh Plan) ---------------------
+
+    def run(self, key: jax.Array | int = 0):
+        """One trajectory of the base scenario; see :meth:`Plan.run`."""
+        return self.plan().run(key)
+
+    def ensemble(self, seeds: int, base_key: jax.Array | int = 0):
+        """vmap over seeds; see :meth:`Plan.ensemble`."""
+        return self.plan().ensemble(seeds, base_key)
+
+    def sweep(
+        self,
+        scenarios: Sequence | None = None,
+        *,
+        seeds: int,
+        base_key: jax.Array | int = 0,
+    ) -> SweepResult:
+        """Mixed scenario list, one compile per static group; see
+        :meth:`Plan.sweep`."""
+        return self.plan().sweep(scenarios, seeds=seeds, base_key=base_key)
+
+    def __repr__(self):
+        label = f" {self.name!r}" if self.name else ""
+        parts = [f"n={getattr(self.graph, 'n', '?')}", f"steps={self.steps}"]
+        if self.protocol is not None:
+            parts.append(f"protocol={self.protocol.algorithm}")
+        if self.scenarios:
+            parts.append(f"scenarios={len(self.scenarios)}")
+        if self.payload is not None:
+            parts.append(f"payload={type(self.payload).__name__}")
+        return f"Experiment{label}({', '.join(parts)})"

@@ -1,0 +1,359 @@
+"""Compiled execution plans: the layer between an Experiment and XLA.
+
+An :class:`~repro.api.Experiment` *describes* a study; ``plan()`` lowers
+it into a :class:`Plan` that owns the three things the four legacy
+runners used to split between themselves and their callers:
+
+  1. **static-signature grouping** — which scenario rows can share one
+     compiled program (``Plan.groups``; the orchestration that lived in
+     ``sweep/engine.run_scenarios``);
+  2. **the compile cache** — a process-wide table of jitted executables
+     keyed on :func:`plan_signature`, so the same static structure never
+     re-lowers across ``.run`` / ``.ensemble`` / ``.sweep`` calls, across
+     re-planned Experiments, across figures (``cache_stats`` exposes the
+     entry and XLA-compile counts the tests assert on);
+  3. **the placement decision** — ``Placement`` applied to the stacked
+     scenario leaves at exactly one point.
+
+The executables are jitted wrappers over the three un-jitted cores in
+``core/simulator.py`` (one trajectory / vmap over seeds / vmap over
+(scenario, seed)); everything traces through the same ``_run_core``, so
+``sweep(...)[i]`` == ``ensemble`` on scenario ``i`` == the single
+``run``, bitwise, under the same base key.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.placement import Placement
+from repro.api.results import SweepResult
+from repro.core import simulator as sim
+from repro.graphs.spectral import stationary_distribution
+from repro.graphs.state import mirror_indices
+
+__all__ = [
+    "Plan",
+    "plan_signature",
+    "cache_stats",
+    "clear_cache",
+]
+
+_STATIC_ARGNAMES = ("steps", "n", "payload", "spec", "pspec")
+_CORES = {
+    "run": sim._run_core,
+    "ensemble": sim._run_ensemble_core,
+    "sweep": sim._sweep_core,
+}
+
+# the process-wide compile cache: (mode, signature) -> jitted executable.
+# One slot per static program structure; the executables themselves are
+# shared per mode (_JITTED) — jax keys the underlying compilation cache
+# on (static kwargs, avals), so distinct signatures compile distinct XLA
+# programs through one wrapper, and re-running the same structure never
+# re-lowers or recompiles.
+_EXECUTABLES: dict = {}
+_JITTED: dict = {}
+
+
+def plan_signature(
+    mode: str,
+    n: int,
+    max_deg: int,
+    steps: int,
+    pcfg,
+    schedule_lens: Tuple[int, int],
+    payload,
+    spec,
+    pspec,
+) -> tuple:
+    """Hashable static signature of one compiled program.
+
+    Two runs share an executable iff their signatures match: program
+    shape comes from the protocol's static fields (algorithm /
+    estimator_impl / max_walks / rt_bins / ...), the pytree structure of
+    ``fork_prob`` (None vs value), the padded failure-schedule lengths,
+    the payload object (static under jit, hashed by identity), the output
+    specs and the graph/trajectory dimensions. Traced numeric leaves
+    (eps grids, rates, schedules, topology knobs) deliberately do NOT
+    appear — they batch and re-run without recompiling.
+    """
+    return (
+        mode,
+        n,
+        max_deg,
+        steps,
+        pcfg.static_fields,
+        pcfg.fork_prob is None,
+        tuple(schedule_lens),
+        payload,
+        spec,
+        pspec,
+    )
+
+
+def _lower(mode: str, signature: tuple):
+    """Resolve the executable for one NEW (mode, signature) cache slot.
+
+    Called exactly once per fresh signature — the module-level seam the
+    compile-count tests monkeypatch. The returned wrapper is shared per
+    mode: jax's own cache keys compiled programs on (static kwargs,
+    avals), which the signature mirrors, so slot bookkeeping and program
+    caching agree.
+    """
+    fn = _JITTED.get(mode)
+    if fn is None:
+        fn = _JITTED[mode] = jax.jit(
+            _CORES[mode], static_argnames=_STATIC_ARGNAMES
+        )
+    return fn
+
+
+def executable(mode: str, signature: tuple):
+    """The process-wide cache lookup: one jitted executable per
+    (mode, static-signature), built on first use."""
+    key = (mode, signature)
+    fn = _EXECUTABLES.get(key)
+    if fn is None:
+        fn = _EXECUTABLES[key] = _lower(mode, signature)
+    return fn
+
+
+def cache_stats() -> dict:
+    """Observability for the compile cache: ``entries`` is the number of
+    distinct (mode, signature) slots ever lowered; ``xla_compiles`` the
+    total number of XLA programs actually compiled (one per distinct
+    (signature, batch shape) — a structure recompiles only for a new
+    aval shape, e.g. a different seed count); ``by_mode`` splits the
+    compile count per execution mode (run / ensemble / sweep).
+    """
+    by_mode = {m: f._cache_size() for m, f in _JITTED.items()}
+    return {
+        "entries": len(_EXECUTABLES),
+        "xla_compiles": sum(by_mode.values()),
+        "by_mode": by_mode,
+    }
+
+
+def clear_cache() -> None:
+    """Drop every cached executable (tests only — a cleared cache means
+    every structure re-lowers and recompiles on next use)."""
+    _EXECUTABLES.clear()
+    _JITTED.clear()
+
+
+def _as_key(key) -> jax.Array:
+    return jax.random.key(key) if isinstance(key, int) else key
+
+
+class Plan:
+    """A compiled execution plan for one Experiment (see module docstring).
+
+    Construct via ``Experiment.plan()``. Methods:
+
+      ``run(key=0)``                     one trajectory of the base
+                                         (protocol, failures) scenario;
+      ``ensemble(seeds, base_key=0)``    vmap over seeds;
+      ``sweep_stacked(scenarios=None, *, seeds, base_key=0)``
+                                         ONE static-structure stack ->
+                                         outputs with leading (S, seeds)
+                                         axes in one compiled call;
+      ``sweep(scenarios=None, *, seeds, base_key=0)``
+                                         arbitrary mixed lists: grouped by
+                                         static signature, one compiled
+                                         call per group, per-scenario
+                                         results in input order
+                                         (:class:`SweepResult`).
+
+    All four share the process-wide executable cache, so re-running any
+    of them with the same static structure — new keys, new eps grids, new
+    failure rates, a re-planned Experiment — never recompiles.
+    """
+
+    def __init__(self, experiment):
+        from repro.sweep.scenario import as_pair
+
+        self.experiment = experiment
+        self.graph = experiment.graph
+        self.steps = experiment.steps
+        self.payload = experiment.payload
+        self.placement = experiment.placement
+        self.spec = experiment._spec
+        self.pspec = experiment._pspec
+        self.n = self.graph.n
+        self.neighbors = jnp.asarray(self.graph.neighbors)
+        self.degrees = jnp.asarray(self.graph.degrees)
+        self.mirror = jnp.asarray(mirror_indices(self.graph))
+        self.max_deg = int(self.neighbors.shape[1])
+        self._pi_cache = None
+        if experiment.protocol is not None:
+            self._base = (experiment.protocol, experiment.failures)
+            if self.payload is not None:
+                self.payload.validate(experiment.protocol)
+        else:
+            self._base = None
+        # eager static validation of declared scenario rows
+        for s in experiment.scenarios or ():
+            pcfg, _ = as_pair(s)
+            if self.payload is not None:
+                self.payload.validate(pcfg)
+
+    # -- shared preparation ------------------------------------------------
+
+    def _pi(self, pcfg):
+        if not pcfg.analytic_survival:
+            return None
+        if self._pi_cache is None:
+            self._pi_cache = jnp.asarray(
+                stationary_distribution(self.graph), jnp.float32
+            )
+        return self._pi_cache
+
+    def _signature(self, mode, pcfg, schedule_lens):
+        return plan_signature(
+            mode, self.n, self.max_deg, self.steps, pcfg,
+            schedule_lens, self.payload, self.spec, self.pspec,
+        )
+
+    def _require_base(self, what: str):
+        if self._base is None:
+            raise ValueError(
+                f"Plan.{what} needs a base scenario: construct the "
+                "Experiment with protocol=/failures= (or use .sweep on its "
+                "scenarios)"
+            )
+        return self._base
+
+    # -- execution ---------------------------------------------------------
+
+    def run(self, key: jax.Array | int = 0):
+        """One trajectory; returns ``(final SimState, RecordedOutputs)``
+        (with a payload: ``((state, payload carry), (RecordedOutputs,
+        payload outputs))``)."""
+        pcfg, fcfg = self._require_base("run")
+        sig = self._signature("run", pcfg, (fcfg.n_bursts, fcfg.n_node_crashes))
+        return executable("run", sig)(
+            _as_key(key), self.neighbors, self.degrees, self.mirror,
+            self._pi(pcfg), pcfg, fcfg,
+            steps=self.steps, n=self.n, payload=self.payload,
+            spec=self.spec, pspec=self.pspec,
+        )
+
+    def ensemble(self, seeds: int, base_key: jax.Array | int = 0):
+        """vmap over seeds: outputs with a leading ``(seeds,)`` axis."""
+        pcfg, fcfg = self._require_base("ensemble")
+        keys = jax.random.split(_as_key(base_key), seeds)
+        sig = self._signature(
+            "ensemble", pcfg, (fcfg.n_bursts, fcfg.n_node_crashes)
+        )
+        return executable("ensemble", sig)(
+            keys, self.neighbors, self.degrees, self.mirror,
+            self._pi(pcfg), pcfg, fcfg,
+            steps=self.steps, n=self.n, payload=self.payload,
+            spec=self.spec, pspec=self.pspec,
+        )
+
+    def sweep_stacked(
+        self,
+        scenarios: Sequence | None = None,
+        *,
+        seeds: int,
+        base_key: jax.Array | int = 0,
+    ):
+        """One static-structure scenario stack x seeds in ONE compiled
+        call; outputs carry leading ``(S, seeds)`` axes.
+
+        Every scenario uses the same per-seed keys ``ensemble`` derives
+        from ``base_key``, so ``sweep_stacked(...)[i]`` is bitwise equal
+        to ``ensemble`` on scenario ``i``. Scenarios must share one
+        static signature (mixed lists: use :meth:`sweep`); the Plan's
+        ``Placement`` decides scenario-axis device placement here.
+        """
+        from repro.sweep.scenario import as_pair, stack_configs
+
+        scenarios = self._scenarios(scenarios, "sweep_stacked")
+        keys = jax.random.split(_as_key(base_key), seeds)
+        pcfgs, fcfgs = stack_configs(scenarios)
+        pcfg0 = as_pair(scenarios[0])[0]
+        if self.payload is not None:
+            self.payload.validate(pcfg0)
+        # schedule lengths AFTER stacking: pad_bursts reconciled them
+        lens = (
+            int(jnp.shape(fcfgs.burst_times)[-1]),
+            int(jnp.shape(fcfgs.node_crash_times)[-1]),
+        )
+        pcfgs, fcfgs = self.placement.place(pcfgs, fcfgs, len(scenarios))
+        sig = self._signature("sweep", pcfg0, lens)
+        return executable("sweep", sig)(
+            keys, self.neighbors, self.degrees, self.mirror,
+            self._pi(pcfg0), pcfgs, fcfgs,
+            steps=self.steps, n=self.n, payload=self.payload,
+            spec=self.spec, pspec=self.pspec,
+        )
+
+    def sweep(
+        self,
+        scenarios: Sequence | None = None,
+        *,
+        seeds: int,
+        base_key: jax.Array | int = 0,
+    ) -> SweepResult:
+        """Run a mixed scenario list: grouped by static signature, ONE
+        compiled call per group, per-scenario results in input order.
+
+        Each scenario's ``(seeds,)``-leading outputs are bitwise what
+        ``ensemble`` would produce for it under the same ``base_key``;
+        adding a new regime (failure schedule, topology churn, Pac-Man
+        node, eps grid row) is appending a scenario row, not a new
+        compilation unit.
+        """
+        scenarios = self._scenarios(scenarios, "sweep")
+        names = tuple(
+            getattr(s, "name", f"scenario{i}") for i, s in enumerate(scenarios)
+        )
+        results = [None] * len(scenarios)
+        payloads = [None] * len(scenarios) if self.payload is not None else None
+        for _sig, idxs in self.groups(scenarios):
+            stacked = self.sweep_stacked(
+                [scenarios[i] for i in idxs], seeds=seeds, base_key=base_key
+            )
+            if self.payload is not None:
+                stacked, stacked_payload = stacked
+            for j, i in enumerate(idxs):
+                results[i] = jax.tree_util.tree_map(lambda x: x[j], stacked)
+                if self.payload is not None:
+                    payloads[i] = jax.tree_util.tree_map(
+                        lambda x: x[j], stacked_payload
+                    )
+        return SweepResult(names=names, outputs=results, payloads=payloads)
+
+    # -- introspection -----------------------------------------------------
+
+    def groups(self, scenarios: Sequence | None = None) -> list:
+        """The static-signature grouping: ``[(signature, [indices])]``
+        over the given (or the Experiment's) scenario list — which rows
+        share one compiled program."""
+        from repro.sweep.scenario import group_scenarios
+
+        return group_scenarios(self._scenarios(scenarios, "groups"))
+
+    def _scenarios(self, scenarios, what: str) -> list:
+        scenarios = (
+            self.experiment.scenarios if scenarios is None else scenarios
+        )
+        if not scenarios:
+            raise ValueError(
+                f"Plan.{what} needs scenarios: pass them to the call or "
+                "construct the Experiment with scenarios=[...]"
+            )
+        return list(scenarios)
+
+    def __repr__(self):
+        base = "1 base scenario" if self._base else "no base scenario"
+        ns = len(self.experiment.scenarios or ())
+        return (
+            f"Plan(n={self.n}, steps={self.steps}, {base}, "
+            f"{ns} declared scenario(s), placement={self.placement.policy!r})"
+        )

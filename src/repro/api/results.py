@@ -1,0 +1,50 @@
+"""Result containers for the declarative Experiment API.
+
+:class:`SweepResult` (moved here from ``sweep/engine.py`` — the legacy
+module keeps an import alias) holds per-scenario outputs of a mixed
+scenario sweep, input order preserved across static-structure groups.
+"""
+from __future__ import annotations
+
+__all__ = ["SweepResult"]
+
+
+class SweepResult:
+    """Per-scenario outputs, input order preserved.
+
+    Behaves as a container of scenarios: ``len`` is the scenario count,
+    iteration yields per-scenario outputs (leading ``(seeds,)`` axis),
+    and indexing accepts either a position or a scenario name. When the
+    sweep carried a payload, ``payloads`` is the parallel list of
+    per-scenario payload outputs (``payload(name_or_index)`` to look one
+    up); otherwise it is ``None``.
+    """
+
+    def __init__(self, names: tuple, outputs: list, payloads: list | None = None):
+        self.names = tuple(names)
+        self.outputs = list(outputs)
+        self.payloads = list(payloads) if payloads is not None else None
+
+    def _index(self, i) -> int:
+        return self.names.index(i) if isinstance(i, str) else i
+
+    def __getitem__(self, i):
+        return self.outputs[self._index(i)]
+
+    def payload(self, i):
+        """Per-scenario payload outputs by position or scenario name."""
+        if self.payloads is None:
+            raise KeyError("sweep ran without a payload")
+        return self.payloads[self._index(i)]
+
+    def __len__(self):
+        return len(self.outputs)
+
+    def __iter__(self):
+        return iter(self.outputs)
+
+    def items(self):
+        return list(zip(self.names, self.outputs))
+
+    def __repr__(self):
+        return f"SweepResult({len(self.outputs)} scenarios: {list(self.names)!r})"

@@ -83,6 +83,60 @@ SCALARS = OutputSpec(SCALAR_FIELDS)
 FULL = OutputSpec(ALL_FIELDS)
 
 
+@dataclasses.dataclass(frozen=True)
+class PayloadOutputSpec:
+    """The payload-output fields a run stacks (static under jit).
+
+    Payload outputs are arbitrary per-round pytrees; when they are
+    namedtuple-like (``_fields``, e.g. ``RwSgdOutputs``) a spec selects
+    which fields the trajectory scan records — the same thinning
+    ``OutputSpec`` does for ``StepOutputs``, so an ``RwSgdPayload`` sweep
+    can drop the per-slot ``(W,)`` loss telemetry it never reads and its
+    ``(S, seeds, steps, W)`` stack is never allocated. ``None`` in place
+    of a spec records the payload's full output pytree untouched (the
+    legacy behavior, bitwise AND structurally).
+
+    Selection preserves the payload's own field order; the thinned view
+    comes back as a :class:`RecordedOutputs`.
+
+    Exactness: thinning never changes what is *computed* — the per-round
+    jaxpr is identical, only the scan's stacked outputs shrink. It does
+    produce a different XLA program, and dropping a float stack lets the
+    backend re-fuse a reduction that feeds a retained field (e.g. the
+    ``(W,)`` loss sum inside ``mean_loss``), so retained *float* fields
+    can differ from the full run in the final ulp; integer fields are
+    exact. (``StepOutputs`` thinning has the same caveat in principle;
+    its golden tests pin that the current fields stay bitwise.)
+    """
+
+    fields: Tuple[str, ...]
+
+    def __post_init__(self):
+        wanted = tuple(self.fields)
+        if not wanted:
+            raise ValueError("PayloadOutputSpec needs at least one field")
+        if len(set(wanted)) != len(wanted):
+            object.__setattr__(self, "fields", tuple(dict.fromkeys(wanted)))
+
+    def select(self, pout: Any) -> "RecordedOutputs":
+        """The thinned per-round view the scan stacks (trace-time)."""
+        have = getattr(pout, "_fields", None)
+        if have is None:
+            raise TypeError(
+                "payload outputs are not field-addressable (no ._fields); "
+                "emit a NamedTuple-like outputs pytree to use payload-output "
+                f"thinning, or drop the payload field selection {self.fields!r}"
+            )
+        missing = [f for f in self.fields if f not in have]
+        if missing:
+            raise ValueError(
+                f"payload outputs have no field(s) {missing!r}; this payload "
+                f"emits {tuple(have)!r}"
+            )
+        keep = tuple(f for f in have if f in set(self.fields))
+        return RecordedOutputs(keep, tuple(getattr(pout, f) for f in keep))
+
+
 def resolve_spec(outputs: Any, payload: Any) -> OutputSpec:
     """Resolve a runner's ``outputs=`` argument to a concrete OutputSpec.
 
@@ -109,6 +163,55 @@ def resolve_spec(outputs: Any, payload: Any) -> OutputSpec:
         f"outputs must be None, 'scalars', 'full', an OutputSpec or a "
         f"sequence of field names; got {outputs!r}"
     )
+
+
+def split_outputs(outputs: Any, payload: Any):
+    """Resolve ``outputs=`` to ``(OutputSpec, PayloadOutputSpec | None)``.
+
+    The one knob selects BOTH what the simulator records and what the
+    payload records: a field-name sequence may freely mix ``StepOutputs``
+    names with the payload's own output fields
+    (``payload.output_fields()``) — e.g. ``("z", "mean_loss")`` stacks
+    one scalar trajectory and one scalar loss curve, dropping the
+    per-walk stacks on both sides. A name appearing in both sets resolves
+    to the ``StepOutputs`` field.
+
+    Rules:
+      * ``None`` / ``'scalars'`` / ``'full'`` / an ``OutputSpec`` — the
+        legacy resolution for the simulator fields; the payload records
+        its full output pytree (``None`` payload spec);
+      * a sequence naming only StepOutputs fields — ditto (legacy
+        behavior of ``outputs=(...,)``);
+      * a sequence naming any payload fields — those become the
+        ``PayloadOutputSpec``; the StepOutputs names (or scalars-only if
+        none are given — an explicitly thinned run does not want the
+        auto-enabled per-walk stacks) become the ``OutputSpec``.
+    """
+    if outputs is None or isinstance(outputs, (str, OutputSpec)):
+        return resolve_spec(outputs, payload), None
+    if isinstance(outputs, PayloadOutputSpec):
+        if payload is None:
+            raise ValueError(
+                "a PayloadOutputSpec was given but no payload is attached"
+            )
+        return resolve_spec(None, payload), outputs
+    if not isinstance(outputs, Sequence):
+        return resolve_spec(outputs, payload), None  # canonical TypeError
+    names = tuple(outputs)
+    step = tuple(f for f in names if f in ALL_FIELDS)
+    rest = tuple(f for f in names if f not in ALL_FIELDS)
+    if not rest:
+        return OutputSpec(step), None
+    declared = tuple(payload.output_fields()) if payload is not None else ()
+    unknown = [f for f in rest if f not in declared]
+    if unknown:
+        raise ValueError(
+            f"unknown output field(s) {unknown!r}: not StepOutputs fields "
+            f"({list(ALL_FIELDS)}) and not payload output fields "
+            f"({list(declared)})"
+        )
+    spec = OutputSpec(step) if step else SCALARS
+    return spec, PayloadOutputSpec(rest)
 
 
 class RecordedOutputs:

@@ -70,6 +70,15 @@ class Payload:
         once per ``run_*`` entry point, outside the trace. Raise on
         mismatch (e.g. slot-capacity disagreement)."""
 
+    def output_fields(self) -> Tuple[str, ...]:
+        """Names of the per-round output fields this payload emits (the
+        ``_fields`` of the pytree ``on_visit`` returns). Used by the
+        ``outputs=`` payload-output thinning (``core.outputs``); return
+        ``()`` (the default) when the payload emits no addressable
+        fields — thinning is then unavailable and the full output pytree
+        is recorded."""
+        return ()
+
     def init(self, key: jax.Array) -> Any:
         """Build the initial carry pytree (traced; per-trajectory key)."""
         return ()

@@ -18,18 +18,22 @@ One synchronous round (time t -> t+1):
 The whole trajectory runs under one ``lax.scan``; the live topology is
 part of the scan carry, so downed nodes/links persist and recover across
 steps. Configs are pytrees with *traced numeric leaves* (see
-``protocol.py`` / ``failures.py``) — the topology knobs included — so the
-batching hierarchy is:
+``protocol.py`` / ``failures.py``) — the topology knobs included — so one
+trajectory core batches outward over seeds (vmap) and over (scenario,
+seed) stacks, provided the scenarios share static structure (same
+algorithm, estimator_impl, max_walks, rt_bins, burst + node-crash
+schedule lengths).
 
-  ``run_simulation``  one (config, seed) trajectory;
-  ``run_ensemble``    vmap over seeds — the paper's 50-seed figures;
-  ``run_sweep``       vmap over (scenario, seed): MANY failure/epsilon/
-                      topology regimes x seeds in ONE compiled call,
-                      provided the scenarios share static structure (same
-                      algorithm, estimator_impl, max_walks, rt_bins,
-                      burst + node-crash schedule lengths).
+This module is the *backend*: the un-jitted cores (``_run_core`` /
+``_run_ensemble_core`` / ``_sweep_core``) that ``repro.api.Plan``
+compiles through its process-wide signature-keyed executable cache. The
+public, declarative surface is ``repro.api.Experiment`` (spec ->
+``plan()`` -> results); the four historical runners
+(``run_simulation`` / ``run_ensemble`` / ``run_sweep`` and
+``repro.sweep.run_scenarios``) remain as deprecation shims that build
+the equivalent Experiment, so they stay bitwise-equal to the new path.
 
-Every entry point accepts a ``payload`` (``core.payload.Payload``): the
+Every core accepts a ``payload`` (``core.payload.Payload``): the
 computational task the walks carry (flagship: RW-SGD learning via
 ``optim.rw_sgd.RwSgdPayload``). The payload's carry pytree rides the same
 ``lax.scan`` — its hooks run inside the compiled trajectory, so learning
@@ -40,22 +44,24 @@ bitwise identical to the pre-payload engine; payload PRNG streams are
 disjoint from the simulator's, so even an attached payload leaves every
 ``StepOutputs`` trajectory bitwise unchanged.
 
-Every entry point also accepts ``outputs=`` (``core.outputs.OutputSpec``)
-selecting which ``StepOutputs`` fields the trajectory scan stacks over
-time — scalars-only by default (the per-walk ``(W,)`` fields are
-auto-recorded only when a payload is attached), so the dropped
-``(..., steps, W)`` buffers are never allocated.
+Output selection is static (``core.outputs``): an ``OutputSpec`` picks
+which ``StepOutputs`` fields the trajectory scan stacks over time —
+scalars-only by default (the per-walk ``(W,)`` fields are auto-recorded
+only when a payload is attached) — and a ``PayloadOutputSpec`` does the
+same for the payload's per-round outputs, so dropped ``(..., steps, W)``
+buffers are never allocated on either side.
 
 The static ``Graph`` stays a trace-time constant (the superset topology);
 ``GraphState`` only masks it, so scenario rows vary *which parts are up
 when* without recompilation. With every topology knob disabled the masks
-stay full and each round is bitwise the static-graph round. ``repro.sweep``
-layers scenario stacking/grouping/padding and multi-device sharding on top
-of ``run_sweep``; benchmarks build on that layer.
+stay full and each round is bitwise the static-graph round. On the fused
+estimator path the observation state (``last_seen``, return-time
+histograms) is carried pre-padded to the round kernel's node tile
+(``observation_rows``) and sliced back once per run — bitwise-identical
+to the per-round pad+slice it replaces.
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple, Sequence, Tuple
 
 import jax
@@ -65,14 +71,7 @@ from repro.core import estimator as est
 from repro.core import failures as flr
 from repro.core import protocol as prt
 from repro.core import walkers as wlk
-from repro.core.outputs import (
-    FULL,
-    SCALARS,
-    OutputSpec,
-    RecordedOutputs,
-    StepOutputs,
-    resolve_spec,
-)
+from repro.core.outputs import SCALARS, StepOutputs
 from repro.core.payload import PAYLOAD_STREAM, payload_init_key
 from repro.graphs.generators import Graph
 from repro.graphs.spectral import stationary_distribution
@@ -97,11 +96,21 @@ def init_state(
     pcfg: prt.ProtocolConfig,
     fcfg: flr.FailureConfig,
     key: jax.Array,
+    n_obs: int | None = None,
 ) -> SimState:
+    """Initial simulator state; ``n_obs`` (>= n, default n) is the row
+    count of the observation-state arrays (``last_seen``, return-time
+    histograms). The fused estimator path carries them PRE-padded to the
+    node tile (``observation_rows``) so the per-round pad+slice inside
+    the scan disappears; pad rows are masked "no data" rows no walk can
+    hit, so every real row is bitwise what the unpadded run computes."""
+    n_obs = n if n_obs is None else n_obs
     W = pcfg.max_walks
     k_init, k_run = jax.random.split(key)
     walks = wlk.init_walks(pcfg.z0, W, n, k_init)
     if pcfg.algorithm == "missingperson":
+        if n_obs != n:
+            raise ValueError("missingperson does not pad observation state")
         # paper: L_{i,l}(0) = 0 for all initial ids at every node
         last_seen = jnp.where(
             jnp.arange(W)[None, :] < pcfg.z0,
@@ -109,7 +118,7 @@ def init_state(
             est.NEVER,
         )
     else:
-        last_seen = jnp.full((n, W), est.NEVER, jnp.int32)
+        last_seen = jnp.full((n_obs, W), est.NEVER, jnp.int32)
         # the starting node of each initial walk has seen it at t=0
         last_seen = last_seen.at[walks.pos, jnp.arange(W)].max(
             jnp.where(walks.active, 0, est.NEVER)
@@ -119,12 +128,52 @@ def init_state(
         t=jnp.int32(0),
         walks=walks,
         last_seen=last_seen,
-        rts=est.init_return_time_state(n, pcfg.rt_bins),
+        rts=est.init_return_time_state(n_obs, pcfg.rt_bins),
         byz_state=jnp.asarray(fcfg.byz_start),
         key=k_run,
         theta_hist=jnp.zeros((n, tb), jnp.float32),
         graph=init_graph_state(n, max_deg),
     )
+
+
+def resolved_estimator_impl(pcfg: prt.ProtocolConfig) -> str:
+    """``estimator_impl`` with ``'auto'`` resolved for the current
+    backend (trace-time; fused on TPU, gather elsewhere)."""
+    impl = pcfg.estimator_impl
+    if impl == "auto":
+        # function-level import: the kernels package (and with it
+        # jax.experimental.pallas) loads only when a round actually asks
+        from repro.kernels.platform import best_estimator_impl
+
+        impl = best_estimator_impl()
+    return impl
+
+
+def _will_fuse(pcfg: prt.ProtocolConfig) -> bool:
+    """Whether the trajectory will take the fused observation path —
+    THE fuse predicate (``protocol_step`` consumes it directly, adding
+    only its caller-supplied ``pi is None`` guard)."""
+    return (
+        resolved_estimator_impl(pcfg) == "fused"
+        and pcfg.algorithm in ("decafork", "decafork+")
+        and not pcfg.analytic_survival
+    )
+
+
+def observation_rows(n: int, pcfg: prt.ProtocolConfig) -> int:
+    """Static row count of the observation-state arrays for a run.
+
+    On the fused path the node axis is padded up to the round kernel's
+    tile ONCE here, instead of pad+slice every round inside the scan (one
+    observation-state copy per round saved whenever ``n`` is not
+    tile-aligned); everywhere else it is just ``n``.
+    """
+    if not _will_fuse(pcfg):
+        return n
+    from repro.kernels.round_update import DEFAULT_BLOCK_NODES
+
+    bn = min(DEFAULT_BLOCK_NODES, n)
+    return n + (-n) % bn
 
 
 def _theta_bins(pcfg: prt.ProtocolConfig) -> int:
@@ -184,24 +233,17 @@ def protocol_step(
     n_failed = n_before - jnp.sum(active)
 
     # 4. observations: return samples + last-seen updates for ALL visitors
-    impl = pcfg.estimator_impl
-    if impl == "auto":
-        # function-level import: the kernels package (and with it
-        # jax.experimental.pallas) loads only when a round actually asks
-        from repro.kernels.platform import best_estimator_impl
-
-        impl = best_estimator_impl()
+    impl = resolved_estimator_impl(pcfg)
     last_seen = state.last_seen
     prev = last_seen[ws.pos, ws.track]  # (W,)
     r = t - prev
     valid = ws.active & (prev != est.NEVER) & (r >= 1)
     upd = jnp.where(ws.active, t, est.NEVER)
     node_sums = None
-    fuse = (
-        impl == "fused"
-        and pcfg.algorithm in ("decafork", "decafork+")
-        and pi is None
-    )
+    # `pi is None` guards direct callers that pass an analytic-survival
+    # table independently of pcfg; the padding decision (_will_fuse,
+    # observation_rows) must stay a superset-consistent view of this.
+    fuse = _will_fuse(pcfg) and pi is None
     if fuse:
         # one fused pass: scatter + max-update + node theta-sums
         # (kernels/round_update.py; Pallas tiles on TPU, jnp elsewhere)
@@ -303,20 +345,44 @@ def protocol_step(
     return new_state, out
 
 
+def _strip_obs_pad(state: SimState, n: int) -> SimState:
+    """Slice the pre-padded observation rows back to the graph's ``n``
+    (one slice per *run*, vs one pad+slice per round without carrying
+    padded state); a no-op when the run never padded."""
+    if state.last_seen.shape[0] == n:
+        return state
+    return state._replace(
+        last_seen=state.last_seen[:n],
+        rts=est.ReturnTimeState(
+            hist=state.rts.hist[:n], total=state.rts.total[:n]
+        ),
+    )
+
+
 def _run_core(
     key, neighbors, degrees, mirror, pi, pcfg, fcfg, steps, n,
-    payload=None, spec=SCALARS,
+    payload=None, spec=SCALARS, pspec=None,
 ):
     """Un-jitted single-trajectory scan; every batching wrapper traces
     through this one function so ensemble/sweep results are bitwise equal
-    to the single-run path.
+    to the single-run path. This is the ONE backend ``repro.api.Plan``
+    compiles — the jitted executables live in the Plan's process-wide
+    cache, keyed on the static signature.
 
     ``spec`` (an ``OutputSpec``, static) selects which ``StepOutputs``
     fields the scan stacks over time: the full per-round StepOutputs is
     free *inside* the round, but every recorded field costs a
     ``(steps, ...)`` output buffer — O(W) extra HBM traffic per round for
     the per-walk fields — so the thinned view is the default and the
-    dropped stacks are never allocated at all.
+    dropped stacks are never allocated at all. ``pspec`` (a
+    ``PayloadOutputSpec`` or None, static) does the same for the payload's
+    per-round outputs; ``None`` records the payload's full output pytree
+    untouched.
+
+    On the fused estimator path the observation state is carried
+    PRE-padded to the round kernel's node tile (``observation_rows``) and
+    sliced back once after the scan — bitwise-identical to padding every
+    round, without the per-round state copy.
 
     With ``payload=None`` this is exactly the payload-free program (same
     scan carry, same jaxpr). With a payload, the carry becomes
@@ -329,7 +395,8 @@ def _run_core(
     it is created, on a copy of its parent's pre-round replica. Returns
     ``((final SimState, final carry), (RecordedOutputs, payload_outputs))``.
     """
-    state = init_state(n, neighbors.shape[1], pcfg, fcfg, key)
+    n_obs = observation_rows(n, pcfg)
+    state = init_state(n, neighbors.shape[1], pcfg, fcfg, key, n_obs=n_obs)
 
     if payload is None:
 
@@ -340,7 +407,8 @@ def _run_core(
             )
             return s2, spec.select(out)
 
-        return jax.lax.scan(body, state, None, length=steps)
+        final, recorded = jax.lax.scan(body, state, None, length=steps)
+        return _strip_obs_pad(final, n), recorded
 
     pcarry = payload.init(payload_init_key(key))
 
@@ -354,9 +422,14 @@ def _run_core(
         pc = payload.on_terminate(pc, out.terminated)
         pc = payload.on_fork(pc, out.fork_parent)
         pc, pout = payload.on_visit(pc, s2.walks, t, k_visit)
+        if pspec is not None:
+            pout = pspec.select(pout)
         return (s2, pc), (spec.select(out), pout)
 
-    return jax.lax.scan(body, (state, pcarry), None, length=steps)
+    (final, pcarry), recorded = jax.lax.scan(
+        body, (state, pcarry), None, length=steps
+    )
+    return (_strip_obs_pad(final, n), pcarry), recorded
 
 
 # deliberately NO input donation on any entry point: the trajectory
@@ -365,32 +438,25 @@ def _run_core(
 # comparison on accelerators. The memory win that matters — reusing the
 # scan carry (last_seen/hist/topology state) in place every round — is
 # already done by XLA inside the compiled program.
-_run = jax.jit(_run_core, static_argnames=("steps", "n", "payload", "spec"))
 
 
 def _run_ensemble_core(
     keys, neighbors, degrees, mirror, pi, pcfg, fcfg, steps, n,
-    payload=None, spec=SCALARS,
+    payload=None, spec=SCALARS, pspec=None,
 ):
     """(seeds,) keys -> RecordedOutputs with leading (seeds,) axis (a
     (RecordedOutputs, payload_outputs) pair when a payload is attached)."""
     return jax.vmap(
         lambda k: _run_core(
             k, neighbors, degrees, mirror, pi, pcfg, fcfg, steps, n,
-            payload, spec,
+            payload, spec, pspec,
         )[1]
     )(keys)
 
 
-_run_ensemble = functools.partial(
-    jax.jit, static_argnames=("steps", "n", "payload", "spec")
-)(_run_ensemble_core)
-
-
-@functools.partial(jax.jit, static_argnames=("steps", "n", "payload", "spec"))
-def _run_sweep(
+def _sweep_core(
     keys, neighbors, degrees, mirror, pi, pcfgs, fcfgs, steps, n,
-    payload=None, spec=SCALARS,
+    payload=None, spec=SCALARS, pspec=None,
 ):
     """Stacked configs (leaves with leading (S,) axis) + (seeds,) keys ->
     RecordedOutputs with leading (S, seeds) axes, all in one XLA program
@@ -401,7 +467,7 @@ def _run_sweep(
         return jax.vmap(
             lambda k: _run_core(
                 k, neighbors, degrees, mirror, pi, pcfg, fcfg, steps, n,
-                payload, spec,
+                payload, spec, pspec,
             )[1]
         )(keys)
 
@@ -409,6 +475,9 @@ def _run_sweep(
 
 
 def _graph_arrays(graph: Graph, pcfg: prt.ProtocolConfig):
+    """The trace-time graph constants one run needs (benchmark baselines
+    drive the cores directly through this; the Plan prepares the same
+    arrays once per plan instead of once per call)."""
     neighbors = jnp.asarray(graph.neighbors)
     degrees = jnp.asarray(graph.degrees)
     mirror = jnp.asarray(mirror_indices(graph))
@@ -420,9 +489,15 @@ def _graph_arrays(graph: Graph, pcfg: prt.ProtocolConfig):
     return neighbors, degrees, mirror, pi
 
 
-def _check_payload(payload, pcfg: prt.ProtocolConfig):
-    if payload is not None:
-        payload.validate(pcfg)
+# ---------------------------------------------------------------------------
+# Legacy runner shims (deprecated; use repro.api.Experiment)
+# ---------------------------------------------------------------------------
+#
+# The four historical entry points survive as THIN shims over the
+# declarative API — they build the equivalent Experiment, lower it to a
+# Plan and run it, so they are bitwise-equal to the new path by
+# construction (and golden-tested as such). No in-repo code may call
+# them; the test lanes promote APIDeprecationWarning to an error.
 
 
 def run_simulation(
@@ -435,28 +510,21 @@ def run_simulation(
     payload=None,
     outputs=None,
 ):
-    """Run one trajectory; returns (final SimState, RecordedOutputs over
-    time).
+    """DEPRECATED shim: one trajectory.
 
-    ``outputs`` selects the recorded ``StepOutputs`` fields (see
-    ``core.outputs``): ``None`` auto-resolves to scalars-only for a
-    payload-free run and the full set when a payload is attached; pass
-    ``'full'``/``'scalars'``, an ``OutputSpec`` or a field-name tuple to
-    override.
-
-    With a ``payload`` the workload runs fused inside the same scan and
-    the return value becomes ``((final SimState, final payload carry),
-    (RecordedOutputs, payload outputs over time))``.
+    Use ``repro.api.Experiment(graph=..., protocol=pcfg, failures=fcfg,
+    steps=steps, ...).run(key)`` — same return value, same bits.
     """
-    if isinstance(key, int):
-        key = jax.random.key(key)
-    _check_payload(payload, pcfg)
-    spec = resolve_spec(outputs, payload)
-    neighbors, degrees, mirror, pi = _graph_arrays(graph, pcfg)
-    return _run(
-        key, neighbors, degrees, mirror, pi, pcfg, fcfg, steps, graph.n,
-        payload=payload, spec=spec,
+    from repro.api import Experiment
+    from repro.utils.deprecation import warn_legacy_runner
+
+    warn_legacy_runner(
+        "repro.core.run_simulation", "Experiment(...).run(key)"
     )
+    return Experiment(
+        graph=graph, protocol=pcfg, failures=fcfg, steps=steps,
+        payload=payload, outputs=outputs,
+    ).run(key)
 
 
 def run_ensemble(
@@ -470,27 +538,21 @@ def run_ensemble(
     payload=None,
     outputs=None,
 ):
-    """vmap over seeds: RecordedOutputs with leading (seeds,) axis.
+    """DEPRECATED shim: vmap over seeds.
 
-    Numeric config changes (eps grids, burst schedules, failure rates)
-    reuse the compiled program — only static fields retrigger XLA.
-    ``outputs`` selects the recorded fields (``core.outputs``; ``None`` =
-    scalars-only, or everything when a payload is attached).
-
-    With a ``payload`` returns ``(RecordedOutputs, payload_outputs)``,
-    both with leading (seeds,) axes; each seed initializes its own payload
-    carry (independent model replicas per trajectory).
+    Use ``repro.api.Experiment(graph=..., protocol=pcfg, failures=fcfg,
+    steps=steps, ...).ensemble(seeds, base_key)``.
     """
-    if isinstance(base_key, int):
-        base_key = jax.random.key(base_key)
-    _check_payload(payload, pcfg)
-    spec = resolve_spec(outputs, payload)
-    keys = jax.random.split(base_key, seeds)
-    neighbors, degrees, mirror, pi = _graph_arrays(graph, pcfg)
-    return _run_ensemble(
-        keys, neighbors, degrees, mirror, pi, pcfg, fcfg, steps, graph.n,
-        payload=payload, spec=spec,
+    from repro.api import Experiment
+    from repro.utils.deprecation import warn_legacy_runner
+
+    warn_legacy_runner(
+        "repro.core.run_ensemble", "Experiment(...).ensemble(seeds)"
     )
+    return Experiment(
+        graph=graph, protocol=pcfg, failures=fcfg, steps=steps,
+        payload=payload, outputs=outputs,
+    ).ensemble(seeds, base_key)
 
 
 def run_sweep(
@@ -504,58 +566,24 @@ def run_sweep(
     payload=None,
     outputs=None,
 ):
-    """Run MANY (protocol, failure) scenarios x seeds in one compiled call.
+    """DEPRECATED shim: one static-structure scenario stack x seeds,
+    stacked outputs with leading (S, seeds) axes.
 
-    ``scenarios`` is a sequence of ``(pcfg, fcfg)`` pairs (or any objects
-    with ``.pcfg``/``.fcfg``) sharing one static structure: same
-    ``algorithm`` / ``estimator_impl`` / ``max_walks`` / ``rt_bins`` /
-    burst + node-crash schedule lengths (pad with ``failures.pad_bursts``).
-    Use
-    ``repro.sweep.run_scenarios`` to mix static structures — it groups
-    them and issues one compiled call per group.
-
-    Every scenario uses the SAME per-seed keys that ``run_ensemble`` would
-    derive from ``base_key``, so ``run_sweep(...)[i]`` is bitwise equal to
-    ``run_ensemble(graph, *scenarios[i], steps, seeds, base_key)``.
-
-    Returns RecordedOutputs with leading (len(scenarios), seeds) axes;
-    with a ``payload``, a ``(RecordedOutputs, payload_outputs)`` pair
-    (same leading axes — the workload is just another batched scenario
-    dimension). ``outputs`` selects the recorded fields (``core.outputs``)
-    — the default scalars-only spec means a payload-free sweep never
-    allocates the ``(S, seeds, steps, W)`` per-walk stacks at all.
-
-    ``sharded`` is an explicit tri-state controlling scenario-axis device
-    placement: ``None`` (default) auto-places across the 'data' mesh axis
-    when >1 device is visible and the count divides; ``True`` demands
-    placement (raises if impossible); ``False`` opts out entirely.
+    Use ``repro.api.Experiment(graph=..., scenarios=..., steps=...,
+    placement=...).plan().sweep_stacked(seeds=seeds, base_key=...)``
+    (the ``sharded`` tri-state maps to ``Placement.from_sharded``).
     """
-    from repro.sweep.scenario import as_pair, stack_configs
+    from repro.api import Experiment, Placement
+    from repro.utils.deprecation import warn_legacy_runner
 
-    # identity, not equality: 0/1 must not alias False/True into the wrong
-    # placement path (0 == False but `0 is not False` falls through to auto)
-    if not (sharded is None or sharded is True or sharded is False):
-        raise TypeError(
-            f"sharded must be True, False or None (auto); got {sharded!r}"
-        )
-    if isinstance(base_key, int):
-        base_key = jax.random.key(base_key)
-    keys = jax.random.split(base_key, seeds)
-    pcfgs, fcfgs = stack_configs(scenarios)
-    pcfg0 = as_pair(scenarios[0])[0]
-    _check_payload(payload, pcfg0)
-    spec = resolve_spec(outputs, payload)
-    neighbors, degrees, mirror, pi = _graph_arrays(graph, pcfg0)
-    if sharded is not False:
-        from repro.sweep.engine import maybe_shard_scenarios
-
-        pcfgs, fcfgs = maybe_shard_scenarios(
-            pcfgs, fcfgs, len(scenarios), explicit=sharded is True
-        )
-    return _run_sweep(
-        keys, neighbors, degrees, mirror, pi, pcfgs, fcfgs, steps, graph.n,
-        payload=payload, spec=spec,
+    warn_legacy_runner(
+        "repro.core.simulator.run_sweep",
+        "Experiment(...).plan().sweep_stacked(seeds=...)",
     )
+    return Experiment(
+        graph=graph, scenarios=scenarios, steps=steps, payload=payload,
+        outputs=outputs, placement=Placement.from_sharded(sharded),
+    ).plan().sweep_stacked(seeds=seeds, base_key=base_key)
 
 
 # ---------------------------------------------------------------------------

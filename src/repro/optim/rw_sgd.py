@@ -12,8 +12,9 @@ so one jitted call advances every live replica simultaneously (the
 synchronous-round semantics of the simulator). :class:`RwSgdPayload`
 packages the whole thing as a ``core.payload.Payload``, fusing RW-SGD
 into the simulator's ``lax.scan`` — learning runs *inside* the compiled
-trajectory, batches under ``run_ensemble``/``run_sweep``, and
-accuracy-under-failure becomes an ordinary scenario axis.
+trajectory, batches under ``Experiment.ensemble``/``.sweep``
+(``repro.api``), and accuracy-under-failure becomes an ordinary scenario
+axis.
 """
 from __future__ import annotations
 
@@ -154,6 +155,9 @@ class RwSgdPayload(Payload):
         self.seq_len = int(seq_len)
         self.train_every = int(train_every)
         self._train = replica_train_step(model.loss, optimizer)
+
+    def output_fields(self):
+        return RwSgdOutputs._fields
 
     def validate(self, pcfg) -> None:
         if pcfg.max_walks != self.max_walks:

@@ -1,15 +1,22 @@
-"""Batched scenario-sweep engine (see ``engine.py`` for the design).
+"""Scenario descriptions + legacy sweep surface.
 
-Quick use::
+:class:`Scenario` and the stacking/grouping primitives
+(``stack_configs`` / ``group_scenarios`` / ``static_signature``) remain
+first-class — the new API consumes them. The *runner* moved: use
+``repro.api.Experiment`` ::
 
-    from repro.sweep import Scenario, run_scenarios
+    from repro.api import Experiment
+    from repro.sweep import Scenario
 
     scenarios = [
         Scenario(f"eps={e}", ProtocolConfig(eps=e), FailureConfig(...))
         for e in (1.8, 2.0, 2.25, 2.5)
     ]
-    result = run_scenarios(graph, scenarios, steps=4500, seeds=8)
+    result = Experiment(graph=graph, scenarios=scenarios,
+                        steps=4500).sweep(seeds=8)
     z = result["eps=2.0"].z  # (seeds, steps)
+
+``run_scenarios`` / ``run_sweep`` survive as deprecation shims.
 """
 from repro.core.simulator import run_sweep
 from repro.sweep.engine import SweepResult, maybe_shard_scenarios, run_scenarios

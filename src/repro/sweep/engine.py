@@ -1,21 +1,16 @@
-"""Batched scenario-sweep engine.
+"""Legacy sweep-engine surface (deprecated shims over ``repro.api``).
 
-The paper's evaluation is a sweep: figures x failure regimes x epsilon
-grids x seed ensembles. ``run_scenarios`` executes an arbitrary mixed
-scenario list with ONE jit-compiled call per static-structure group
-(``core.simulator.run_sweep`` under the hood: vmap over scenario configs
-x seeds), instead of one compile + one device round-trip per curve.
+The batched scenario engine this module used to implement — grouping by
+static signature, one compiled call per group, scenario-axis placement —
+now lives in :class:`repro.api.Plan` (grouping + compile cache) and
+:class:`repro.api.Placement` (the placement decision). What remains here:
 
-Multi-device: when more than one jax device is visible, the scenario axis
-is placed across the 'data' axis of the local mesh (``launch/mesh.py``),
-so groups split across devices; on a single device everything stays
-local with zero overhead.
-
-Adding a new regime (node-crash schedules, link-failure churn, Pac-Man
-adversarial removals, multi-stream variants, ...) is appending a Scenario
-row — no new compilation units. A walk payload (``core.payload``) rides
-every group's compiled call unchanged, which turns workload metrics
-(RW-SGD loss curves) into ordinary batched sweep outputs.
+  * :func:`run_scenarios` — a deprecation shim building the equivalent
+    ``Experiment(...).sweep(...)`` (bitwise-equal by construction);
+  * :func:`maybe_shard_scenarios` — a thin delegate to ``Placement``,
+    kept for callers of the old helper;
+  * ``SweepResult`` — re-exported from ``repro.api.results`` (its new
+    home) so existing imports keep resolving.
 """
 from __future__ import annotations
 
@@ -23,85 +18,22 @@ from typing import Sequence
 
 import jax
 
-from repro.core import simulator as sim
-from repro.sweep.scenario import as_pair, group_scenarios
+from repro.api.results import SweepResult
 
 __all__ = ["SweepResult", "run_scenarios", "maybe_shard_scenarios"]
-
-
-class SweepResult:
-    """Per-scenario outputs, input order preserved.
-
-    Behaves as a container of scenarios: ``len`` is the scenario count,
-    iteration yields per-scenario StepOutputs (leading ``(seeds,)`` axis),
-    and indexing accepts either a position or a scenario name. When the
-    sweep carried a payload, ``payloads`` is the parallel list of
-    per-scenario payload outputs (``payload(name_or_index)`` to look one
-    up); otherwise it is ``None``.
-    """
-
-    def __init__(self, names: tuple, outputs: list, payloads: list | None = None):
-        self.names = tuple(names)
-        self.outputs = list(outputs)
-        self.payloads = list(payloads) if payloads is not None else None
-
-    def _index(self, i) -> int:
-        return self.names.index(i) if isinstance(i, str) else i
-
-    def __getitem__(self, i):
-        return self.outputs[self._index(i)]
-
-    def payload(self, i):
-        """Per-scenario payload outputs by position or scenario name."""
-        if self.payloads is None:
-            raise KeyError("sweep ran without a payload")
-        return self.payloads[self._index(i)]
-
-    def __len__(self):
-        return len(self.outputs)
-
-    def __iter__(self):
-        return iter(self.outputs)
-
-    def items(self):
-        return list(zip(self.names, self.outputs))
-
-    def __repr__(self):
-        return f"SweepResult({len(self.outputs)} scenarios: {list(self.names)!r})"
 
 
 def maybe_shard_scenarios(pcfgs, fcfgs, n_scenarios: int, *, explicit: bool = False):
     """Place stacked config leaves across the 'data' mesh axis.
 
-    Auto mode (``explicit=False``) silently skips placement on a single
-    device or when the scenario count does not divide the data axis —
-    correctness never depends on placement. An ``explicit`` request that
-    cannot be honored raises instead of silently running replicated.
+    Thin delegate to :meth:`repro.api.Placement.place` (where the logic
+    moved): ``explicit=False`` is ``Placement.AUTO``, ``explicit=True``
+    is ``Placement.SHARDED``.
     """
-    if jax.device_count() == 1 and not explicit:
-        return pcfgs, fcfgs
-    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.api import Placement
 
-    from repro.launch.mesh import data_axis_size, make_local_mesh
-
-    mesh = make_local_mesh()
-    if n_scenarios % data_axis_size(mesh) != 0:
-        if explicit:
-            raise ValueError(
-                f"sharded=True but {n_scenarios} scenarios do not divide the "
-                f"data axis ({data_axis_size(mesh)} devices); pad the "
-                "scenario list or drop the explicit request"
-            )
-        return pcfgs, fcfgs
-    sharding = NamedSharding(mesh, P("data"))
-
-    def put(x):
-        return jax.device_put(x, sharding)
-
-    return (
-        jax.tree_util.tree_map(put, pcfgs),
-        jax.tree_util.tree_map(put, fcfgs),
-    )
+    policy = Placement.SHARDED if explicit else Placement.AUTO
+    return policy.place(pcfgs, fcfgs, n_scenarios)
 
 
 def run_scenarios(
@@ -115,40 +47,20 @@ def run_scenarios(
     payload=None,
     outputs=None,
 ) -> SweepResult:
-    """Run a mixed scenario list; one compiled call per static group.
+    """DEPRECATED shim: run a mixed scenario list, one compiled call per
+    static group, per-scenario results in input order.
 
-    ``scenarios`` may freely mix algorithms/estimators: entries are
-    grouped by static signature (``group_scenarios``), each group runs as
-    one batched ``run_sweep`` call, and results come back per scenario in
-    the input order. Each scenario's (seeds,)-leading outputs are bitwise
-    what ``run_ensemble`` would produce for it under the same ``base_key``.
-
-    ``outputs`` selects the recorded ``StepOutputs`` fields per group
-    (``core.outputs``): the default records scalars only — no
-    ``(seeds, steps, W)`` per-walk stacks — unless a payload is attached.
-
-    A ``payload`` (``core.payload.Payload``) rides every group's compiled
-    call; per-scenario payload outputs land in ``SweepResult.payloads``
-    (workload-under-failure — e.g. loss curves — as ordinary sweep rows).
+    Use ``repro.api.Experiment(graph=..., scenarios=..., steps=...,
+    placement=...).sweep(seeds=...)`` — same grouping, same compile
+    caching, same bits.
     """
-    scenarios = list(scenarios)
-    names = tuple(
-        getattr(s, "name", f"scenario{i}") for i, s in enumerate(scenarios)
+    from repro.api import Experiment, Placement
+    from repro.utils.deprecation import warn_legacy_runner
+
+    warn_legacy_runner(
+        "repro.sweep.run_scenarios", "Experiment(...).sweep(seeds=...)"
     )
-    results = [None] * len(scenarios)
-    payloads = [None] * len(scenarios) if payload is not None else None
-    for _sig, idxs in group_scenarios(scenarios):
-        group = [(as_pair(scenarios[i])) for i in idxs]
-        stacked = sim.run_sweep(
-            graph, group, steps, seeds, base_key, sharded=sharded,
-            payload=payload, outputs=outputs,
-        )
-        if payload is not None:
-            stacked, stacked_payload = stacked
-        for j, i in enumerate(idxs):
-            results[i] = jax.tree_util.tree_map(lambda x: x[j], stacked)
-            if payload is not None:
-                payloads[i] = jax.tree_util.tree_map(
-                    lambda x: x[j], stacked_payload
-                )
-    return SweepResult(names=names, outputs=results, payloads=payloads)
+    return Experiment(
+        graph=graph, scenarios=scenarios, steps=steps, payload=payload,
+        outputs=outputs, placement=Placement.from_sharded(sharded),
+    ).sweep(seeds=seeds, base_key=base_key)

@@ -1,0 +1,39 @@
+"""Deprecation machinery for the legacy run_* surface (PR 5).
+
+The four historical runners (``run_simulation`` / ``run_ensemble`` /
+``run_sweep`` / ``repro.sweep.run_scenarios``) survive as thin shims over
+the declarative ``repro.api`` surface. They warn with
+:class:`APIDeprecationWarning` — a *distinct* class so the test suite can
+promote exactly our own deprecations to errors (registered in
+``tests/conftest.py``) without tripping on third-party warnings. It
+derives from ``FutureWarning``, not ``DeprecationWarning``: Python's
+default filters show DeprecationWarning only in ``__main__``, which would
+silence the migration notice for exactly the audience it exists for —
+downstream *library* callers. In-repo code (library, tests, benchmarks,
+examples) must not call the shims; external callers get one visible
+warning per call site per session.
+"""
+from __future__ import annotations
+
+import warnings
+
+__all__ = ["APIDeprecationWarning", "warn_legacy_runner"]
+
+
+class APIDeprecationWarning(FutureWarning):
+    """A repro-owned deprecation: legacy runner called instead of
+    ``repro.api.Experiment``. Promoted to an error in the repo's own
+    test lanes; a visible-by-default warning for external callers
+    (FutureWarning base — see module docstring)."""
+
+
+def warn_legacy_runner(old: str, new: str) -> None:
+    """Warn that ``old`` is a deprecation shim; point at the ``repro.api``
+    replacement. ``stacklevel=3`` lands the warning on the caller of the
+    shim, not the shim itself."""
+    warnings.warn(
+        f"{old} is deprecated; use {new} — see the migration table in "
+        "README.md (repro.api: spec -> compiled Plan -> results)",
+        APIDeprecationWarning,
+        stacklevel=3,
+    )

@@ -1,0 +1,444 @@
+"""The declarative Experiment API (ISSUE 5): spec -> Plan -> results.
+
+Contract under test:
+  * one compiled program per static signature, process-wide: repeated
+    ``.run`` / ``.ensemble`` / ``.sweep`` calls with the same structure
+    never re-lower and never recompile (monkeypatched-lower counts +
+    XLA cache counts), across re-planned Experiments; a static-field
+    change opens exactly one new cache slot;
+  * the four legacy runners are deprecation shims that stay bitwise
+    equal to the new path (and warn with APIDeprecationWarning, which
+    the test lanes otherwise promote to an error);
+  * ``outputs=`` thins payload outputs too: selected fields only, the
+    dropped ``(.., steps, W)`` stacks never allocated, values matching
+    the full run (integer fields exactly; float fields to the ulp-level
+    re-fusion caveat documented in ``core.outputs``);
+  * the fused estimator path carries pre-padded observation state
+    (``observation_rows``) and returns a final state sliced back to n.
+"""
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import Experiment, Placement, Plan, cache_stats
+from repro.api import plan as plan_mod
+from repro.core import FailureConfig, ProtocolConfig
+from repro.core.outputs import PayloadOutputSpec, split_outputs
+from repro.core.simulator import observation_rows
+from repro.graphs import random_regular_graph
+from repro.sweep import Scenario
+from repro.utils.deprecation import APIDeprecationWarning
+
+N, W, Z0, STEPS, SEEDS, BASE_KEY = 24, 10, 5, 40, 2, 7
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return random_regular_graph(N, 4, seed=3)
+
+
+def _pcfg(alg="decafork", **kw):
+    base = dict(algorithm=alg, z0=Z0, max_walks=W, rt_bins=32,
+                protocol_start=10, eps=1.8)
+    base.update(kw)
+    return ProtocolConfig(**base)
+
+
+FCFG = FailureConfig(burst_times=(15,), burst_sizes=(2,))
+
+
+def _tiny_payload(max_walks=W):
+    from repro.data import make_markov_task
+    from repro.models.config import ModelConfig
+    from repro.models.model import Model
+    from repro.optim import RwSgdPayload, adamw
+
+    cfg = ModelConfig(
+        name="tiny", arch_type="dense", num_layers=1, d_model=32, d_ff=64,
+        vocab_size=64, num_heads=2, num_kv_heads=2, head_dim=16,
+        dtype="float32",
+    )
+    return RwSgdPayload(
+        Model(cfg), adamw(1e-2), make_markov_task(cfg.vocab_size, rank=4),
+        max_walks=max_walks, local_batch=1, seq_len=8,
+    )
+
+
+def _assert_outputs_equal(ref, got, label):
+    for name, a, b in zip(ref._fields, ref, got):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b), err_msg=f"{label}: field {name}"
+        )
+
+
+# ---------------------------------------------------------------------------
+# spec validation
+# ---------------------------------------------------------------------------
+
+
+def test_experiment_spec_validation(graph):
+    with pytest.raises(TypeError, match="steps"):
+        Experiment(graph=graph, protocol=_pcfg())
+    with pytest.raises(TypeError, match="base scenario"):
+        Experiment(graph=graph, steps=5)
+    with pytest.raises(TypeError, match="without protocol"):
+        Experiment(graph=graph, failures=FCFG, steps=5)
+    # a protocol-only spec defaults to the failure-free config
+    exp = Experiment(graph=graph, protocol=_pcfg(), steps=5)
+    assert exp.failures == FailureConfig()
+    assert exp.placement is Placement.AUTO
+    # scenario-only specs plan but refuse run/ensemble with a clear error
+    sexp = Experiment(graph=graph, scenarios=[(_pcfg(), FCFG)], steps=5)
+    with pytest.raises(ValueError, match="base scenario"):
+        sexp.run()
+    with pytest.raises(ValueError, match="base scenario"):
+        sexp.ensemble(1)
+    # ...and a base-only plan refuses sweeps without scenario rows
+    with pytest.raises(ValueError, match="scenarios"):
+        exp.sweep(seeds=1)
+
+
+def test_plan_repr_and_experiment_repr(graph):
+    exp = Experiment(graph=graph, protocol=_pcfg(), steps=5, name="demo")
+    assert "demo" in repr(exp) and "decafork" in repr(exp)
+    assert "steps=5" in repr(exp.plan())
+
+
+# ---------------------------------------------------------------------------
+# compile cache: one lowering + one XLA program per static signature
+# ---------------------------------------------------------------------------
+
+
+def _count_lowerings(monkeypatch):
+    calls = []
+    real = plan_mod._lower
+
+    def counting(mode, signature):
+        calls.append((mode, signature))
+        return real(mode, signature)
+
+    monkeypatch.setattr(plan_mod, "_lower", counting)
+    return calls
+
+
+def test_plan_reuse_never_relowers_or_recompiles(graph, monkeypatch):
+    """Repeated .run/.ensemble/.sweep with the same structure: zero new
+    lowerings, zero new XLA compiles — across calls AND re-planned
+    Experiments AND numeric config changes."""
+    calls = _count_lowerings(monkeypatch)
+    exp = Experiment(graph=graph, protocol=_pcfg(), failures=FCFG, steps=STEPS)
+    plan = exp.plan()
+    scenarios = [(_pcfg(eps=e), FCFG) for e in (1.6, 2.0, 2.4)]
+
+    plan.run(key=0)
+    plan.ensemble(SEEDS, base_key=0)
+    plan.sweep_stacked(scenarios, seeds=SEEDS, base_key=0)
+    lowered = len(calls)
+    assert lowered <= 3  # at most one per mode (fewer if pre-cached)
+    compiles = cache_stats()["xla_compiles"]
+
+    # same structure, different keys / numeric knobs / fresh plans
+    plan.run(key=1)
+    plan.ensemble(SEEDS, base_key=2)
+    exp.plan().run(key=3)
+    Experiment(
+        graph=graph, protocol=_pcfg(eps=2.2),
+        failures=FailureConfig(burst_times=(12,), burst_sizes=(1,)),
+        steps=STEPS,
+    ).ensemble(SEEDS, base_key=4)
+    plan.sweep_stacked(
+        [(_pcfg(eps=e), FCFG) for e in (1.5, 1.9, 2.3)],
+        seeds=SEEDS, base_key=5,
+    )
+    assert len(calls) == lowered  # no new lowerings
+    assert cache_stats()["xla_compiles"] == compiles  # no new XLA programs
+
+
+def test_static_field_change_opens_one_new_slot(graph, monkeypatch):
+    """Changing a static field (rt_bins) re-lowers exactly once; changing
+    back hits the original slot (the cache is keyed, not invalidated)."""
+    calls = _count_lowerings(monkeypatch)
+    base = Experiment(graph=graph, protocol=_pcfg(), failures=FCFG, steps=STEPS)
+    base.ensemble(SEEDS)
+    n0 = len(calls)
+
+    changed = Experiment(
+        graph=graph, protocol=_pcfg(rt_bins=64), failures=FCFG, steps=STEPS
+    )
+    changed.ensemble(SEEDS)
+    assert len(calls) == n0 + 1  # exactly one new signature
+    sig_new = calls[-1][1] if calls else None
+
+    base.ensemble(SEEDS, base_key=9)  # back to the old structure: cached
+    changed.ensemble(SEEDS, base_key=9)  # new structure: also cached now
+    assert len(calls) == n0 + 1
+    if sig_new is not None:
+        assert ("ensemble", sig_new) in plan_mod._EXECUTABLES
+
+
+def test_mixed_groups_one_slot_each(graph, monkeypatch):
+    """A mixed sweep lowers once per static group; re-running it (or
+    permuting the rows) adds nothing."""
+    calls = _count_lowerings(monkeypatch)
+    fc = FailureConfig(burst_times=(20,), burst_sizes=(2,))
+    scenarios = [
+        Scenario("dfk/1.6", _pcfg(eps=1.6), fc),
+        Scenario("mp", _pcfg("missingperson", eps_mp=25.0), fc),
+        Scenario("dfk/2.0", _pcfg(eps=2.0), fc),
+    ]
+    exp = Experiment(graph=graph, scenarios=scenarios, steps=STEPS)
+    exp.sweep(seeds=SEEDS)
+    n0 = len(calls)
+    assert n0 <= 2  # two static groups (decafork, missingperson)
+    compiles = cache_stats()["xla_compiles"]
+    exp.sweep(seeds=SEEDS, base_key=1)
+    exp.plan().sweep(list(reversed(scenarios)), seeds=SEEDS)
+    assert len(calls) == n0
+    assert cache_stats()["xla_compiles"] == compiles
+
+
+def test_cache_stats_shape():
+    st = cache_stats()
+    assert set(st) == {"entries", "xla_compiles", "by_mode"}
+    assert st["entries"] >= 0 and st["xla_compiles"] >= 0
+    assert st["xla_compiles"] == sum(st["by_mode"].values())
+    assert set(st["by_mode"]) <= {"run", "ensemble", "sweep"}
+
+
+# ---------------------------------------------------------------------------
+# new-path == single-trajectory core, across modes
+# ---------------------------------------------------------------------------
+
+
+def test_modes_are_bitwise_consistent(graph):
+    """sweep_stacked[i] == ensemble on scenario i; ensemble[s] == the
+    seed-s trajectory of run under the split keys."""
+    scenarios = [(_pcfg(eps=e), FCFG) for e in (1.6, 2.2)]
+    exp = Experiment(graph=graph, scenarios=scenarios, steps=STEPS,
+                     protocol=scenarios[0][0], failures=FCFG)
+    plan = exp.plan()
+    stacked = plan.sweep_stacked(seeds=SEEDS, base_key=BASE_KEY)
+    for i, (pc, fc) in enumerate(scenarios):
+        ref = Experiment(graph=graph, protocol=pc, failures=fc,
+                         steps=STEPS).ensemble(SEEDS, base_key=BASE_KEY)
+        got = jax.tree_util.tree_map(lambda x: x[i], stacked)
+        _assert_outputs_equal(ref, got, f"scenario{i}")
+    # per-seed equality against single runs
+    ens = plan.ensemble(SEEDS, base_key=BASE_KEY)
+    keys = jax.random.split(jax.random.key(BASE_KEY), SEEDS)
+    for s in range(SEEDS):
+        _, one = plan.run(key=keys[s])
+        got = jax.tree_util.tree_map(lambda x: x[s], ens)
+        _assert_outputs_equal(one, got, f"seed{s}")
+
+
+# ---------------------------------------------------------------------------
+# legacy shims: bitwise-equal, and they warn
+# ---------------------------------------------------------------------------
+
+
+def test_run_simulation_shim_bitwise_and_warns(graph):
+    from repro.core import run_simulation
+
+    exp = Experiment(graph=graph, protocol=_pcfg(), failures=FCFG, steps=STEPS)
+    final_new, outs_new = exp.run(key=3)
+    with pytest.warns(APIDeprecationWarning, match="run_simulation"):
+        final_old, outs_old = run_simulation(graph, _pcfg(), FCFG,
+                                             steps=STEPS, key=3)
+    _assert_outputs_equal(outs_new, outs_old, "run_simulation")
+    np.testing.assert_array_equal(
+        np.asarray(final_new.last_seen), np.asarray(final_old.last_seen)
+    )
+
+
+def test_run_ensemble_shim_bitwise_and_warns(graph):
+    from repro.core import run_ensemble
+
+    new = Experiment(graph=graph, protocol=_pcfg(), failures=FCFG,
+                     steps=STEPS, outputs="full").ensemble(SEEDS, base_key=BASE_KEY)
+    with pytest.warns(APIDeprecationWarning, match="run_ensemble"):
+        old = run_ensemble(graph, _pcfg(), FCFG, steps=STEPS, seeds=SEEDS,
+                           base_key=BASE_KEY, outputs="full")
+    _assert_outputs_equal(new, old, "run_ensemble")
+
+
+def test_run_sweep_shim_bitwise_and_warns(graph):
+    from repro.core.simulator import run_sweep
+
+    scenarios = [(_pcfg(eps=e), FCFG) for e in (1.6, 2.2)]
+    new = Experiment(graph=graph, scenarios=scenarios,
+                     steps=STEPS).plan().sweep_stacked(
+        seeds=SEEDS, base_key=BASE_KEY)
+    with pytest.warns(APIDeprecationWarning, match="run_sweep"):
+        old = run_sweep(graph, scenarios, steps=STEPS, seeds=SEEDS,
+                        base_key=BASE_KEY)
+    _assert_outputs_equal(new, old, "run_sweep")
+    # the legacy sharded tri-state still validates by identity
+    with pytest.warns(APIDeprecationWarning):
+        with pytest.raises(TypeError, match="sharded"):
+            run_sweep(graph, scenarios, steps=5, seeds=1, sharded=0)
+
+
+def test_legacy_shim_warning_is_promoted_to_error(graph):
+    """The tier-1 lane must FAIL on unshielded in-repo shim calls: with
+    no pytest.warns shield, the APIDeprecationWarning surfaces as an
+    error (conftest promotes it)."""
+    from repro.core import run_simulation
+
+    with pytest.raises(APIDeprecationWarning):
+        run_simulation(graph, _pcfg(), FCFG, steps=2, key=0)
+
+
+def test_run_scenarios_shim_bitwise_and_warns(graph):
+    from repro.sweep import run_scenarios
+
+    fc = FailureConfig(burst_times=(20,), burst_sizes=(2,))
+    scenarios = [
+        Scenario("dfk", _pcfg(eps=1.6), fc),
+        Scenario("mp", _pcfg("missingperson", eps_mp=25.0), fc),
+    ]
+    new = Experiment(graph=graph, scenarios=scenarios,
+                     steps=STEPS).sweep(seeds=SEEDS, base_key=3)
+    with pytest.warns(APIDeprecationWarning, match="run_scenarios"):
+        old = run_scenarios(graph, scenarios, steps=STEPS, seeds=SEEDS,
+                            base_key=3)
+    assert old.names == new.names
+    for name in new.names:
+        _assert_outputs_equal(new[name], old[name], name)
+
+
+# ---------------------------------------------------------------------------
+# payload-output thinning (outputs= selects payload fields too)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def payload():
+    return _tiny_payload()
+
+
+def test_split_outputs_resolution(payload):
+    from repro.core.outputs import FULL, SCALARS, OutputSpec
+
+    assert split_outputs(None, None) == (SCALARS, None)
+    assert split_outputs(None, payload) == (FULL, None)
+    assert split_outputs(("z",), payload) == (OutputSpec(("z",)), None)
+    spec, pspec = split_outputs(("z", "mean_loss"), payload)
+    assert spec == OutputSpec(("z",)) and pspec == PayloadOutputSpec(("mean_loss",))
+    # payload-only names: explicitly thinned -> scalars on the sim side
+    spec, pspec = split_outputs(("mean_loss", "trained"), payload)
+    assert spec == SCALARS
+    assert pspec == PayloadOutputSpec(("mean_loss", "trained"))
+    with pytest.raises(ValueError, match="unknown output field"):
+        split_outputs(("z", "bogus"), payload)
+    with pytest.raises(ValueError, match="unknown output field"):
+        split_outputs(("mean_loss",), None)  # no payload to resolve against
+    with pytest.raises(ValueError, match="no payload"):
+        split_outputs(PayloadOutputSpec(("mean_loss",)), None)
+
+
+def test_payload_output_thinning_drops_stacks(graph, payload):
+    """Thinned payload outputs: only the selected fields are stacked (no
+    (seeds, steps, W) loss buffer), values match the full run."""
+    T = 12
+    mk = lambda **kw: Experiment(
+        graph=graph, protocol=_pcfg(), failures=FCFG, steps=T,
+        payload=payload, **kw,
+    ).ensemble(SEEDS, base_key=3)
+    full, learn_full = mk()
+    assert learn_full._fields == ("loss", "mean_loss", "trained")
+    thin, learn_thin = mk(outputs=("z", "mean_loss", "trained"))
+    assert thin._fields == ("z",)
+    assert learn_thin._fields == ("mean_loss", "trained")
+    leaves = jax.tree_util.tree_leaves(learn_thin)
+    assert all(leaf.shape == (SEEDS, T) for leaf in leaves)  # no (.., W)
+    # integer telemetry is exact; float reductions may re-fuse (see
+    # core.outputs.PayloadOutputSpec) so the loss curve is allclose
+    np.testing.assert_array_equal(
+        np.asarray(learn_thin.trained), np.asarray(learn_full.trained)
+    )
+    np.testing.assert_allclose(
+        np.asarray(learn_thin.mean_loss), np.asarray(learn_full.mean_loss),
+        rtol=1e-5, atol=1e-6,
+    )
+    np.testing.assert_array_equal(np.asarray(thin.z), np.asarray(full.z))
+    with pytest.raises(AttributeError):
+        learn_thin.loss
+
+
+def test_payload_thinning_through_sweep(graph, payload):
+    """The payload spec rides the sweep path: thinned stacks per scenario,
+    sweep rows == the thinned ensembles."""
+    T = 10
+    scenarios = [(_pcfg(eps=1.5), FCFG), (_pcfg(eps=2.1), FCFG)]
+    outs, learn = Experiment(
+        graph=graph, scenarios=scenarios, steps=T, payload=payload,
+        outputs=("z", "mean_loss"),
+    ).plan().sweep_stacked(seeds=SEEDS, base_key=BASE_KEY)
+    assert learn._fields == ("mean_loss",)
+    assert learn.mean_loss.shape == (2, SEEDS, T)
+    for i, (pc, fc) in enumerate(scenarios):
+        _, ref = Experiment(
+            graph=graph, protocol=pc, failures=fc, steps=T, payload=payload,
+            outputs=("z", "mean_loss"),
+        ).ensemble(SEEDS, base_key=BASE_KEY)
+        np.testing.assert_array_equal(
+            np.asarray(ref.mean_loss), np.asarray(learn.mean_loss[i])
+        )
+
+
+def test_payload_spec_requires_addressable_outputs(graph):
+    """A payload that emits a non-namedtuple outputs pytree cannot be
+    thinned by field name — the error says so at spec time."""
+    from repro.core import Payload
+
+    with pytest.raises(ValueError, match="unknown output field"):
+        Experiment(graph=graph, protocol=_pcfg(), steps=3,
+                   payload=Payload(), outputs=("mean_loss",))
+
+
+# ---------------------------------------------------------------------------
+# fused path: pre-padded observation state
+# ---------------------------------------------------------------------------
+
+
+def test_observation_rows_pads_only_fused():
+    fused = _pcfg(estimator_impl="fused")
+    assert observation_rows(19, fused) == 24  # tile 8
+    assert observation_rows(16, fused) == 16  # already aligned
+    assert observation_rows(5, fused) == 5  # bn = min(8, n)
+    assert observation_rows(19, _pcfg(estimator_impl="gather")) == 19
+    assert observation_rows(19, _pcfg("missingperson")) == 19
+    assert observation_rows(
+        19, _pcfg(estimator_impl="fused", analytic_survival=True)
+    ) == 19  # pi path never fuses
+
+
+def test_fused_prepadded_state_matches_compare_and_slices_back(graph):
+    """The pre-padded fused trajectory equals the unfused oracle bitwise
+    on a non-tile-multiple n, and the returned final state is sliced back
+    to (n, ...)."""
+    g = random_regular_graph(19, 4, seed=2)
+    fcfg = FailureConfig(burst_times=(25,), burst_sizes=(2,))
+    finals, outs = {}, {}
+    for impl in ("compare", "fused"):
+        pcfg = ProtocolConfig(
+            algorithm="decafork", z0=4, max_walks=8, eps=1.4,
+            protocol_start=15, rt_bins=32, estimator_impl=impl,
+        )
+        finals[impl], outs[impl] = Experiment(
+            graph=g, protocol=pcfg, failures=fcfg, steps=60, outputs="full"
+        ).run(key=5)
+    _assert_outputs_equal(outs["compare"], outs["fused"], "fused vs compare")
+    assert finals["fused"].last_seen.shape == (19, 8)
+    assert finals["fused"].rts.hist.shape[0] == 19
+    np.testing.assert_array_equal(
+        np.asarray(finals["fused"].last_seen),
+        np.asarray(finals["compare"].last_seen),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(finals["fused"].rts.hist),
+        np.asarray(finals["compare"].rts.hist),
+    )

@@ -71,14 +71,14 @@ def test_probability_integral_transform_prop1():
     from repro.graphs import random_regular_graph
     from repro.core.protocol import ProtocolConfig
     from repro.core.failures import FailureConfig
-    from repro.core.simulator import run_simulation
+    from repro.api import Experiment
 
     g = random_regular_graph(50, 6, seed=2)
     pcfg = ProtocolConfig(
         algorithm="decafork", z0=8, max_walks=16, eps=0.0,  # eps=0: never fork
         protocol_start=10**9, rt_bins=512,
     )
-    _, outs = run_simulation(g, pcfg, FailureConfig(), steps=4000, key=1)
+    _, outs = Experiment(graph=g, protocol=pcfg, steps=4000).run(key=1)
     theta = np.asarray(outs.theta_mean)[2000:]  # steady state
     # idealized value 4.0; measured inspection-paradox band:
     assert 3.0 < theta.mean() < 4.3, theta.mean()
@@ -92,14 +92,14 @@ def test_inspection_paradox_bias_quantified():
     from repro.graphs import random_regular_graph
     from repro.core.protocol import ProtocolConfig
     from repro.core.failures import FailureConfig
-    from repro.core.simulator import run_simulation
+    from repro.api import Experiment
 
     g = random_regular_graph(50, 6, seed=2)
     pcfg = ProtocolConfig(
         algorithm="decafork", z0=8, max_walks=16, eps=0.0,
         protocol_start=10**9, rt_bins=512,
     )
-    final, _ = run_simulation(g, pcfg, FailureConfig(), steps=4000, key=1)
+    final, _ = Experiment(graph=g, protocol=pcfg, steps=4000).run(key=1)
     cum = est.survival_cumulative(final.rts)
     t = final.t
     ls = final.last_seen[:, :8]

@@ -171,9 +171,9 @@ def test_ssd_vs_naive_recurrence():
 def test_pallas_estimator_in_simulation():
     """estimator_impl='pallas' (interpret mode) drives the same protocol
     trajectory as the gather path inside a real simulation."""
+    from repro.api import Experiment
     from repro.core.failures import FailureConfig
     from repro.core.protocol import ProtocolConfig
-    from repro.core.simulator import run_simulation
     from repro.graphs import random_regular_graph
 
     g = random_regular_graph(16, 4, seed=2)
@@ -184,6 +184,6 @@ def test_pallas_estimator_in_simulation():
             algorithm="decafork", z0=4, max_walks=8, eps=1.2,
             protocol_start=60, rt_bins=64, estimator_impl=impl,
         )
-        _, outs = run_simulation(g, pcfg, fcfg, steps=200, key=9)
+        _, outs = Experiment(graph=g, protocol=pcfg, failures=fcfg, steps=200).run(key=9)
         zs[impl] = np.asarray(outs.z)
     np.testing.assert_array_equal(zs["gather"], zs["pallas"])

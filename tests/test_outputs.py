@@ -15,6 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.api import Experiment
 from repro.core import (
     FULL,
     SCALARS,
@@ -22,11 +23,8 @@ from repro.core import (
     OutputSpec,
     ProtocolConfig,
     RecordedOutputs,
-    run_ensemble,
-    run_simulation,
 )
 from repro.core.outputs import ALL_FIELDS, SCALAR_FIELDS, resolve_spec
-from repro.core.simulator import run_sweep
 from repro.graphs import random_regular_graph
 
 N, W, Z0, STEPS, SEEDS = 24, 10, 5, 40, 2
@@ -79,7 +77,8 @@ def test_resolve_spec_modes():
 
 
 def test_dropped_field_access_raises(graph):
-    outs = run_ensemble(graph, _pcfg(), FCFG, steps=10, seeds=1)
+    outs = Experiment(graph=graph, protocol=_pcfg(), failures=FCFG,
+                      steps=10).ensemble(seeds=1)
     with pytest.raises(AttributeError, match="not recorded.*outputs='full'"):
         outs.fork_parent
     with pytest.raises(AttributeError):
@@ -92,12 +91,12 @@ def test_dropped_field_access_raises(graph):
 
 
 def test_thinned_equals_full_slices_payload_free(graph):
-    full = run_ensemble(graph, _pcfg(), FCFG, steps=STEPS, seeds=SEEDS,
-                        base_key=7, outputs="full")
+    full = Experiment(graph=graph, protocol=_pcfg(), failures=FCFG, steps=STEPS,
+                      outputs="full").ensemble(SEEDS, base_key=7)
     assert full._fields == ALL_FIELDS
     for spec in (None, "scalars", ("z", "terminated"), OutputSpec(("forks",))):
-        thin = run_ensemble(graph, _pcfg(), FCFG, steps=STEPS, seeds=SEEDS,
-                            base_key=7, outputs=spec)
+        thin = Experiment(graph=graph, protocol=_pcfg(), failures=FCFG,
+                          steps=STEPS, outputs=spec).ensemble(SEEDS, base_key=7)
         for name in thin._fields:
             np.testing.assert_array_equal(
                 np.asarray(getattr(thin, name)),
@@ -123,15 +122,15 @@ def test_thinned_equals_full_slices_with_payload(graph):
         max_walks=W, local_batch=1, seq_len=8,
     )
     T = 12
-    full, learn_full = run_ensemble(
-        graph, _pcfg(), FCFG, steps=T, seeds=SEEDS, base_key=3,
+    full, learn_full = Experiment(
+        graph=graph, protocol=_pcfg(), failures=FCFG, steps=T,
         payload=payload,
-    )
+    ).ensemble(SEEDS, base_key=3)
     assert full._fields == ALL_FIELDS  # payload auto-records everything
-    thin, learn_thin = run_ensemble(
-        graph, _pcfg(), FCFG, steps=T, seeds=SEEDS, base_key=3,
+    thin, learn_thin = Experiment(
+        graph=graph, protocol=_pcfg(), failures=FCFG, steps=T,
         payload=payload, outputs=("z",),
-    )
+    ).ensemble(SEEDS, base_key=3)
     assert thin._fields == ("z",)
     np.testing.assert_array_equal(np.asarray(thin.z), np.asarray(full.z))
     # the payload outputs are untouched by the spec (hooks see everything)
@@ -147,7 +146,8 @@ def test_thinned_equals_full_slices_with_payload(graph):
 
 def test_payload_free_sweep_has_no_per_walk_stacks(graph):
     scenarios = [(_pcfg(eps=e), FCFG) for e in (1.6, 2.0, 2.4)]
-    out = run_sweep(graph, scenarios, steps=STEPS, seeds=SEEDS, base_key=5)
+    out = Experiment(graph=graph, scenarios=scenarios,
+                     steps=STEPS).plan().sweep_stacked(seeds=SEEDS, base_key=5)
     assert isinstance(out, RecordedOutputs)
     assert out._fields == SCALAR_FIELDS
     leaves = jax.tree_util.tree_leaves(out)
@@ -161,13 +161,14 @@ def test_payload_free_sweep_has_no_per_walk_stacks(graph):
 def test_sweep_thinned_matches_ensemble(graph):
     """The spec composes with the sweep/ensemble bitwise contract."""
     scenarios = [(_pcfg(eps=e), FCFG) for e in (1.6, 2.2)]
-    out = run_sweep(graph, scenarios, steps=STEPS, seeds=SEEDS, base_key=9,
-                    outputs=("z", "fork_parent"))
+    out = Experiment(graph=graph, scenarios=scenarios, steps=STEPS,
+                     outputs=("z", "fork_parent")).plan().sweep_stacked(
+        seeds=SEEDS, base_key=9)
     assert out._fields == ("z", "fork_parent")
     assert out.fork_parent.shape == (2, SEEDS, STEPS, W)
     for i, (pc, fc) in enumerate(scenarios):
-        ref = run_ensemble(graph, pc, fc, steps=STEPS, seeds=SEEDS,
-                           base_key=9, outputs=("z", "fork_parent"))
+        ref = Experiment(graph=graph, protocol=pc, failures=fc, steps=STEPS,
+                         outputs=("z", "fork_parent")).ensemble(SEEDS, base_key=9)
         for name in ref._fields:
             np.testing.assert_array_equal(
                 np.asarray(getattr(ref, name)),
@@ -177,14 +178,14 @@ def test_sweep_thinned_matches_ensemble(graph):
 
 
 def test_run_scenarios_threads_outputs(graph):
-    from repro.sweep import Scenario, run_scenarios
+    from repro.sweep import Scenario
 
     scenarios = [
         Scenario("a", _pcfg(eps=1.6), FCFG),
         Scenario("mp", _pcfg(algorithm="missingperson", eps_mp=20.0), FCFG),
     ]
-    res = run_scenarios(graph, scenarios, steps=10, seeds=1,
-                        outputs=("z", "terminated"))
+    res = Experiment(graph=graph, scenarios=scenarios, steps=10,
+                     outputs=("z", "terminated")).sweep(seeds=1)
     for name in res.names:
         assert res[name]._fields == ("z", "terminated")
         assert res[name].terminated.shape == (1, 10, W)

@@ -19,17 +19,17 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.api import Experiment
 from repro.core import FailureConfig, Payload, ProtocolConfig
-from repro.core import run_ensemble, run_simulation
 from repro.core.payload import PAYLOAD_STREAM, payload_init_key
-from repro.core.simulator import init_state, protocol_step, run_sweep
+from repro.core.simulator import init_state, protocol_step
 from repro.data import make_markov_task
 from repro.graphs import random_regular_graph
 from repro.graphs.state import mirror_indices
 from repro.models.config import ModelConfig
 from repro.models.model import Model
 from repro.optim import RwSgdPayload, adamw
-from repro.sweep import Scenario, run_scenarios
+from repro.sweep import Scenario
 from repro.utils.prng import fold_in_time
 
 GOLDEN = os.path.join(os.path.dirname(__file__), "golden", "pr1_trajectories.json")
@@ -87,8 +87,9 @@ def test_payload_none_is_bitwise_pr2_golden(graph, golden):
     golden ensemble trajectories exactly."""
     pcfg = _pcfg("decafork", eps=1.8)
     fcfg = FailureConfig(burst_times=(20,), burst_sizes=(2,))
-    outs = run_ensemble(graph, pcfg, fcfg, steps=STEPS, seeds=SEEDS,
-                        base_key=BASE_KEY, payload=None, outputs="full")
+    outs = Experiment(graph=graph, protocol=pcfg, failures=fcfg, steps=STEPS,
+                      payload=None, outputs="full").ensemble(
+        SEEDS, base_key=BASE_KEY)
     ref = golden["ensemble"]["decafork/burst"]
     for name, arr in zip(outs._fields, outs):
         got = np.asarray(arr)
@@ -102,8 +103,9 @@ def test_null_payload_leaves_golden_trajectories_bitwise(graph, golden):
     simulator stream: StepOutputs stay bitwise the PR-2 goldens."""
     pcfg = _pcfg("decafork", eps=1.8)
     fcfg = FailureConfig(burst_times=(20,), burst_sizes=(2,))
-    outs, pouts = run_ensemble(graph, pcfg, fcfg, steps=STEPS, seeds=SEEDS,
-                               base_key=BASE_KEY, payload=Payload())
+    outs, pouts = Experiment(graph=graph, protocol=pcfg, failures=fcfg,
+                             steps=STEPS, payload=Payload()).ensemble(
+        SEEDS, base_key=BASE_KEY)
     assert pouts == ()
     ref = golden["ensemble"]["decafork/burst"]
     for name, arr in zip(outs._fields, outs):
@@ -118,9 +120,11 @@ def test_rw_sgd_payload_leaves_sim_outputs_bitwise(graph):
     """Even a real training payload is invisible to the control plane."""
     pcfg = _pcfg("decafork+", eps=1.6, eps2=6.0)
     fcfg = FailureConfig(burst_times=(15,), burst_sizes=(2,))
-    ref = run_ensemble(graph, pcfg, fcfg, steps=25, seeds=SEEDS, base_key=3)
-    outs, learn = run_ensemble(graph, pcfg, fcfg, steps=25, seeds=SEEDS,
-                               base_key=3, payload=_tiny_payload())
+    ref = Experiment(graph=graph, protocol=pcfg, failures=fcfg,
+                     steps=25).ensemble(SEEDS, base_key=3)
+    outs, learn = Experiment(graph=graph, protocol=pcfg, failures=fcfg,
+                             steps=25, payload=_tiny_payload()).ensemble(
+        SEEDS, base_key=3)
     _assert_outputs_equal(ref, outs, "rw-sgd attached")
     assert learn.loss.shape == (SEEDS, 25, W)
     assert np.isfinite(np.asarray(learn.loss)).all()
@@ -129,11 +133,13 @@ def test_rw_sgd_payload_leaves_sim_outputs_bitwise(graph):
 def test_run_simulation_return_shapes(graph):
     pcfg = _pcfg()
     fcfg = FailureConfig()
-    final, outs = run_simulation(graph, pcfg, fcfg, steps=10, key=1)
+    final, outs = Experiment(graph=graph, protocol=pcfg, failures=fcfg,
+                             steps=10).run(key=1)
     assert outs.z.shape == (10,)
-    (final2, carry), (outs2, learn) = run_simulation(
-        graph, pcfg, fcfg, steps=10, key=1, payload=_tiny_payload()
-    )
+    (final2, carry), (outs2, learn) = Experiment(
+        graph=graph, protocol=pcfg, failures=fcfg, steps=10,
+        payload=_tiny_payload(),
+    ).run(key=1)
     _assert_outputs_equal(outs, outs2, "payload run")
     assert carry.steps.shape == (W,)
     assert learn.mean_loss.shape == (10,)
@@ -152,9 +158,9 @@ def test_fused_scan_matches_per_round_hook_loop(graph):
     pcfg = _pcfg("decafork", eps=1.8)
     fcfg = FailureConfig(burst_times=(8,), burst_sizes=(2,))
     T = 15
-    (_, rs_fused), (outs, learn) = run_simulation(
-        graph, pcfg, fcfg, steps=T, key=0, payload=payload
-    )
+    (_, rs_fused), (outs, learn) = Experiment(
+        graph=graph, protocol=pcfg, failures=fcfg, steps=T, payload=payload
+    ).run(key=0)
 
     key = jax.random.key(0)
     neighbors = jnp.asarray(graph.neighbors)
@@ -202,8 +208,8 @@ def test_hook_order_is_terminate_fork_visit(graph):
             calls.append("visit")
             return carry, ()
 
-    run_simulation(graph, _pcfg(), FailureConfig(), steps=3, key=0,
-                   payload=Recorder())
+    Experiment(graph=graph, protocol=_pcfg(), steps=3,
+               payload=Recorder()).run(key=0)
     assert calls == ["terminate", "fork", "visit"]
 
 
@@ -263,7 +269,8 @@ def test_rw_sgd_train_every_thins_updates():
 def test_payload_validate_capacity_mismatch(graph):
     payload = _tiny_payload(max_walks=W + 1)
     with pytest.raises(ValueError, match="max_walks"):
-        run_simulation(graph, _pcfg(), FailureConfig(), steps=5, payload=payload)
+        Experiment(graph=graph, protocol=_pcfg(), steps=5,
+                   payload=payload).run()
 
 
 # ---------------------------------------------------------------------------
@@ -286,13 +293,16 @@ def test_sweep_payload_matches_ensemble_bitwise(graph, small_payload):
         (_pcfg("decafork", eps=2.2), FailureConfig(p_fail=0.002)),
     ]
     T = 12
-    outs, learn = run_sweep(graph, scenarios, steps=T, seeds=SEEDS,
-                            base_key=BASE_KEY, payload=small_payload)
+    outs, learn = Experiment(
+        graph=graph, scenarios=scenarios, steps=T, payload=small_payload,
+    ).plan().sweep_stacked(seeds=SEEDS, base_key=BASE_KEY)
     assert outs.z.shape == (2, SEEDS, T)
     assert learn.loss.shape == (2, SEEDS, T, W)
     for i, (pc, fc) in enumerate(scenarios):
-        ref, ref_learn = run_ensemble(graph, pc, fc, steps=T, seeds=SEEDS,
-                                      base_key=BASE_KEY, payload=small_payload)
+        ref, ref_learn = Experiment(
+            graph=graph, protocol=pc, failures=fc, steps=T,
+            payload=small_payload,
+        ).ensemble(SEEDS, base_key=BASE_KEY)
         got = jax.tree_util.tree_map(lambda x: x[i], outs)
         _assert_outputs_equal(ref, got, f"scenario{i}")
         for name, a, b in zip(ref_learn._fields, ref_learn, learn):
@@ -313,15 +323,15 @@ def test_run_scenarios_threads_payloads_through_groups(graph, small_payload):
         Scenario("dfk2", _pcfg("decafork", eps=2.0), fc),
     ]
     T = 12
-    res = run_scenarios(graph, scenarios, steps=T, seeds=SEEDS,
-                        base_key=3, payload=small_payload)
+    res = Experiment(graph=graph, scenarios=scenarios, steps=T,
+                     payload=small_payload).sweep(seeds=SEEDS, base_key=3)
     assert res.names == ("dfk", "none", "dfk2")
     assert res.payloads is not None and len(res.payloads) == 3
     for s in scenarios:
-        ref, ref_learn = run_ensemble(
-            graph, s.pcfg, s.fcfg, steps=T, seeds=SEEDS, base_key=3,
+        ref, ref_learn = Experiment(
+            graph=graph, protocol=s.pcfg, failures=s.fcfg, steps=T,
             payload=small_payload,
-        )
+        ).ensemble(SEEDS, base_key=3)
         _assert_outputs_equal(ref, res[s.name], s.name)
         np.testing.assert_array_equal(
             np.asarray(ref_learn.loss), np.asarray(res.payload(s.name).loss),
@@ -331,7 +341,8 @@ def test_run_scenarios_threads_payloads_through_groups(graph, small_payload):
 
 def test_run_scenarios_without_payload_has_no_payloads(graph):
     fc = FailureConfig()
-    res = run_scenarios(graph, [Scenario("a", _pcfg(), fc)], steps=5, seeds=1)
+    res = Experiment(graph=graph, scenarios=[Scenario("a", _pcfg(), fc)],
+                     steps=5).sweep(seeds=1)
     assert res.payloads is None
     with pytest.raises(KeyError):
         res.payload("a")

@@ -102,7 +102,8 @@ def test_no_observations_round():
 def test_fused_impl_matches_compare_trajectory(alg):
     """estimator_impl='fused' drives the exact same protocol trajectory
     as 'compare' (its oracle) inside a real multi-round simulation."""
-    from repro.core import FailureConfig, ProtocolConfig, run_simulation
+    from repro.api import Experiment
+    from repro.core import FailureConfig, ProtocolConfig
     from repro.graphs import random_regular_graph
 
     g = random_regular_graph(19, 4, seed=2)  # n=19: not a tile multiple
@@ -113,7 +114,8 @@ def test_fused_impl_matches_compare_trajectory(alg):
             algorithm=alg, z0=4, max_walks=8, eps=1.4, eps2=6.0,
             protocol_start=20, rt_bins=64, estimator_impl=impl,
         )
-        _, o = run_simulation(g, pcfg, fcfg, steps=120, key=11, outputs="full")
+        _, o = Experiment(graph=g, protocol=pcfg, failures=fcfg, steps=120,
+                          outputs="full").run(key=11)
         outs[impl] = o
     for name in outs["compare"]._fields:
         np.testing.assert_array_equal(
@@ -126,7 +128,8 @@ def test_fused_impl_matches_compare_trajectory(alg):
 def test_auto_impl_resolves_per_backend():
     """estimator_impl='auto' picks the backend's best implementation and
     (on CPU) is bitwise the gather path."""
-    from repro.core import FailureConfig, ProtocolConfig, run_simulation
+    from repro.api import Experiment
+    from repro.core import FailureConfig, ProtocolConfig
     from repro.graphs import random_regular_graph
     from repro.kernels.platform import best_estimator_impl
 
@@ -139,6 +142,6 @@ def test_auto_impl_resolves_per_backend():
             algorithm="decafork", z0=4, max_walks=8, eps=1.4,
             protocol_start=20, rt_bins=32, estimator_impl=impl,
         )
-        _, o = run_simulation(g, pcfg, FailureConfig(), steps=80, key=3)
+        _, o = Experiment(graph=g, protocol=pcfg, steps=80).run(key=3)
         ref_z[impl] = np.asarray(o.z)
     np.testing.assert_array_equal(ref_z["auto"], ref_z[want_impl])

@@ -206,7 +206,8 @@ def test_theorem4_exact_bound():
 
 def test_analytic_survival_mode_runs():
     """Footnote-5 option: protocol with the analytic geometric survival."""
-    from repro.core import FailureConfig, ProtocolConfig, run_simulation, survived
+    from repro.api import Experiment
+    from repro.core import FailureConfig, ProtocolConfig, survived
     from repro.graphs import random_regular_graph
 
     g = random_regular_graph(48, 6, seed=4)
@@ -215,7 +216,7 @@ def test_analytic_survival_mode_runs():
         protocol_start=300, rt_bins=256, analytic_survival=True,
     )
     fcfg = FailureConfig(burst_times=(600,), burst_sizes=(3,))
-    _, outs = run_simulation(g, pcfg, fcfg, steps=1500, key=0)
+    _, outs = Experiment(graph=g, protocol=pcfg, failures=fcfg, steps=1500).run(key=0)
     z = np.asarray(outs.z)
     assert survived(z)
     assert z[600] == z[599] - 3

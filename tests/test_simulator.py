@@ -4,13 +4,8 @@ import pytest
 
 from repro.core.failures import FailureConfig
 from repro.core.protocol import ProtocolConfig
-from repro.core.simulator import (
-    max_overshoot,
-    reaction_time,
-    run_ensemble,
-    run_simulation,
-    survived,
-)
+from repro.api import Experiment
+from repro.core.simulator import max_overshoot, reaction_time, survived
 from repro.graphs import random_regular_graph
 
 
@@ -23,15 +18,15 @@ def test_reproducible(graph):
     pcfg = ProtocolConfig(algorithm="decafork", z0=6, max_walks=24, eps=1.8,
                           protocol_start=300, rt_bins=256)
     fcfg = FailureConfig(burst_times=(600,), burst_sizes=(3,))
-    _, a = run_simulation(graph, pcfg, fcfg, steps=1000, key=5)
-    _, b = run_simulation(graph, pcfg, fcfg, steps=1000, key=5)
+    _, a = Experiment(graph=graph, protocol=pcfg, failures=fcfg, steps=1000).run(key=5)
+    _, b = Experiment(graph=graph, protocol=pcfg, failures=fcfg, steps=1000).run(key=5)
     np.testing.assert_array_equal(np.asarray(a.z), np.asarray(b.z))
 
 
 def test_no_protocol_collapses(graph):
     pcfg = ProtocolConfig(algorithm="none", z0=6, max_walks=24)
     fcfg = FailureConfig(p_fail=0.01)
-    _, outs = run_simulation(graph, pcfg, fcfg, steps=2000, key=0)
+    _, outs = Experiment(graph=graph, protocol=pcfg, failures=fcfg, steps=2000).run(key=0)
     z = np.asarray(outs.z)
     assert z[-1] == 0  # catastrophic failure without self-regulation
     assert not survived(z)
@@ -40,7 +35,7 @@ def test_no_protocol_collapses(graph):
 def test_burst_kills_exact_count(graph):
     pcfg = ProtocolConfig(algorithm="none", z0=8, max_walks=16)
     fcfg = FailureConfig(burst_times=(100,), burst_sizes=(5,))
-    _, outs = run_simulation(graph, pcfg, fcfg, steps=200, key=1)
+    _, outs = Experiment(graph=graph, protocol=pcfg, failures=fcfg, steps=200).run(key=1)
     z = np.asarray(outs.z)
     assert z[99] == 8 and z[100] == 3
     assert int(np.asarray(outs.failures).sum()) == 5
@@ -50,7 +45,7 @@ def test_decafork_recovers(graph):
     pcfg = ProtocolConfig(algorithm="decafork", z0=6, max_walks=24, eps=1.2,
                           protocol_start=400, rt_bins=256)
     fcfg = FailureConfig(burst_times=(800,), burst_sizes=(3,))
-    _, outs = run_simulation(graph, pcfg, fcfg, steps=2500, key=3)
+    _, outs = Experiment(graph=graph, protocol=pcfg, failures=fcfg, steps=2500).run(key=3)
     z = np.asarray(outs.z)
     z_pre = int(z[799])
     assert z_pre >= 6  # held (or exceeded) the target before the burst
@@ -65,7 +60,7 @@ def test_walk_count_bounded_by_capacity(graph):
     pcfg = ProtocolConfig(algorithm="missingperson", z0=6, max_walks=12,
                           eps_mp=20.0, protocol_start=0)
     fcfg = FailureConfig()
-    _, outs = run_simulation(graph, pcfg, fcfg, steps=500, key=4)
+    _, outs = Experiment(graph=graph, protocol=pcfg, failures=fcfg, steps=500).run(key=4)
     assert np.asarray(outs.z).max() <= 12
 
 
@@ -73,7 +68,7 @@ def test_ensemble_shape_and_variation(graph):
     pcfg = ProtocolConfig(algorithm="decafork", z0=6, max_walks=16, eps=1.8,
                           protocol_start=300, rt_bins=256)
     fcfg = FailureConfig(burst_times=(600,), burst_sizes=(3,))
-    outs = run_ensemble(graph, pcfg, fcfg, steps=900, seeds=4)
+    outs = Experiment(graph=graph, protocol=pcfg, failures=fcfg, steps=900).ensemble(seeds=4)
     z = np.asarray(outs.z)
     assert z.shape == (4, 900)
     # different seeds -> different trajectories
@@ -84,7 +79,7 @@ def test_byzantine_gating(graph):
     pcfg = ProtocolConfig(algorithm="none", z0=6, max_walks=8)
     fcfg = FailureConfig(byzantine_node=0, p_byz=0.0, byz_start=True,
                          byz_start_time=300)
-    _, outs = run_simulation(graph, pcfg, fcfg, steps=600, key=6)
+    _, outs = Experiment(graph=graph, protocol=pcfg, failures=fcfg, steps=600).run(key=6)
     z = np.asarray(outs.z)
     assert (z[:299] == 6).all()  # honest before onset
     assert z[-1] < 6  # kills once armed

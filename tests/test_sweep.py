@@ -1,17 +1,17 @@
-"""Sweep engine: batched scenarios are bitwise the per-scenario ensembles."""
+"""Sweep engine on the Plan surface: batched scenarios are bitwise the
+per-scenario ensembles, grouping/stacking behave, placement dispatches."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import FailureConfig, ProtocolConfig, run_ensemble
-from repro.core import simulator as sim
-from repro.core.simulator import run_sweep
+from repro.api import Experiment, Placement
+from repro.api import plan as plan_mod
+from repro.core import FailureConfig, ProtocolConfig
 from repro.graphs import random_regular_graph
 from repro.sweep import (
     Scenario,
     group_scenarios,
-    run_scenarios,
     stack_configs,
 )
 
@@ -43,6 +43,16 @@ def _fcfgs():
     ]
 
 
+def _sweep_stacked(graph, scenarios, *, seeds=SEEDS, base_key=0, **kw):
+    return Experiment(graph=graph, scenarios=scenarios, steps=STEPS,
+                      **kw).plan().sweep_stacked(seeds=seeds, base_key=base_key)
+
+
+def _ensemble(graph, pcfg, fcfg, *, seeds=SEEDS, base_key=0):
+    return Experiment(graph=graph, protocol=pcfg, failures=fcfg,
+                      steps=STEPS).ensemble(seeds, base_key=base_key)
+
+
 def _assert_outputs_equal(ref, got, label):
     for name, a, b in zip(ref._fields, ref, got):
         np.testing.assert_array_equal(
@@ -54,22 +64,24 @@ def _assert_outputs_equal(ref, got, label):
 @pytest.mark.parametrize("impl", ["gather", "compare"])
 @pytest.mark.parametrize("alg", ["decafork", "decafork+", "missingperson", "none"])
 def test_sweep_matches_ensemble(graph, alg, impl):
-    """run_sweep over a scenario stack == per-scenario run_ensemble, bitwise."""
+    """Plan.sweep_stacked over a scenario stack == per-scenario
+    Plan.ensemble, bitwise."""
     eps_grid = (1.4, 1.8, 2.2)
     scenarios = [
         (_pcfg(alg, impl, eps=e, eps2=5.0 + e, eps_mp=15.0 + 10 * i), f)
         for i, (e, f) in enumerate(zip(eps_grid, _fcfgs()))
     ]
-    out = run_sweep(graph, scenarios, steps=STEPS, seeds=SEEDS, base_key=7)
+    out = _sweep_stacked(graph, scenarios, base_key=7)
     assert out.z.shape == (len(scenarios), SEEDS, STEPS)
     for i, (pc, fc) in enumerate(scenarios):
-        ref = run_ensemble(graph, pc, fc, steps=STEPS, seeds=SEEDS, base_key=7)
+        ref = _ensemble(graph, pc, fc, base_key=7)
         got = jax.tree_util.tree_map(lambda x: x[i], out)
         _assert_outputs_equal(ref, got, f"{alg}/{impl}/scenario{i}")
 
 
 def test_sweep_single_compilation(graph):
-    """>= 8 scenarios x >= 4 seeds execute as ONE jit-compiled call."""
+    """>= 8 scenarios x >= 4 seeds execute as ONE jit-compiled call, and
+    numeric grid changes reuse the cached executable."""
     fcs = [
         FailureConfig(burst_times=(20,), burst_sizes=(2,)),
         FailureConfig(burst_times=(25,), burst_sizes=(2,), p_fail=0.001),
@@ -80,23 +92,24 @@ def test_sweep_single_compilation(graph):
         for fc in fcs
     ]
     assert len(scenarios) >= 8
-    before = sim._run_sweep._cache_size()
-    out = run_sweep(graph, scenarios, steps=STEPS, seeds=4, base_key=11)
+    sweep_compiles = lambda: plan_mod.cache_stats()["by_mode"].get("sweep", 0)
+    before = sweep_compiles()
+    out = _sweep_stacked(graph, scenarios, seeds=4, base_key=11)
     jax.block_until_ready(out.z)
-    after_first = sim._run_sweep._cache_size()
-    assert after_first == before + 1  # one compiled program for all 8x4
+    after_first = sweep_compiles()
+    assert after_first <= before + 1  # one (possibly pre-cached) program
     assert out.z.shape == (8, 4, STEPS)
     # and that one program reproduces every per-scenario ensemble bitwise
     for i, (pc, fc) in enumerate(scenarios):
-        ref = run_ensemble(graph, pc, fc, steps=STEPS, seeds=4, base_key=11)
+        ref = _ensemble(graph, pc, fc, seeds=4, base_key=11)
         got = jax.tree_util.tree_map(lambda x: x[i], out)
         _assert_outputs_equal(ref, got, f"scenario{i}")
     # numeric variations reuse the same program: a second grid, same shapes
     more = [
         (_pcfg("decafork", "gather", eps=e), fcs[0]) for e in np.linspace(1.2, 2.6, 8)
     ]
-    run_sweep(graph, more, steps=STEPS, seeds=4, base_key=13)
-    assert sim._run_sweep._cache_size() == after_first
+    _sweep_stacked(graph, more, seeds=4, base_key=13)
+    assert sweep_compiles() == after_first
 
 
 @pytest.mark.slow
@@ -108,9 +121,9 @@ def test_burst_padding_batches_unequal_schedules(graph):
         (_pcfg("decafork", "gather", eps=2.0),
          FailureConfig(burst_times=(25,), burst_sizes=(2,))),
     ]
-    out = run_sweep(graph, scenarios, steps=STEPS, seeds=SEEDS, base_key=5)
+    out = _sweep_stacked(graph, scenarios, base_key=5)
     for i, (pc, fc) in enumerate(scenarios):
-        ref = run_ensemble(graph, pc, fc, steps=STEPS, seeds=SEEDS, base_key=5)
+        ref = _ensemble(graph, pc, fc, base_key=5)
         np.testing.assert_array_equal(np.asarray(out.z[i]), np.asarray(ref.z))
 
 
@@ -126,9 +139,22 @@ def test_stack_rejects_mixed_static_structure():
         stack_configs([(a, fc), (c, fc)])
 
 
+def test_sweep_stacked_rejects_mixed_structures(graph):
+    """Plan.sweep_stacked is the single-structure entry: mixed lists must
+    go through Plan.sweep (which groups them)."""
+    fc = FailureConfig()
+    scenarios = [
+        (_pcfg("decafork", "gather"), fc),
+        (_pcfg("missingperson", "gather"), fc),
+    ]
+    with pytest.raises(ValueError, match="static structures"):
+        _sweep_stacked(graph, scenarios)
+
+
 @pytest.mark.slow
-def test_run_scenarios_mixes_groups(graph):
-    """Mixed algorithms group into per-structure batches, order preserved."""
+def test_sweep_mixes_groups(graph):
+    """Mixed algorithms group into per-structure batches, order preserved
+    — Plan.groups exposes the partition, Plan.sweep runs it."""
     fc = FailureConfig(burst_times=(20,), burst_sizes=(2,))
     scenarios = [
         Scenario("dfk/1.6", _pcfg("decafork", "gather", eps=1.6), fc),
@@ -136,72 +162,82 @@ def test_run_scenarios_mixes_groups(graph):
         Scenario("dfk/2.0", _pcfg("decafork", "gather", eps=2.0), fc),
         Scenario("none", _pcfg("none", "gather"), FailureConfig()),
     ]
-    groups = group_scenarios(scenarios)
-    assert [idxs for _, idxs in groups] == [[0, 2], [1], [3]]
-    res = run_scenarios(graph, scenarios, steps=STEPS, seeds=SEEDS, base_key=3)
+    exp = Experiment(graph=graph, scenarios=scenarios, steps=STEPS)
+    plan = exp.plan()
+    assert [idxs for _, idxs in plan.groups()] == [[0, 2], [1], [3]]
+    assert plan.groups() == group_scenarios(scenarios)
+    res = plan.sweep(seeds=SEEDS, base_key=3)
     assert res.names == ("dfk/1.6", "mp", "dfk/2.0", "none")
     for s, out in zip(scenarios, res.outputs):
-        ref = run_ensemble(graph, s.pcfg, s.fcfg, steps=STEPS, seeds=SEEDS, base_key=3)
+        ref = _ensemble(graph, s.pcfg, s.fcfg, base_key=3)
         _assert_outputs_equal(ref, out, s.name)
     assert res["mp"] is res.outputs[1]
 
 
-def test_sharded_path_single_device(graph):
-    """explicit sharding placement is a correctness no-op on 1 device."""
+def test_placement_policies_agree_on_single_device(graph):
+    """Explicit sharded placement is a correctness no-op on 1 device."""
     fc = FailureConfig(burst_times=(20,), burst_sizes=(2,))
     scenarios = [(_pcfg("decafork", "gather", eps=e), fc) for e in (1.6, 2.0)]
-    a = run_sweep(graph, scenarios, steps=STEPS, seeds=SEEDS, base_key=9, sharded=True)
-    b = run_sweep(graph, scenarios, steps=STEPS, seeds=SEEDS, base_key=9, sharded=False)
+    a = _sweep_stacked(graph, scenarios, base_key=9, placement="sharded")
+    b = _sweep_stacked(graph, scenarios, base_key=9, placement="local")
     np.testing.assert_array_equal(np.asarray(a.z), np.asarray(b.z))
 
 
-def test_sharded_tristate_dispatch(graph, monkeypatch):
-    """The sharded knob is an explicit tri-state: None auto-places
-    (explicit=False), True demands placement (explicit=True), False
-    never touches device placement, and anything else is a TypeError."""
-    import repro.sweep.engine as eng
+def test_placement_dispatch(graph, monkeypatch):
+    """The Plan consults exactly its Placement policy: 'local' never
+    touches device placement, 'auto'/'sharded' go through place()."""
+    import repro.api.placement as plc
 
     calls = []
+    real = plc.Placement.place
 
-    def spy(pcfgs, fcfgs, n_scenarios, *, explicit=False):
-        calls.append(explicit)
-        return pcfgs, fcfgs
+    def spy(self, pcfgs, fcfgs, n_scenarios):
+        calls.append(self.policy)
+        return real(self, pcfgs, fcfgs, n_scenarios)
 
-    monkeypatch.setattr(eng, "maybe_shard_scenarios", spy)
+    monkeypatch.setattr(plc.Placement, "place", spy)
     fc = FailureConfig(burst_times=(20,), burst_sizes=(2,))
     scenarios = [(_pcfg("decafork", "gather", eps=e), fc) for e in (1.6, 2.0)]
 
-    run_sweep(graph, scenarios, steps=5, seeds=1, sharded=False)
-    assert calls == []  # explicit opt-out: placement never consulted
-    run_sweep(graph, scenarios, steps=5, seeds=1, sharded=None)
-    assert calls == [False]  # auto mode
-    run_sweep(graph, scenarios, steps=5, seeds=1, sharded=True)
-    assert calls == [False, True]  # explicit demand
-    with pytest.raises(TypeError, match="sharded"):
-        run_sweep(graph, scenarios, steps=5, seeds=1, sharded="auto")
-    # bool-equal ints must not silently alias into the wrong path
-    for bad in (0, 1):
+    def run(placement):
+        return Experiment(
+            graph=graph, scenarios=scenarios, steps=5, placement=placement,
+        ).plan().sweep_stacked(seeds=1)
+
+    run("local")
+    run(None)  # resolves to auto
+    run(Placement.SHARDED)
+    assert calls == ["local", "auto", "sharded"]
+    with pytest.raises(ValueError, match="placement policy"):
+        Placement("everywhere")
+    with pytest.raises(TypeError, match="placement"):
+        Experiment(graph=graph, scenarios=scenarios, steps=5, placement=7)
+
+
+def test_placement_from_legacy_tristate():
+    """Placement.from_sharded maps the legacy tri-state by identity:
+    bool-equal ints must not silently alias into the wrong policy."""
+    assert Placement.from_sharded(None) is Placement.AUTO
+    assert Placement.from_sharded(True) is Placement.SHARDED
+    assert Placement.from_sharded(False) is Placement.LOCAL
+    for bad in (0, 1, "auto"):
         with pytest.raises(TypeError, match="sharded"):
-            run_sweep(graph, scenarios, steps=5, seeds=1, sharded=bad)
-    assert calls == [False, True]  # nothing leaked through
+            Placement.from_sharded(bad)
 
 
 def test_traced_config_leaves_do_not_recompile(graph):
-    """Numeric knobs are traced: run_ensemble reuses one program across an
-    epsilon grid and across failure rates (the pre-sweep per-curve compile
-    storm is gone)."""
-    fc = FailureConfig(burst_times=(20,), burst_sizes=(2,))
+    """Numeric knobs are traced: one Plan executable serves a whole
+    epsilon x failure-rate grid of ensembles (the pre-sweep per-curve
+    compile storm is gone)."""
     first = None
     for e in (1.5, 1.9, 2.3):
         for pf in (0.0, 0.002):
-            run_ensemble(
+            _ensemble(
                 graph,
                 _pcfg("decafork", "gather", eps=e),
                 FailureConfig(burst_times=(20,), burst_sizes=(2,), p_fail=pf),
-                steps=STEPS,
-                seeds=SEEDS,
             )
             if first is None:
-                first = sim._run_ensemble._cache_size()
+                first = plan_mod.cache_stats()["xla_compiles"]
     # every (eps, p_fail) combination after the first reused its program
-    assert sim._run_ensemble._cache_size() == first
+    assert plan_mod.cache_stats()["xla_compiles"] == first

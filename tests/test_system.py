@@ -12,10 +12,10 @@ import pytest
 
 pytestmark = pytest.mark.slow
 
+from repro.api import Experiment
 from repro.core import (
     FailureConfig,
     ProtocolConfig,
-    run_simulation,
     survived,
     reaction_time,
 )
@@ -42,7 +42,7 @@ def test_fig1_claims_small(graph):
             algorithm=alg, z0=z0, max_walks=48, protocol_start=400,
             rt_bins=256, **kw,
         )
-        _, outs = run_simulation(graph, pcfg, fcfg, steps=2600, key=1)
+        _, outs = Experiment(graph=graph, protocol=pcfg, failures=fcfg, steps=2600).run(key=1)
         runs[alg] = np.asarray(outs.z)
 
     assert runs["none"][-1] <= 1  # two bursts of 4+5 kill at most all 8
@@ -69,7 +69,7 @@ def test_decaforkplus_faster_reaction(graph):
         )
         zs = []
         for seed in range(3):
-            _, outs = run_simulation(graph, pcfg, fcfg, steps=2000, key=seed)
+            _, outs = Experiment(graph=graph, protocol=pcfg, failures=fcfg, steps=2000).run(key=seed)
             zs.append(reaction_time(np.asarray(outs.z), z0, 800))
         rts[alg] = np.median(zs)
     # the aggressive fork threshold (enabled by terminations) reacts faster
@@ -83,7 +83,7 @@ def test_estimator_tracks_population(graph):
         protocol_start=10**9, rt_bins=256,
     )
     fcfg = FailureConfig(burst_times=(1500,), burst_sizes=(5,))
-    _, outs = run_simulation(graph, pcfg, fcfg, steps=3000, key=2)
+    _, outs = Experiment(graph=graph, protocol=pcfg, failures=fcfg, steps=3000).run(key=2)
     theta = np.asarray(outs.theta_mean)
     # steady state before failure: 2*theta ~ 10
     assert abs(2 * theta[1200:1500].mean() - 10) < 1.5
@@ -152,7 +152,7 @@ def test_auto_eps_self_calibration():
             auto_eps=True, protocol_start=800, rt_bins=512,
         )
         fcfg = FailureConfig(burst_times=(1400,), burst_sizes=(4,))
-        _, outs = run_simulation(g, pcfg, fcfg, steps=3000, key=3)
+        _, outs = Experiment(graph=g, protocol=pcfg, failures=fcfg, steps=3000).run(key=3)
         z = np.asarray(outs.z)
         assert survived(z), fam
         assert z[2400:].mean() > 5.0, (fam, z[2400:].mean())

@@ -14,10 +14,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import FailureConfig, ProtocolConfig, run_ensemble, run_simulation
+from repro.api import Experiment
+from repro.core import FailureConfig, ProtocolConfig
 from repro.core import failures as flr
 from repro.core import walkers as wlk
-from repro.core.simulator import run_sweep
 from repro.graphs import (
     GraphState,
     availability,
@@ -83,8 +83,8 @@ def test_disabled_topology_is_bitwise_pr1_ensemble(graph, golden, case):
     name, pcfg, fcfg = _golden_cases()[case]
     # outputs="full": keep the per-walk fork/terminate streams under
     # golden coverage too, not just the default scalar diagnostics
-    outs = run_ensemble(graph, pcfg, fcfg, steps=STEPS, seeds=SEEDS,
-                        base_key=BASE_KEY, outputs="full")
+    outs = Experiment(graph=graph, protocol=pcfg, failures=fcfg, steps=STEPS,
+                      outputs="full").ensemble(SEEDS, base_key=BASE_KEY)
     _assert_matches_golden(outs, golden["ensemble"][name], name)
 
 
@@ -95,8 +95,9 @@ def test_disabled_topology_is_bitwise_pr1_sweep(graph, golden):
         (_pcfg("decafork", eps=2.2),
          FailureConfig(burst_times=(30,), burst_sizes=(1,), p_fail=0.002)),
     ]
-    outs = run_sweep(graph, scenarios, steps=STEPS, seeds=SEEDS,
-                     base_key=BASE_KEY, outputs="full")
+    outs = Experiment(graph=graph, scenarios=scenarios, steps=STEPS,
+                      outputs="full").plan().sweep_stacked(
+        seeds=SEEDS, base_key=BASE_KEY)
     _assert_matches_golden(outs, golden["sweep"]["decafork/eps-grid"], "sweep")
 
 
@@ -111,8 +112,10 @@ def test_explicit_zero_knobs_match_defaults(graph):
         p_link_recover=0.0, pacman_node=-1, node_crash_times=(-1,),
         node_crash_ids=(-1,),
     )
-    a = run_ensemble(graph, pcfg, base, steps=STEPS, seeds=SEEDS, base_key=BASE_KEY)
-    b = run_ensemble(graph, pcfg, zeroed, steps=STEPS, seeds=SEEDS, base_key=BASE_KEY)
+    a = Experiment(graph=graph, protocol=pcfg, failures=base,
+                   steps=STEPS).ensemble(SEEDS, base_key=BASE_KEY)
+    b = Experiment(graph=graph, protocol=pcfg, failures=zeroed,
+                   steps=STEPS).ensemble(SEEDS, base_key=BASE_KEY)
     for name, x, y in zip(a._fields, a, b):
         np.testing.assert_array_equal(
             np.asarray(x), np.asarray(y), err_msg=f"field {name}"
@@ -202,7 +205,7 @@ def test_scheduled_crash_kills_resident_walks(graph):
     pcfg = _pcfg("none")
     # i.i.d. crash with p=1 downs every node at t=0: all walks die at once
     fcfg = FailureConfig(p_node_fail=1.0)
-    _, outs = run_simulation(graph, pcfg, fcfg, steps=5, key=0)
+    _, outs = Experiment(graph=graph, protocol=pcfg, failures=fcfg, steps=5).run(key=0)
     z = np.asarray(outs.z)
     assert (z == 0).all()
     assert int(np.asarray(outs.failures)[0]) == Z0
@@ -215,7 +218,7 @@ def test_scheduled_crash_and_recovery(graph):
     fcfg = FailureConfig(
         node_crash_times=(3,), node_crash_ids=(0,), p_node_recover=1.0
     )
-    final, outs = run_simulation(graph, pcfg, fcfg, steps=10, key=2)
+    final, outs = Experiment(graph=graph, protocol=pcfg, failures=fcfg, steps=10).run(key=2)
     z = np.asarray(outs.z)
     lost = int(np.asarray(outs.failures).sum())
     assert (z[3:] == Z0 - lost).all()  # only the resident kills at t=3
@@ -228,13 +231,13 @@ def test_permanent_link_failures_strand_walks():
     g = ring_graph(8)
     pcfg = ProtocolConfig(algorithm="none", z0=4, max_walks=8)
     fcfg = FailureConfig(p_link_fail=1.0)
-    final, outs = run_simulation(g, pcfg, fcfg, steps=6, key=1)
+    final, outs = Experiment(graph=g, protocol=pcfg, failures=fcfg, steps=6).run(key=1)
     assert (np.asarray(outs.z) == 4).all()
     assert not bool(np.asarray(final.graph.edge_up).any())
     # frozen: every edge is down before the first hop, so positions are
     # identical after 6 and after 12 steps (same key -> same initial spots)
     pos0 = np.asarray(final.walks.pos)
-    final2, outs2 = run_simulation(g, pcfg, fcfg, steps=12, key=1)
+    final2, outs2 = Experiment(graph=g, protocol=pcfg, failures=fcfg, steps=12).run(key=1)
     assert (np.asarray(outs2.z) == 4).all()
     np.testing.assert_array_equal(pos0, np.asarray(final2.walks.pos))
 
@@ -264,7 +267,7 @@ def test_pacman_absorbs_all_walks(graph):
     population — every walk that steps onto it disappears silently."""
     pcfg = _pcfg("none")
     fcfg = FailureConfig(pacman_node=0, pacman_start_time=0)
-    _, outs = run_simulation(graph, pcfg, fcfg, steps=2000, key=3)
+    _, outs = Experiment(graph=graph, protocol=pcfg, failures=fcfg, steps=2000).run(key=3)
     z = np.asarray(outs.z)
     assert z[-1] == 0
     assert (np.diff(z) <= 0).all()  # absorption only, never regrowth
@@ -273,7 +276,7 @@ def test_pacman_absorbs_all_walks(graph):
 def test_pacman_start_time_gates_absorption(graph):
     pcfg = _pcfg("none")
     fcfg = FailureConfig(pacman_node=0, pacman_start_time=50)
-    _, outs = run_simulation(graph, pcfg, fcfg, steps=100, key=3)
+    _, outs = Experiment(graph=graph, protocol=pcfg, failures=fcfg, steps=100).run(key=3)
     z = np.asarray(outs.z)
     assert (z[:49] == Z0).all()  # honest before onset
 
@@ -288,8 +291,8 @@ def test_crashed_byzantine_node_is_harmless(graph):
     both = FailureConfig(byzantine_node=1, p_byz=0.0, byz_start=True,
                          byz_start_time=0,
                          node_crash_times=(0,), node_crash_ids=(1,))
-    _, outs_byz = run_simulation(graph, pcfg, byz_only, steps=400, key=5)
-    _, outs_both = run_simulation(graph, pcfg, both, steps=400, key=5)
+    _, outs_byz = Experiment(graph=graph, protocol=pcfg, failures=byz_only, steps=400).run(key=5)
+    _, outs_both = Experiment(graph=graph, protocol=pcfg, failures=both, steps=400).run(key=5)
     z_byz = np.asarray(outs_byz.z)
     z_both = np.asarray(outs_both.z)
     # byz node alone keeps killing visitors over time
@@ -315,11 +318,13 @@ def test_topology_scenarios_batch_and_match_ensemble(graph):
         (pcfg, FailureConfig(pacman_node=0, pacman_start_time=30)),
         (pcfg, FailureConfig(p_node_fail=0.002, p_node_recover=0.1)),
     ]
-    out = run_sweep(graph, scenarios, steps=STEPS, seeds=SEEDS, base_key=BASE_KEY)
+    out = Experiment(graph=graph, scenarios=scenarios,
+                     steps=STEPS).plan().sweep_stacked(
+        seeds=SEEDS, base_key=BASE_KEY)
     assert out.z.shape == (4, SEEDS, STEPS)
     for i, (pc, fc) in enumerate(scenarios):
-        ref = run_ensemble(graph, pc, fc, steps=STEPS, seeds=SEEDS,
-                           base_key=BASE_KEY)
+        ref = Experiment(graph=graph, protocol=pc, failures=fc,
+                         steps=STEPS).ensemble(SEEDS, base_key=BASE_KEY)
         for name, a, b in zip(ref._fields, ref, out):
             np.testing.assert_array_equal(
                 np.asarray(a), np.asarray(b[i]),
