@@ -1,0 +1,144 @@
+"""BENCH: the experiment service — coalescing callers vs sequential sweeps.
+
+Workload: K callers (6 reduced; 8 with BENCH_FULL=1), each holding its
+own slice of one epsilon grid — identical static structure, same
+seeds/base key, exactly the "many users, compatible studies" regime the
+service exists for.
+
+Arms (identical total work — CALLERS x PER_CALLER scenarios x SEEDS):
+  - ``sequential`` : each caller runs a private ``Plan.sweep`` — one
+                     device dispatch per caller (the pre-service story);
+  - ``service``    : all K submissions coalesce into ONE ``sweep_stacked``
+                     batch through ``ExperimentService`` (asserted:
+                     stats show exactly one compiled batch);
+  - ``store_warm`` : the same batch answered from a warm ResultStore —
+                     no trace, no compile, no execution; disk read +
+                     schema rebuild only. Reported as ms per hit (the
+                     cross-process repeat-study latency).
+
+Both timed arms run fully warm (programs cached; steady = min over
+REPEATS) so the ratio is dispatch overhead, not compile amortization.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import (
+    FULL, burst_failures, default_graph, pcfg_for, save_result,
+)
+from repro.api import Experiment, ExperimentService, ResultStore
+from repro.sweep import Scenario
+
+STEPS = 2000 if FULL else 600
+SEEDS = 8 if FULL else 4
+CALLERS = 8 if FULL else 6
+PER_CALLER = 3
+BASE_KEY = 11
+REPEATS = 3
+
+
+def _caller_scenarios() -> list:
+    fcfg = burst_failures(burst_times=(STEPS // 3, 2 * STEPS // 3))
+    grid = np.linspace(1.7, 2.6, CALLERS * PER_CALLER)
+    return [
+        [
+            Scenario(
+                f"c{c}/eps={e:.3f}",
+                pcfg_for("decafork", eps=float(e), protocol_start=STEPS // 4),
+                fcfg,
+            )
+            for e in grid[c * PER_CALLER : (c + 1) * PER_CALLER]
+        ]
+        for c in range(CALLERS)
+    ]
+
+
+def _block(results) -> None:
+    for res in results:
+        jax.block_until_ready(res.outputs)
+
+
+def run() -> None:
+    callers = _caller_scenarios()
+    all_rows = [r for rows in callers for r in rows]
+    plan = Experiment(
+        graph=default_graph(), steps=STEPS, scenarios=all_rows
+    ).plan()
+
+    def sequential():
+        out = [
+            plan.sweep(rows, seeds=SEEDS, base_key=BASE_KEY)
+            for rows in callers
+        ]
+        _block(out)
+        return out
+
+    def service():
+        with ExperimentService(plan, store=None, autostart=False) as svc:
+            futs = [
+                svc.submit(rows, seeds=SEEDS, base_key=BASE_KEY)
+                for rows in callers
+            ]
+            svc.flush()
+            out = [f.result() for f in futs]
+            _block(out)
+            assert svc.stats["batches"] == 1, svc.stats  # fully coalesced
+        return out
+
+    def timed(fn) -> float:
+        t0 = time.time()
+        fn()
+        return time.time() - t0
+
+    sequential()  # warm the compile cache for both arms
+    service()
+    t_seq = min(timed(sequential) for _ in range(REPEATS))
+    t_svc = min(timed(service) for _ in range(REPEATS))
+
+    # warm-store hit: the repeat-study path (fresh processes see this too)
+    with tempfile.TemporaryDirectory() as d:
+        store = ResultStore(d)
+        plan.sweep_stacked(all_rows, seeds=SEEDS, base_key=BASE_KEY, store=store)
+        t_hit = min(
+            timed(
+                lambda: plan.sweep_stacked(
+                    all_rows, seeds=SEEDS, base_key=BASE_KEY, store=store
+                )
+            )
+            for _ in range(max(REPEATS, 3))
+        )
+        assert store.hits >= 3 and store.misses == 1
+
+    total = STEPS * SEEDS * len(all_rows)
+    speedup = t_seq / t_svc
+    rows = [
+        f"service_coalesced,{t_svc * 1e6 / total:.3f},"
+        f"callers={CALLERS}|batches=1|speedup_vs_sequential={speedup:.2f}x",
+        f"sequential_sweeps,{t_seq * 1e6 / total:.3f},dispatches={CALLERS}",
+        f"store_warm_hit,{t_hit * 1e6 / total:.3f},"
+        f"hit_ms={t_hit * 1e3:.1f}|vs_service={t_svc / max(t_hit, 1e-9):.1f}x",
+    ]
+    for r in rows:
+        print(r)
+    save_result(
+        "bench_service",
+        rows,
+        extra={
+            "callers": CALLERS,
+            "per_caller": PER_CALLER,
+            "steps": STEPS,
+            "seeds": SEEDS,
+            "sequential_s": t_seq,
+            "service_s": t_svc,
+            "store_hit_s": t_hit,
+            "speedup_vs_sequential": speedup,
+        },
+    )
+
+
+if __name__ == "__main__":
+    run()

@@ -19,6 +19,7 @@ import time
 from benchmarks import (
     auto_eps,
     bench_payload,
+    bench_service,
     bench_sweep,
     fig1_burst,
     fig2_probabilistic,
@@ -47,6 +48,7 @@ BENCHES = {
     "sweep": bench_sweep.run,
     "round": bench_sweep.run_round,
     "payload": bench_payload.run,
+    "service": bench_service.run,
 }
 
 
@@ -65,6 +67,7 @@ def smoke() -> None:
         run_sweep / run_scenarios) are bitwise the new Experiment API —
         the deprecation layer must never drift from the real path.
     """
+    import dataclasses
     import warnings
 
     import jax
@@ -183,8 +186,31 @@ def smoke() -> None:
                 np.asarray(x), np.asarray(y),
                 err_msg=f"shim drift: run_scenarios[{name}].{f}",
             )
+
+    # --- service coalescing bitwise tripwire -----------------------------
+    # two callers sharing one static structure coalesce into one batch,
+    # and each caller's rows stay bitwise what a private sweep returns
+    from repro.api import ExperimentService
+
+    s_a = Scenario("svc_a", pcfg, fcfg)
+    s_b = Scenario("svc_b", dataclasses.replace(pcfg, eps=1.9), fcfg)
+    with ExperimentService(plan, store=None, autostart=False) as svc:
+        fa = svc.submit([s_a], seeds=2, base_key=5)
+        fb = svc.submit([s_b], seeds=2, base_key=5)
+        svc.flush()
+        assert svc.stats["batches"] == 1, svc.stats
+        coalesced = {"svc_a": fa.result()["svc_a"], "svc_b": fb.result()["svc_b"]}
+    seq = plan.sweep([s_a, s_b], seeds=2, base_key=5)
+    for name in ("svc_a", "svc_b"):
+        for f, x, y in zip(seq[name]._fields, seq[name], coalesced[name]):
+            np.testing.assert_array_equal(
+                np.asarray(x), np.asarray(y),
+                err_msg=f"service coalescing drift: {name}.{f}",
+            )
+
     print("SMOKE ok: estimator impls agree (round bitwise, trajectories); "
-          "legacy shims bitwise == Experiment API")
+          "legacy shims bitwise == Experiment API; coalesced service == "
+          "sequential sweep bitwise")
 
 
 def main() -> None:

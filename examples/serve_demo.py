@@ -1,18 +1,21 @@
 """Serving demo: prefill a batch of prompts, then batched token decode.
 
-Exercises the inference path the decode_32k / long_500k dry-run shapes
-lower at production scale — here with a smoke model on CPU.
+The decode loop lives in ``repro.launch.serve.generate`` — this demo is
+a thin driver over it (prefill + cache re-homing + EOS-aware decode with
+early exit are the library's job, not the example's). Exercises the
+inference path the decode_32k / long_500k dry-run shapes lower at
+production scale — here with a smoke model on CPU.
 
 Run:  PYTHONPATH=src python examples/serve_demo.py [--arch yi_6b]
 """
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_smoke_config
+from repro.launch.serve import generate
 from repro.models.model import Model
 
 
@@ -22,6 +25,9 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--eos-id", type=int, default=None,
+                    help="enable EOS tracking + early exit")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
@@ -41,55 +47,25 @@ def main():
             key, (B, P, cfg.num_codebooks), 0, cfg.vocab_size, dtype=jnp.int32
         )
 
-    # --- prefill ---------------------------------------------------------
-    prefill = jax.jit(model.prefill)
-    t0 = time.time()
-    last_logits, cache = prefill(params, batch)
-    jax.block_until_ready(last_logits)
-    t_prefill = time.time() - t0
-    print(f"arch={cfg.name}: prefill {B}x{P} tokens in {t_prefill*1e3:.1f} ms "
-          f"(incl. compile)")
-
-    # extend the ring so decode has room beyond the prompt
-    decode_cache = model.init_cache(B, P + args.new_tokens)
-    # copy prefilled keys/values/state into the larger cache
-    def blit(dst, src):
-        if dst.ndim >= 3 and dst.shape[:2] == src.shape[:2] and dst.ndim == src.ndim:
-            sl = tuple([slice(None), slice(None), slice(0, src.shape[2])])
-            return dst.at[sl].set(src) if dst.shape[2] >= src.shape[2] else dst
-        return src if dst.shape == src.shape else dst
-    decode_cache["layers"] = jax.tree.map(blit, decode_cache["layers"], cache["layers"])
-    if "cache_positions" in cache:
-        decode_cache["cache_positions"] = (
-            decode_cache["cache_positions"].at[:, :P].set(cache["cache_positions"])
-        )
-    decode_cache["next_pos"] = cache["next_pos"]
-
-    # --- decode loop -------------------------------------------------------
-    decode = jax.jit(model.decode_step)
-    tok = (
-        jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
-        if not cfg.num_codebooks
-        else jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
+    gen, stats = generate(
+        model,
+        params,
+        batch,
+        max_new_tokens=args.new_tokens,
+        temperature=args.temperature,
+        eos_id=args.eos_id,
+        key=jax.random.fold_in(key, 2),
     )
-    if cfg.num_codebooks:
-        tok = tok.reshape(B, 1, cfg.num_codebooks)
-    else:
-        tok = tok.reshape(B, 1)
-    generated = [np.asarray(tok)]
-    t0 = time.time()
-    for i in range(args.new_tokens - 1):
-        logits, decode_cache = decode(params, decode_cache, {"tokens": tok})
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        tok = tok.reshape(B, 1, cfg.num_codebooks) if cfg.num_codebooks else tok.reshape(B, 1)
-        generated.append(np.asarray(tok))
-    jax.block_until_ready(tok)
-    dt = time.time() - t0
-    tps = B * (args.new_tokens - 1) / dt
-    print(f"decoded {args.new_tokens-1} tokens x {B} streams in {dt*1e3:.0f} ms "
-          f"-> {tps:.0f} tok/s (CPU, incl. compile)")
-    out = np.concatenate(generated, axis=1)
-    print("sample token ids (stream 0):", out[0].reshape(-1)[:16].tolist())
+    print(
+        f"arch={cfg.name}: prefill {B}x{P} tokens in "
+        f"{stats['prefill_s']*1e3:.1f} ms (incl. compile)"
+    )
+    print(
+        f"decoded {stats['decode_steps']} steps x {B} streams in "
+        f"{stats['decode_s']*1e3:.0f} ms -> {stats['tokens_per_s']:.0f} tok/s "
+        "(CPU, incl. compile)"
+    )
+    print("sample token ids (stream 0):", np.asarray(gen[0]).reshape(-1)[:16].tolist())
 
 
 if __name__ == "__main__":

@@ -19,17 +19,32 @@ owns static-signature grouping, the process-wide compile cache
 (``repro.api.plan.cache_stats``) and the :class:`Placement` decision —
 for callers that want to introspect grouping or amortize many calls over
 one plan explicitly.
+
+Serving many studies rides the same Plan: an
+:class:`ExperimentService` coalesces concurrent submissions into one
+compiled call per compatible group (futures stream per-group results),
+a :class:`ResultStore` persists sweep results on disk keyed by stable
+content hash (``store='env'`` honors ``$REPRO_RESULT_STORE``), and the
+:mod:`~repro.api.registry` names config-dict-driven experiments
+(``Experiment.from_config``).
 """
+from repro.api import registry
 from repro.api.experiment import Experiment
 from repro.api.placement import Placement
 from repro.api.plan import Plan, cache_stats, plan_signature
 from repro.api.results import SweepResult
+from repro.api.service import ExperimentService, SubmissionFuture
+from repro.api.store import ResultStore
 
 __all__ = [
     "Experiment",
+    "ExperimentService",
     "Placement",
     "Plan",
+    "ResultStore",
+    "SubmissionFuture",
     "SweepResult",
     "cache_stats",
     "plan_signature",
+    "registry",
 ]

@@ -98,6 +98,28 @@ class Experiment:
         object.__setattr__(self, "_spec", spec)
         object.__setattr__(self, "_pspec", pspec)
 
+    # -- construction ------------------------------------------------------
+
+    @classmethod
+    def from_config(cls, config) -> "Experiment":
+        """Build a registered experiment from a plain config mapping.
+
+        ``config["experiment"]`` names a builder in
+        :mod:`repro.api.registry`; every other key passes through as a
+        keyword override. This is how config-driven callers (the
+        ExperimentService, CLIs) reproduce a study by name.
+        """
+        from repro.api import registry
+
+        cfg = dict(config)
+        name = cfg.pop("experiment", None)
+        if not name:
+            raise ValueError(
+                "config needs an 'experiment' key naming a registered "
+                f"experiment; registered: {list(registry.names())}"
+            )
+        return registry.build(name, **cfg)
+
     # -- lowering ----------------------------------------------------------
 
     def plan(self) -> Plan:
@@ -121,10 +143,13 @@ class Experiment:
         *,
         seeds: int,
         base_key: jax.Array | int = 0,
+        store=None,
     ) -> SweepResult:
         """Mixed scenario list, one compile per static group; see
-        :meth:`Plan.sweep`."""
-        return self.plan().sweep(scenarios, seeds=seeds, base_key=base_key)
+        :meth:`Plan.sweep` (``store=`` enables disk-backed persistence)."""
+        return self.plan().sweep(
+            scenarios, seeds=seeds, base_key=base_key, store=store
+        )
 
     def __repr__(self):
         label = f" {self.name!r}" if self.name else ""

@@ -58,6 +58,23 @@ _EXECUTABLES: dict = {}
 _JITTED: dict = {}
 
 
+def payload_key(payload):
+    """The signature component identifying a payload's static program.
+
+    A payload declaring a stable :meth:`~repro.core.payload.Payload.signature`
+    contributes a value tuple — two structurally identical payload
+    instances then share one cache slot (and, since ``Payload.__eq__``
+    follows the same key, one compiled XLA program), and the tuple is
+    serializable for cross-process result-store keys. A signature-less
+    payload contributes the object itself (identity hashing, the
+    pre-signature behavior).
+    """
+    if payload is None:
+        return None
+    key = getattr(payload, "_signature_key", lambda: None)()
+    return payload if key is None else ("payload",) + key
+
+
 def plan_signature(
     mode: str,
     n: int,
@@ -75,10 +92,12 @@ def plan_signature(
     shape comes from the protocol's static fields (algorithm /
     estimator_impl / max_walks / rt_bins / ...), the pytree structure of
     ``fork_prob`` (None vs value), the padded failure-schedule lengths,
-    the payload object (static under jit, hashed by identity), the output
-    specs and the graph/trajectory dimensions. Traced numeric leaves
-    (eps grids, rates, schedules, topology knobs) deliberately do NOT
-    appear — they batch and re-run without recompiling.
+    the payload's :func:`payload_key` (a stable config tuple when the
+    payload declares ``signature()``, the identity-hashed object
+    otherwise), the output specs and the graph/trajectory dimensions.
+    Traced numeric leaves (eps grids, rates, schedules, topology knobs)
+    deliberately do NOT appear — they batch and re-run without
+    recompiling.
     """
     return (
         mode,
@@ -88,7 +107,7 @@ def plan_signature(
         pcfg.static_fields,
         pcfg.fork_prob is None,
         tuple(schedule_lens),
-        payload,
+        payload_key(payload),
         spec,
         pspec,
     )
@@ -261,6 +280,7 @@ class Plan:
         *,
         seeds: int,
         base_key: jax.Array | int = 0,
+        store=None,
     ):
         """One static-structure scenario stack x seeds in ONE compiled
         call; outputs carry leading ``(S, seeds)`` axes.
@@ -270,11 +290,17 @@ class Plan:
         to ``ensemble`` on scenario ``i``. Scenarios must share one
         static signature (mixed lists: use :meth:`sweep`); the Plan's
         ``Placement`` decides scenario-axis device placement here.
+
+        ``store=`` (None | ``'env'`` | path | ``ResultStore``) enables
+        disk-backed result persistence: a store-warm call returns the
+        cached pytree without tracing, compiling or executing anything —
+        the content key covers the plan signature, the graph, every
+        stacked scenario leaf, ``seeds`` and the base key material.
         """
         from repro.sweep.scenario import as_pair, stack_configs
 
         scenarios = self._scenarios(scenarios, "sweep_stacked")
-        keys = jax.random.split(_as_key(base_key), seeds)
+        base = _as_key(base_key)
         pcfgs, fcfgs = stack_configs(scenarios)
         pcfg0 = as_pair(scenarios[0])[0]
         if self.payload is not None:
@@ -284,14 +310,35 @@ class Plan:
             int(jnp.shape(fcfgs.burst_times)[-1]),
             int(jnp.shape(fcfgs.node_crash_times)[-1]),
         )
-        pcfgs, fcfgs = self.placement.place(pcfgs, fcfgs, len(scenarios))
         sig = self._signature("sweep", pcfg0, lens)
-        return executable("sweep", sig)(
+
+        from repro.api.store import ResultStore
+
+        store = ResultStore.resolve(store)
+        skey = None
+        if store is not None:
+            # key on the pre-placement stacked leaves: device placement
+            # never changes the answer, so it must not change the key
+            skey = store.sweep_key(sig, self.graph, (pcfgs, fcfgs), seeds, base)
+            cached = store.get(skey)
+            if cached is not None:
+                return cached
+
+        keys = jax.random.split(base, seeds)
+        pcfgs, fcfgs = self.placement.place(pcfgs, fcfgs, len(scenarios))
+        result = executable("sweep", sig)(
             keys, self.neighbors, self.degrees, self.mirror,
             self._pi(pcfg0), pcfgs, fcfgs,
             steps=self.steps, n=self.n, payload=self.payload,
             spec=self.spec, pspec=self.pspec,
         )
+        if store is not None:
+            store.put(
+                skey,
+                jax.block_until_ready(result),
+                extra_meta={"scenarios": len(scenarios), "seeds": int(seeds)},
+            )
+        return result
 
     def sweep(
         self,
@@ -299,6 +346,7 @@ class Plan:
         *,
         seeds: int,
         base_key: jax.Array | int = 0,
+        store=None,
     ) -> SweepResult:
         """Run a mixed scenario list: grouped by static signature, ONE
         compiled call per group, per-scenario results in input order.
@@ -307,7 +355,8 @@ class Plan:
         ``ensemble`` would produce for it under the same ``base_key``;
         adding a new regime (failure schedule, topology churn, Pac-Man
         node, eps grid row) is appending a scenario row, not a new
-        compilation unit.
+        compilation unit. ``store=`` persists each group's stacked call
+        (see :meth:`sweep_stacked`).
         """
         scenarios = self._scenarios(scenarios, "sweep")
         names = tuple(
@@ -317,7 +366,8 @@ class Plan:
         payloads = [None] * len(scenarios) if self.payload is not None else None
         for _sig, idxs in self.groups(scenarios):
             stacked = self.sweep_stacked(
-                [scenarios[i] for i in idxs], seeds=seeds, base_key=base_key
+                [scenarios[i] for i in idxs], seeds=seeds, base_key=base_key,
+                store=store,
             )
             if self.payload is not None:
                 stacked, stacked_payload = stacked

@@ -1,0 +1,150 @@
+"""Named-experiment registry: config-dict-driven studies, by name.
+
+A *registered experiment* is a builder function that turns plain keyword
+arguments (the kind that live in a JSON/YAML config or an HTTP request)
+into an :class:`~repro.api.Experiment`. Registration gives a study a
+stable name, which is what makes it reproducible from outside the
+process:
+
+    from repro.api import registry, Experiment
+
+    @registry.register("fig4-eps-grid")
+    def _fig4(n=100, steps=4500, **kw):
+        ...
+        return Experiment(...)
+
+    exp = Experiment.from_config({"experiment": "fig4-eps-grid", "n": 100})
+
+``Experiment.from_config`` is the single entry point config-driven
+callers (the :class:`~repro.api.service.ExperimentService`, CLIs,
+notebooks) use: the ``"experiment"`` key selects the builder, every other
+key is passed through as a keyword override.
+
+The built-in ``"walks"`` builder covers the common case — a generated
+graph + ``ProtocolConfig``/``FailureConfig`` field dicts + optional named
+scenario rows — so simple studies need no custom builder at all.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+__all__ = ["register", "get", "names", "build"]
+
+_REGISTRY: Dict[str, Callable] = {}
+
+
+def register(name: str, builder: Callable | None = None):
+    """Register ``builder`` under ``name``; usable as a decorator.
+
+    Re-registering a name overwrites it (last definition wins, so
+    notebooks can iterate on a builder without restarting).
+    """
+
+    def _register(fn: Callable):
+        if not callable(fn):
+            raise TypeError(f"experiment builder for {name!r} must be callable")
+        _REGISTRY[str(name)] = fn
+        return fn
+
+    return _register(builder) if builder is not None else _register
+
+
+def get(name: str) -> Callable:
+    """The builder registered under ``name``; KeyError lists what exists."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown experiment {name!r}; registered experiments: "
+            f"{sorted(_REGISTRY)}"
+        ) from None
+
+
+def names() -> tuple:
+    """Registered experiment names, sorted."""
+    return tuple(sorted(_REGISTRY))
+
+
+def build(name: str, /, **overrides):
+    """Build the named experiment with keyword overrides applied."""
+    exp = get(name)(**overrides)
+    from repro.api.experiment import Experiment
+
+    if not isinstance(exp, Experiment):
+        raise TypeError(
+            f"experiment builder {name!r} returned {type(exp).__name__}, "
+            "expected an Experiment"
+        )
+    return exp
+
+
+# ---------------------------------------------------------------------------
+# built-in: the generic config-driven study
+# ---------------------------------------------------------------------------
+
+
+def _scenario_rows(scenarios):
+    from repro.core.failures import FailureConfig
+    from repro.core.protocol import ProtocolConfig
+    from repro.sweep.scenario import Scenario
+
+    rows = []
+    for i, row in enumerate(scenarios):
+        row = dict(row)
+        rows.append(
+            Scenario(
+                name=str(row.pop("name", f"scenario{i}")),
+                pcfg=ProtocolConfig(**row.pop("protocol", {})),
+                fcfg=FailureConfig(**row.pop("failures", {})),
+            )
+        )
+        if row:
+            raise TypeError(
+                f"scenario row {i} has unknown keys {sorted(row)}; expected "
+                "name/protocol/failures"
+            )
+    return rows
+
+
+@register("walks")
+def _walks(
+    *,
+    graph: str = "regular",
+    n: int = 64,
+    graph_seed: int = 0,
+    graph_kwargs: dict | None = None,
+    steps: int = 500,
+    protocol: dict | None = None,
+    failures: dict | None = None,
+    scenarios=None,
+    outputs="scalars",
+    placement="auto",
+    name: str | None = None,
+):
+    """The generic study: a generated graph running the self-regulation
+    protocol. ``protocol=``/``failures=`` are ``ProtocolConfig`` /
+    ``FailureConfig`` field dicts; ``scenarios=`` rows are dicts of
+    ``{"name", "protocol", "failures"}``."""
+    from repro.api.experiment import Experiment
+    from repro.core.failures import FailureConfig
+    from repro.core.protocol import ProtocolConfig
+    from repro.graphs.generators import make_graph
+
+    g = make_graph(graph, int(n), int(graph_seed), **(graph_kwargs or {}))
+    pcfg = None
+    fcfg = None
+    if protocol is not None or not scenarios:
+        pcfg = ProtocolConfig(**(protocol or {}))
+        fcfg = FailureConfig(**(failures or {}))
+    elif failures is not None:
+        raise TypeError("failures= given without protocol=")
+    return Experiment(
+        graph=g,
+        protocol=pcfg,
+        failures=fcfg,
+        steps=int(steps),
+        scenarios=_scenario_rows(scenarios) if scenarios else None,
+        outputs=outputs,
+        placement=placement,
+        name=name,
+    )

@@ -18,15 +18,40 @@ class SweepResult:
     sweep carried a payload, ``payloads`` is the parallel list of
     per-scenario payload outputs (``payload(name_or_index)`` to look one
     up); otherwise it is ``None``.
+
+    Name lookups are mapping-like: an unknown name raises ``KeyError``
+    listing the available names (never the bare ``ValueError`` of
+    ``tuple.index``), and duplicate scenario names are rejected at
+    construction — a silently first-match duplicate lookup is a wrong
+    answer waiting to happen.
     """
 
     def __init__(self, names: tuple, outputs: list, payloads: list | None = None):
         self.names = tuple(names)
+        dupes = sorted({n for n in self.names if self.names.count(n) > 1})
+        if dupes:
+            raise ValueError(
+                f"duplicate scenario name(s) {dupes!r}: every scenario in a "
+                "sweep needs a unique name, or name lookups would silently "
+                "resolve to the first match"
+            )
         self.outputs = list(outputs)
+        if len(self.outputs) != len(self.names):
+            raise ValueError(
+                f"{len(self.names)} names but {len(self.outputs)} outputs"
+            )
         self.payloads = list(payloads) if payloads is not None else None
 
     def _index(self, i) -> int:
-        return self.names.index(i) if isinstance(i, str) else i
+        if isinstance(i, str):
+            try:
+                return self.names.index(i)
+            except ValueError:
+                raise KeyError(
+                    f"unknown scenario name {i!r}; available scenarios: "
+                    f"{list(self.names)}"
+                ) from None
+        return i
 
     def __getitem__(self, i):
         return self.outputs[self._index(i)]
@@ -34,7 +59,10 @@ class SweepResult:
     def payload(self, i):
         """Per-scenario payload outputs by position or scenario name."""
         if self.payloads is None:
-            raise KeyError("sweep ran without a payload")
+            raise KeyError(
+                "this sweep ran without a payload, so there are no payload "
+                "outputs; attach payload= to the Experiment to record them"
+            )
         return self.payloads[self._index(i)]
 
     def __len__(self):

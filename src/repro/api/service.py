@@ -1,0 +1,380 @@
+"""The experiment service: coalescing submissions from many callers.
+
+One process serving many studies wastes most of its time running
+*compatible* work separately: two callers sweeping the same static
+program structure (same algorithm / capacity / histogram resolution /
+seeds / base key) each pay a full ``sweep_stacked`` dispatch even though
+the compiled program could run both scenario lists as extra rows of ONE
+stacked call. :class:`ExperimentService` closes that gap:
+
+  * callers :meth:`~ExperimentService.submit` scenario lists and get a
+    :class:`SubmissionFuture` back immediately;
+  * pending requests are grouped by **coalescing key** —
+    ``(group_key(scenario), seeds, base-key material)``, the same
+    static-signature grouping ``Plan.sweep`` uses plus the batching
+    axes — and each group executes as exactly one
+    ``Plan.sweep_stacked`` call, however many callers contributed rows;
+  * results stream back per group: a future over a mixed submission
+    yields each scenario's outputs as soon as *its* group finishes
+    (:meth:`SubmissionFuture.stream`), not when the whole sweep does;
+  * every group call goes through the disk-backed
+    :class:`~repro.api.store.ResultStore` (default: the directory named
+    by ``$REPRO_RESULT_STORE``, if set), so repeated studies are free
+    across processes too.
+
+Coalescing is bitwise-invisible to callers: ``sweep_stacked`` gives every
+scenario row the same per-seed keys ``ensemble`` would derive from
+``base_key`` (the PR-1 invariant), so a scenario's results do not depend
+on which strangers shared its batch. The coalescing key pins ``seeds``
+and the base key precisely so that invariant applies.
+
+Two execution modes: the default background worker thread (submissions
+coalesce across a short ``linger`` window), or ``autostart=False`` +
+explicit :meth:`~ExperimentService.flush` for deterministic batching —
+everything submitted since the last flush coalesces maximally (this is
+what the tests and benchmarks use).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Sequence
+
+import jax
+import numpy as np
+
+from repro.api.results import SweepResult
+from repro.api.store import ResultStore
+
+__all__ = ["ExperimentService", "SubmissionFuture"]
+
+
+def _key_token(base_key) -> tuple:
+    """Hashable coalescing token for a base PRNG key: equal keys — int
+    seeds or key arrays — coalesce, distinct ones never do."""
+    if isinstance(base_key, int):
+        base_key = jax.random.key(base_key)
+    return ("key", np.asarray(jax.random.key_data(base_key)).tobytes())
+
+
+class SubmissionFuture:
+    """One caller's pending sweep: resolves to a :class:`SweepResult`.
+
+    Scenario outputs land per coalesced group — :meth:`stream` yields
+    ``(name, outputs, payload_outputs)`` in completion order as each
+    group's compiled call finishes; :meth:`result` blocks for the full
+    :class:`SweepResult` (input order, exactly what ``Plan.sweep``
+    returns). A failure in any group the submission touched raises from
+    both.
+    """
+
+    def __init__(self, service, names: tuple, has_payload: bool):
+        self._service = service
+        self.names = names
+        self._outputs = [None] * len(names)
+        self._payloads = [None] * len(names) if has_payload else None
+        self._cv = threading.Condition()
+        self._completed: list = []  # indices, completion order
+        self._remaining = len(names)
+        self._error: BaseException | None = None
+
+    # -- delivery (service side) ------------------------------------------
+
+    def _deliver(self, index: int, outputs, payload_outputs) -> None:
+        with self._cv:
+            self._outputs[index] = outputs
+            if self._payloads is not None:
+                self._payloads[index] = payload_outputs
+            self._completed.append(index)
+            self._remaining -= 1
+            self._cv.notify_all()
+
+    def _fail(self, exc: BaseException) -> None:
+        with self._cv:
+            if self._error is None:
+                self._error = exc
+            self._remaining = 0
+            self._cv.notify_all()
+
+    # -- consumption (caller side) ----------------------------------------
+
+    def done(self) -> bool:
+        """True once every scenario resolved (or the submission failed)."""
+        with self._cv:
+            return self._remaining == 0
+
+    def result(self, timeout: float | None = None) -> SweepResult:
+        """Block for the full :class:`SweepResult` (scenarios in
+        submission order); raises the group's error on failure."""
+        self._service._ensure_progress()
+        with self._cv:
+            if not self._cv.wait_for(lambda: self._remaining == 0, timeout):
+                raise TimeoutError(
+                    f"submission incomplete after {timeout}s "
+                    f"({len(self._completed)}/{len(self.names)} scenarios)"
+                )
+            if self._error is not None:
+                raise self._error
+            return SweepResult(
+                names=self.names,
+                outputs=list(self._outputs),
+                payloads=(
+                    None if self._payloads is None else list(self._payloads)
+                ),
+            )
+
+    def stream(self, timeout: float | None = None):
+        """Yield ``(name, outputs, payload_outputs)`` per scenario in
+        completion order, as coalesced groups finish (payload slot is
+        None for payload-free plans). ``timeout`` bounds each wait."""
+        self._service._ensure_progress()
+        served = 0
+        while True:
+            with self._cv:
+                if not self._cv.wait_for(
+                    lambda: served < len(self._completed)
+                    or self._remaining == 0,
+                    timeout,
+                ):
+                    raise TimeoutError(
+                        f"no scenario completed within {timeout}s"
+                    )
+                if self._error is not None:
+                    raise self._error
+                batch = self._completed[served:]
+                served += len(batch)
+                drained = self._remaining == 0 and served == len(
+                    self._completed
+                )
+            for i in batch:
+                yield (
+                    self.names[i],
+                    self._outputs[i],
+                    None if self._payloads is None else self._payloads[i],
+                )
+            if drained:
+                return
+
+
+class _Request:
+    """One scenario row of one submission, tagged for delivery."""
+
+    __slots__ = ("future", "index", "scenario", "seeds", "base_key", "key")
+
+    def __init__(self, future, index, scenario, seeds, base_key, key):
+        self.future = future
+        self.index = index
+        self.scenario = scenario
+        self.seeds = seeds
+        self.base_key = base_key
+        self.key = key  # the coalescing key
+
+
+class ExperimentService:
+    """Coalescing submission queue over one compiled Plan (see module
+    docstring).
+
+    Parameters:
+      experiment  the :class:`Experiment` (or pre-lowered ``Plan``) every
+                  submission runs against;
+      store       result persistence: ``'env'`` (default — honor
+                  ``$REPRO_RESULT_STORE`` when set), None (off), a
+                  directory path, or a :class:`ResultStore`;
+      autostart   start the background worker thread (False: batches run
+                  only on explicit :meth:`flush` — deterministic, used by
+                  tests/benchmarks);
+      linger      seconds the worker waits after a wake-up before
+                  draining, so concurrent submitters land in one batch.
+
+    ``stats`` counts traffic: ``submissions`` / ``scenarios`` in,
+    ``batches`` compiled calls out, ``coalesced`` scenarios that rode a
+    batch with >1 submission contributing.
+    """
+
+    def __init__(
+        self,
+        experiment,
+        *,
+        store="env",
+        autostart: bool = True,
+        linger: float = 0.002,
+    ):
+        from repro.api.plan import Plan
+
+        self.plan = (
+            experiment if isinstance(experiment, Plan) else experiment.plan()
+        )
+        self.store = ResultStore.resolve(store)
+        self.linger = float(linger)
+        self.stats = {
+            "submissions": 0,
+            "scenarios": 0,
+            "batches": 0,
+            "coalesced": 0,
+        }
+        self._lock = threading.Lock()
+        self._wake = threading.Condition(self._lock)
+        self._queue: list = []
+        self._inflight = 0
+        self._closed = False
+        self._worker = None
+        if autostart:
+            self._worker = threading.Thread(
+                target=self._worker_loop,
+                name="ExperimentService",
+                daemon=True,
+            )
+            self._worker.start()
+
+    # -- submission --------------------------------------------------------
+
+    def submit(
+        self,
+        scenarios: Sequence,
+        *,
+        seeds: int,
+        base_key=0,
+    ) -> SubmissionFuture:
+        """Enqueue a scenario list; returns immediately with a
+        :class:`SubmissionFuture`. Scenarios coalesce with every pending
+        request sharing ``(static structure, seeds, base_key)``."""
+        from repro.sweep.scenario import group_key
+
+        scenarios = list(scenarios)
+        if not scenarios:
+            raise ValueError("submit() needs at least one scenario")
+        names = tuple(
+            getattr(s, "name", f"scenario{i}") for i, s in enumerate(scenarios)
+        )
+        dupes = sorted({n for n in names if names.count(n) > 1})
+        if dupes:
+            raise ValueError(f"duplicate scenario names in submission: {dupes}")
+        seeds = int(seeds)
+        ktok = _key_token(base_key)
+        future = SubmissionFuture(
+            self, names, has_payload=self.plan.payload is not None
+        )
+        reqs = [
+            _Request(
+                future, i, s, seeds, base_key, (group_key(s), seeds, ktok)
+            )
+            for i, s in enumerate(scenarios)
+        ]
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("ExperimentService is closed")
+            self._queue.extend(reqs)
+            self.stats["submissions"] += 1
+            self.stats["scenarios"] += len(reqs)
+            self._wake.notify_all()
+        return future
+
+    def run(self, scenarios: Sequence, *, seeds: int, base_key=0) -> SweepResult:
+        """Submit and block for the result (one-caller convenience)."""
+        return self.submit(scenarios, seeds=seeds, base_key=base_key).result()
+
+    # -- execution ---------------------------------------------------------
+
+    def flush(self, timeout: float | None = None) -> None:
+        """Run everything pending and block until the queue is empty and
+        no batch is in flight. With ``autostart=False`` this is the only
+        execution path, so every submission since the last flush
+        coalesces maximally."""
+        if self._worker is None:
+            self._drain()
+        with self._lock:
+            if not self._wake.wait_for(
+                lambda: not self._queue and self._inflight == 0, timeout
+            ):
+                raise TimeoutError(f"queue not drained within {timeout}s")
+
+    def close(self, timeout: float | None = None) -> None:
+        """Drain pending work, then stop the worker. Idempotent; further
+        ``submit`` calls raise."""
+        with self._lock:
+            self._closed = True
+            self._wake.notify_all()
+        if self._worker is not None:
+            self._worker.join(timeout)
+            self._worker = None
+        self._drain()  # autostart=False (or a dead worker): drain inline
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+    def _ensure_progress(self) -> None:
+        """Guard futures against deadlock: blocking on a result while no
+        worker exists runs the pending batch inline."""
+        if self._worker is None:
+            self._drain()
+
+    def _worker_loop(self) -> None:
+        while True:
+            with self._lock:
+                self._wake.wait_for(lambda: self._queue or self._closed)
+                if self._closed and not self._queue:
+                    return
+            if self.linger:
+                time.sleep(self.linger)  # let concurrent submitters land
+            self._drain()
+
+    def _drain(self) -> None:
+        """Pop the whole queue, group by coalescing key, run each group
+        as ONE ``sweep_stacked`` call, deliver rows to their futures."""
+        with self._lock:
+            batch, self._queue = self._queue, []
+            self._inflight += 1
+        try:
+            groups: dict = {}
+            order = []
+            for req in batch:
+                if req.key not in groups:
+                    groups[req.key] = []
+                    order.append(req.key)
+                groups[req.key].append(req)
+            for key in order:
+                self._run_group(groups[key])
+        finally:
+            with self._lock:
+                self._inflight -= 1
+                self._wake.notify_all()
+
+    def _run_group(self, reqs: list) -> None:
+        has_payload = self.plan.payload is not None
+        try:
+            stacked = self.plan.sweep_stacked(
+                [r.scenario for r in reqs],
+                seeds=reqs[0].seeds,
+                base_key=reqs[0].base_key,
+                store=self.store,
+            )
+            stacked_payload = None
+            if has_payload:
+                stacked, stacked_payload = stacked
+            self.stats["batches"] += 1
+            if len({id(r.future) for r in reqs}) > 1:
+                self.stats["coalesced"] += len(reqs)
+        except BaseException as exc:  # deliver, don't kill the worker
+            for fut in {id(r.future): r.future for r in reqs}.values():
+                fut._fail(exc)
+            return
+        for j, req in enumerate(reqs):
+            outputs = jax.tree_util.tree_map(lambda x: x[j], stacked)
+            payload_out = (
+                jax.tree_util.tree_map(lambda x: x[j], stacked_payload)
+                if has_payload
+                else None
+            )
+            req.future._deliver(req.index, outputs, payload_out)
+
+    def __repr__(self):
+        s = self.stats
+        return (
+            f"ExperimentService({self.plan!r}, store={self.store!r}, "
+            f"submissions={s['submissions']}, scenarios={s['scenarios']}, "
+            f"batches={s['batches']})"
+        )

@@ -1,0 +1,292 @@
+"""Disk-backed result persistence for compiled Plans.
+
+The compile cache (``repro.api.plan``) makes repeated studies free
+*within* one process; this module makes them free *across* processes: a
+:class:`ResultStore` caches the results of ``Plan.sweep_stacked`` calls
+on disk, keyed by a **stable content hash** of everything that determines
+the answer —
+
+    (plan signature, graph adjacency, stacked scenario config leaves,
+     seeds, base key)
+
+— so a store-warm re-run in a fresh process returns bitwise-identical
+pytrees without compiling (or executing) a single XLA program. Keys
+require every signature component to be *stable* (primitives, tuples,
+dataclasses of primitives): payload-carrying sweeps are storable exactly
+when the payload declares :meth:`~repro.core.payload.Payload.signature`.
+
+Serialization rides the ``repro.checkpoint`` machinery (npz + atomic
+temp-file + ``os.replace`` writes, so a crash mid-write never corrupts a
+previously stored result); the pytree *structure* — ``RecordedOutputs``
+fields, payload namedtuples, nesting — is recorded as a JSON schema in
+the sidecar ``.meta.json`` and rebuilt on load, leaf dtypes restored
+exactly.
+
+Point a store at a directory explicitly (``ResultStore(path)``), or set
+the ``REPRO_RESULT_STORE`` environment variable and let
+``ResultStore.from_env()`` / the :class:`~repro.api.service.ExperimentService`
+default pick it up. Unreadable or half-missing entries are treated as
+misses, never as errors.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import importlib
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.checkpoint import load_pytree, save_pytree
+from repro.core.outputs import RecordedOutputs
+
+__all__ = ["ResultStore", "UnstableSignatureError", "canonical_token"]
+
+ENV_VAR = "REPRO_RESULT_STORE"
+
+_SCHEMA_VERSION = 1
+
+
+class UnstableSignatureError(ValueError):
+    """A plan-signature component has no stable cross-process encoding
+    (typically a payload without :meth:`Payload.signature`)."""
+
+
+# ---------------------------------------------------------------------------
+# stable tokens: signature tuples -> canonical strings
+# ---------------------------------------------------------------------------
+
+
+def canonical_token(obj: Any) -> str:
+    """Canonical string for a static-signature component.
+
+    Accepts the primitives/tuples/dataclasses a :func:`plan_signature` is
+    built from; anything else (an identity-hashed payload object, a
+    callable) raises :class:`UnstableSignatureError` — the store must
+    never key results on ``id()``.
+    """
+    if obj is None or isinstance(obj, (bool, int, float, str)):
+        return repr(obj)
+    if isinstance(obj, (tuple, list)):
+        inner = ",".join(canonical_token(x) for x in obj)
+        return f"({inner})"
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        fields = ",".join(
+            f"{f.name}={canonical_token(getattr(obj, f.name))}"
+            for f in dataclasses.fields(obj)
+        )
+        return f"{type(obj).__qualname__}({fields})"
+    raise UnstableSignatureError(
+        f"signature component {obj!r} has no stable cross-process encoding; "
+        "results carrying it cannot be persisted. For payloads, implement "
+        "Payload.signature() (a stable static-config tuple) to enable the "
+        "result store."
+    )
+
+
+def _hash_leaves(h, tree) -> None:
+    """Fold a pytree's numeric leaves (dtype, shape, bytes) into a hash."""
+    for leaf in jax.tree_util.tree_leaves(tree):
+        a = np.ascontiguousarray(np.asarray(leaf))
+        h.update(str(a.dtype).encode())
+        h.update(str(a.shape).encode())
+        h.update(a.tobytes())
+
+
+# ---------------------------------------------------------------------------
+# structure schema: describe / rebuild result pytrees
+# ---------------------------------------------------------------------------
+
+
+def _describe(obj: Any, leaves: list) -> dict:
+    """Flatten ``obj`` into ``leaves`` and return a JSON-able schema that
+    :func:`_rebuild` inverts. Handles the result shapes Plans produce:
+    ``RecordedOutputs``, namedtuples (payload outputs), tuples/lists/
+    dicts, ``None``, and array leaves."""
+    if obj is None:
+        return {"kind": "none"}
+    if isinstance(obj, RecordedOutputs):
+        return {
+            "kind": "recorded",
+            "fields": list(obj._fields),
+            "children": [_describe(v, leaves) for v in obj],
+        }
+    if isinstance(obj, tuple) and hasattr(obj, "_fields"):  # namedtuple
+        cls = type(obj)
+        return {
+            "kind": "namedtuple",
+            "cls": [cls.__module__, cls.__qualname__],
+            "children": [_describe(v, leaves) for v in obj],
+        }
+    if isinstance(obj, (tuple, list)):
+        return {
+            "kind": "tuple" if isinstance(obj, tuple) else "list",
+            "children": [_describe(v, leaves) for v in obj],
+        }
+    if isinstance(obj, dict):
+        keys = sorted(obj)
+        return {
+            "kind": "dict",
+            "keys": keys,
+            "children": [_describe(obj[k], leaves) for k in keys],
+        }
+    a = np.asarray(obj)
+    leaves.append(a)
+    return {"kind": "leaf", "dtype": str(a.dtype), "shape": list(a.shape)}
+
+
+def _np_dtype(name: str):
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import jax.numpy as jnp  # ml_dtypes names (bfloat16, ...)
+
+        return np.dtype(getattr(jnp, name))
+
+
+def _rebuild(schema: dict, leaves) -> Any:
+    kind = schema["kind"]
+    if kind == "none":
+        return None
+    if kind == "leaf":
+        return next(leaves)
+    children = [_rebuild(c, leaves) for c in schema["children"]]
+    if kind == "recorded":
+        return RecordedOutputs(tuple(schema["fields"]), tuple(children))
+    if kind == "namedtuple":
+        module, qualname = schema["cls"]
+        cls = importlib.import_module(module)
+        for part in qualname.split("."):
+            cls = getattr(cls, part)
+        return cls(*children)
+    if kind == "tuple":
+        return tuple(children)
+    if kind == "list":
+        return children
+    if kind == "dict":
+        return dict(zip(schema["keys"], children))
+    raise ValueError(f"unknown schema kind {kind!r}")
+
+
+def _leaf_templates(schema: dict, out: list) -> None:
+    """Shape/dtype templates in flatten order, for ``load_pytree``'s
+    checked restore (dtypes restored exactly, including the bfloat16 ->
+    float32 npz round-trip)."""
+    kind = schema["kind"]
+    if kind == "leaf":
+        out.append(np.zeros(tuple(schema["shape"]), _np_dtype(schema["dtype"])))
+    elif kind != "none":
+        for c in schema.get("children", ()):
+            _leaf_templates(c, out)
+
+
+# ---------------------------------------------------------------------------
+# the store
+# ---------------------------------------------------------------------------
+
+
+class ResultStore:
+    """Content-addressed, disk-backed Plan result cache (module docstring).
+
+    Layout: ``<root>/<key[:2]>/<key>.npz`` (the leaves, written
+    atomically) + ``<key>.meta.json`` (structure schema + provenance).
+    ``hits`` / ``misses`` / ``puts`` count this instance's traffic.
+    """
+
+    def __init__(self, root: str):
+        self.root = os.path.abspath(os.fspath(root))
+        self.hits = 0
+        self.misses = 0
+        self.puts = 0
+
+    # -- construction ------------------------------------------------------
+
+    @classmethod
+    def from_env(cls) -> "ResultStore | None":
+        """The store named by ``$REPRO_RESULT_STORE``, or None if unset."""
+        root = os.environ.get(ENV_VAR, "").strip()
+        return cls(root) if root else None
+
+    @classmethod
+    def resolve(cls, store) -> "ResultStore | None":
+        """Normalize a ``store=`` argument: None stays None, ``"env"``
+        reads :data:`ENV_VAR`, a path string opens that directory, a
+        ResultStore passes through."""
+        if store is None or isinstance(store, cls):
+            return store
+        if store == "env":
+            return cls.from_env()
+        if isinstance(store, (str, os.PathLike)):
+            return cls(store)
+        raise TypeError(
+            f"store must be None, 'env', a directory path or a ResultStore; "
+            f"got {store!r}"
+        )
+
+    # -- keys --------------------------------------------------------------
+
+    def sweep_key(
+        self, signature: tuple, graph, stacked_configs, seeds: int, key
+    ) -> str:
+        """The content hash of one ``sweep_stacked`` call: stable plan
+        signature + graph adjacency + stacked scenario leaves + seed
+        count + base PRNG key material."""
+        h = hashlib.sha256()
+        h.update(b"repro-sweep-v1\x00")
+        h.update(canonical_token(signature).encode())
+        _hash_leaves(h, (np.asarray(graph.neighbors), np.asarray(graph.degrees)))
+        _hash_leaves(h, stacked_configs)
+        h.update(f"seeds={int(seeds)}".encode())
+        h.update(np.asarray(jax.random.key_data(key)).tobytes())
+        return h.hexdigest()
+
+    def _paths(self, key: str) -> tuple:
+        base = os.path.join(self.root, key[:2], key)
+        return base, base + ".npz", base + ".meta.json"
+
+    def __contains__(self, key: str) -> bool:
+        _, npz, meta = self._paths(key)
+        return os.path.exists(npz) and os.path.exists(meta)
+
+    # -- IO ----------------------------------------------------------------
+
+    def get(self, key: str):
+        """The stored result pytree for ``key``, or None on a miss.
+        Corrupt/partial entries (e.g. from a dead writer on a pre-atomic
+        checkpoint layer) count as misses."""
+        base, npz, meta_path = self._paths(key)
+        try:
+            with open(meta_path) as f:
+                meta = json.load(f)
+            schema = meta["schema"]
+            like: list = []
+            _leaf_templates(schema, like)
+            leaves = load_pytree(npz, like)
+            result = _rebuild(schema, iter(leaves))
+        except Exception:  # unreadable/corrupt/mismatched entry == miss
+            self.misses += 1
+            return None
+        self.hits += 1
+        return result
+
+    def put(self, key: str, result: Any, extra_meta: dict | None = None):
+        """Persist a result pytree under ``key`` (atomic: readers see the
+        old entry or the new one, never a torn write)."""
+        base, _npz, _meta = self._paths(key)
+        leaves: list = []
+        schema = _describe(result, leaves)
+        meta = {"schema_version": _SCHEMA_VERSION, "key": key, "schema": schema}
+        if extra_meta:
+            meta.update(extra_meta)
+        save_pytree(base, leaves, metadata=meta)
+        self.puts += 1
+        return key
+
+    def __repr__(self):
+        return (
+            f"ResultStore({self.root!r}, hits={self.hits}, "
+            f"misses={self.misses}, puts={self.puts})"
+        )

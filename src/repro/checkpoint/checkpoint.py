@@ -16,6 +16,25 @@ import numpy as np
 from repro.utils.tree import tree_flatten_with_paths
 
 
+def _atomic_write(path: str, write_fn) -> None:
+    """Write via a same-directory temp file + ``os.replace``.
+
+    A crash (or raised exception) mid-write leaves at worst an orphaned
+    ``*.tmp-*`` file — the previous snapshot at ``path`` stays intact,
+    and readers never observe a half-written file.
+    """
+    tmp = f"{path}.tmp-{os.getpid()}"
+    try:
+        with open(tmp, "wb") as f:
+            write_fn(f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+
+
 def save_pytree(path: str, tree: Any, metadata: dict | None = None) -> None:
     flat = tree_flatten_with_paths(tree)
     arrays = {}
@@ -25,10 +44,14 @@ def save_pytree(path: str, tree: Any, metadata: dict | None = None) -> None:
             a = a.astype(np.float32)
         arrays[p] = a
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-    np.savez(path, **arrays)
+    # np.savez appends ".npz" to bare string paths; match that name, but
+    # stage both files through a temp + os.replace so a crash mid-write
+    # never shadows the previous good snapshot with a corrupt one.
+    npz_path = path if path.endswith(".npz") else path + ".npz"
+    _atomic_write(npz_path, lambda f: np.savez(f, **arrays))
     if metadata is not None:
-        with open(path + ".meta.json", "w") as f:
-            json.dump(metadata, f, indent=2, default=str)
+        blob = json.dumps(metadata, indent=2, default=str).encode()
+        _atomic_write(path + ".meta.json", lambda f: f.write(blob))
 
 
 def load_pytree(path: str, like: Any) -> Any:

@@ -40,10 +40,18 @@ random stream, and therefore every ``StepOutputs`` trajectory, bitwise
 unchanged. ``payload=None`` skips the hooks entirely at trace time and is
 the exact pre-payload program.
 
-Payload objects are *static* under ``jax.jit`` (hashed by identity):
-construct one instance and reuse it across calls, or every fresh instance
-recompiles. Anything traced belongs in the carry; anything structural
-(model definition, optimizer, capacity) belongs on the object.
+Payload objects are *static* under ``jax.jit``. By default they hash by
+identity — construct one instance and reuse it across calls, or every
+fresh instance recompiles. A payload that implements
+:meth:`Payload.signature` (a stable tuple of its static configuration)
+upgrades to *structural* identity: two instances with equal signatures
+compare equal, share one compile-cache slot and one compiled program
+(``repro.api.plan``), and gain a stable cross-process key for the
+disk-backed result store (``repro.api.store``). Anything traced belongs
+in the carry; anything structural (model definition, optimizer,
+capacity) belongs on the object AND in the signature — a signature that
+omits a knob which changes the computation will silently share compiled
+programs between payloads that should differ.
 """
 from __future__ import annotations
 
@@ -69,6 +77,38 @@ class Payload:
         """Static compatibility check against the ProtocolConfig; called
         once per ``run_*`` entry point, outside the trace. Raise on
         mismatch (e.g. slot-capacity disagreement)."""
+
+    def signature(self) -> Tuple | None:
+        """Stable static-config tuple identifying this payload's program.
+
+        Return a hashable tuple of everything structural — model config,
+        optimizer hyperparameters, task identity, capacities — built only
+        from primitives/tuples/dataclasses so it serializes stably across
+        processes. Two payloads with equal signatures are treated as THE
+        SAME program: they share a compile-cache slot, a compiled XLA
+        program, and a result-store key. The default ``None`` keeps
+        identity semantics (no structural sharing; disk-backed result
+        persistence unavailable for runs carrying this payload).
+        """
+        return None
+
+    def _signature_key(self) -> Tuple | None:
+        """Type-qualified stable identity, or None for identity hashing."""
+        sig = self.signature()
+        if sig is None:
+            return None
+        return (type(self).__module__, type(self).__qualname__, sig)
+
+    # structural eq/hash when a signature is declared; identity otherwise
+    def __eq__(self, other):
+        key = self._signature_key()
+        if key is None or not isinstance(other, Payload):
+            return self is other
+        return key == other._signature_key()
+
+    def __hash__(self):
+        key = self._signature_key()
+        return object.__hash__(self) if key is None else hash(key)
 
     def output_fields(self) -> Tuple[str, ...]:
         """Names of the per-round output fields this payload emits (the

@@ -71,11 +71,18 @@ def generate(
     temperature: float = 0.0,
     eos_id: Optional[int] = None,
     key=None,
+    eos_check_every: int = 8,
 ):
-    """Prefill `batch` then decode `max_new_tokens` greedily/sampled.
+    """Prefill `batch` then decode up to `max_new_tokens` greedily/sampled.
 
     Returns (generated (B, max_new_tokens[, nq]) int32, stats dict).
-    Streams that hit `eos_id` keep emitting eos (finished mask).
+    Streams that hit `eos_id` keep emitting eos (finished mask), and the
+    decode loop exits early once EVERY stream is finished: the finished
+    mask is checked on the host every `eos_check_every` steps (periodic,
+    so the check does not force a device sync per token), the remaining
+    positions are padded with `eos_id` — bitwise what the full loop would
+    have emitted — and `stats["decode_steps"]` / `tokens_per_s` count
+    only the decode steps actually executed.
     """
     cfg = model.cfg
     if key is None:
@@ -96,10 +103,20 @@ def generate(
     else:
         tok = tok.reshape(B, 1)
     finished = jnp.zeros((B,), bool)
+    track_eos = eos_id is not None and not cfg.num_codebooks
     outs = [tok]
+    decode_steps = 0
     t0 = time.time()
     for i in range(max_new_tokens - 1):
+        if (
+            track_eos
+            and eos_check_every > 0
+            and i % eos_check_every == 0
+            and bool(jax.device_get(jnp.all(finished)))
+        ):
+            break  # every stream frozen: the rest would all be eos
         logits, cache = decode(params, cache, {"tokens": tok})
+        decode_steps += 1
         key = jax.random.fold_in(key, i)
         nxt = _sample(logits, key, temperature)
         nxt = (
@@ -107,7 +124,7 @@ def generate(
             if cfg.num_codebooks
             else nxt.reshape(B, 1)
         )
-        if eos_id is not None and not cfg.num_codebooks:
+        if track_eos:
             finished = finished | (tok[:, 0] == eos_id)
             nxt = jnp.where(finished[:, None], eos_id, nxt)
         tok = nxt
@@ -115,10 +132,18 @@ def generate(
     jax.block_until_ready(tok)
     t_decode = time.time() - t0
     gen = jnp.concatenate(outs, axis=1)
+    if gen.shape[1] < max_new_tokens:  # early exit: pad the frozen tail
+        pad = jnp.full(
+            (B, max_new_tokens - gen.shape[1]) + gen.shape[2:],
+            eos_id,
+            gen.dtype,
+        )
+        gen = jnp.concatenate([gen, pad], axis=1)
     stats = {
         "prefill_s": t_prefill,
         "decode_s": t_decode,
-        "tokens_per_s": B * max(max_new_tokens - 1, 1) / max(t_decode, 1e-9),
+        "decode_steps": decode_steps,
+        "tokens_per_s": B * max(decode_steps, 1) / max(t_decode, 1e-9),
     }
     return gen, stats
 

@@ -23,10 +23,25 @@ class OptState(NamedTuple):
 class Optimizer:
     init: Callable
     update: Callable  # (grads, state, params) -> (new_params, new_state)
+    # stable hyperparameter tuple (name, lr token, ...) — None when the
+    # optimizer closes over something we cannot fingerprint (an unlabeled
+    # schedule callable). Consumed by Payload.signature implementations
+    # (repro.core.payload) to build cross-process compile/store keys.
+    signature: Optional[tuple] = None
+
+
+def _lr_token(lr):
+    """Stable token for a learning rate: the float itself, a schedule's
+    declared ``.signature``, or None (unfingerprintable callable)."""
+    if callable(lr):
+        return getattr(lr, "signature", None)
+    return float(lr)
 
 
 def constant_schedule(lr: float) -> Callable:
-    return lambda step: jnp.float32(lr)
+    fn = lambda step: jnp.float32(lr)
+    fn.signature = ("const", float(lr))
+    return fn
 
 
 def cosine_schedule(lr: float, warmup: int, total: int, min_ratio: float = 0.1):
@@ -37,6 +52,7 @@ def cosine_schedule(lr: float, warmup: int, total: int, min_ratio: float = 0.1):
         cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
         return jnp.float32(lr) * warm * (min_ratio + (1 - min_ratio) * cos)
 
+    fn.signature = ("cosine", float(lr), int(warmup), int(total), float(min_ratio))
     return fn
 
 
@@ -64,7 +80,9 @@ def sgd(lr, momentum: float = 0.0) -> Optimizer:
         )
         return new_params, OptState(step=state.step + 1, mu=mu, nu=())
 
-    return Optimizer(init=init, update=update)
+    tok = _lr_token(lr)
+    sig = None if tok is None else ("sgd", tok, float(momentum))
+    return Optimizer(init=init, update=update, signature=sig)
 
 
 def adamw(
@@ -116,4 +134,9 @@ def adamw(
         new_params = tdef.unflatten([o[2] for o in out])
         return new_params, OptState(step=step, mu=mu, nu=nu)
 
-    return Optimizer(init=init, update=update)
+    tok = _lr_token(lr)
+    sig = None if tok is None else (
+        "adamw", tok, float(b1), float(b2), float(eps), float(weight_decay),
+        jnp.dtype(moment_dtype).name,
+    )
+    return Optimizer(init=init, update=update, signature=sig)

@@ -155,6 +155,42 @@ class RwSgdPayload(Payload):
         self.seq_len = int(seq_len)
         self.train_every = int(train_every)
         self._train = replica_train_step(model.loss, optimizer)
+        self._signature_cache = False  # lazily computed (task content hash)
+
+    def signature(self):
+        """Stable static-config tuple (see ``Payload.signature``): model
+        config dataclass, optimizer hyperparameter signature, a content
+        hash of the task's transition logits, and the capacity knobs.
+        Returns None — identity semantics, no cross-process store keys —
+        when the optimizer or task cannot be fingerprinted.
+        """
+        if self._signature_cache is not False:
+            return self._signature_cache
+        opt_sig = getattr(self.optimizer, "signature", None)
+        model_cfg = getattr(self.model, "cfg", None)
+        task_logits = getattr(self.task, "logits", None)
+        if opt_sig is None or model_cfg is None or task_logits is None:
+            sig = None
+        else:
+            import hashlib
+
+            import numpy as np
+
+            digest = hashlib.sha256(
+                np.ascontiguousarray(np.asarray(task_logits, np.float32))
+                .tobytes()
+            ).hexdigest()
+            sig = (
+                model_cfg,
+                opt_sig,
+                ("task", digest),
+                self.max_walks,
+                self.local_batch,
+                self.seq_len,
+                self.train_every,
+            )
+        self._signature_cache = sig
+        return sig
 
     def output_fields(self):
         return RwSgdOutputs._fields

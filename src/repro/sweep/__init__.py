@@ -23,6 +23,7 @@ from repro.sweep.engine import SweepResult, maybe_shard_scenarios, run_scenarios
 from repro.sweep.scenario import (
     Scenario,
     as_pair,
+    group_key,
     group_scenarios,
     stack_configs,
     static_signature,
@@ -32,6 +33,7 @@ __all__ = [
     "Scenario",
     "SweepResult",
     "as_pair",
+    "group_key",
     "group_scenarios",
     "maybe_shard_scenarios",
     "run_scenarios",

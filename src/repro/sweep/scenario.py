@@ -55,17 +55,27 @@ def static_signature(scenario) -> tuple:
     )
 
 
+def group_key(scenario) -> tuple:
+    """The batching key: :func:`static_signature` minus the schedule
+    lengths (``pad_bursts`` reconciles those at stacking time). Scenarios
+    with equal group keys share one compiled program — this is the key
+    ``group_scenarios`` partitions on and the coalescing key the
+    ``api.service.ExperimentService`` batches concurrent submissions by.
+    """
+    return static_signature(scenario)[:-1]
+
+
 def group_scenarios(scenarios: Sequence) -> list:
     """Partition into batchable groups: list of (signature, [indices]).
 
     Schedule-length differences (bursts, node crashes) are reconciled
-    later by ``pad_bursts``, so the grouping key ignores them; everything
-    else must match exactly.
+    later by ``pad_bursts``, so the grouping key (:func:`group_key`)
+    ignores them; everything else must match exactly.
     """
     groups: dict = {}
     order = []
     for i, s in enumerate(scenarios):
-        sig = static_signature(s)[:-1]  # n_bursts handled by padding
+        sig = group_key(s)
         if sig not in groups:
             groups[sig] = []
             order.append(sig)
@@ -84,7 +94,7 @@ def stack_configs(scenarios: Sequence):
     if not scenarios:
         raise ValueError("need at least one scenario")
     pairs = [as_pair(s) for s in scenarios]
-    sigs = {static_signature(p)[:-1] for p in pairs}
+    sigs = {group_key(p) for p in pairs}
     if len(sigs) > 1:
         raise ValueError(
             "scenarios mix static structures (algorithm / estimator_impl / "

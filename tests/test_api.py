@@ -49,7 +49,7 @@ def _pcfg(alg="decafork", **kw):
 FCFG = FailureConfig(burst_times=(15,), burst_sizes=(2,))
 
 
-def _tiny_payload(max_walks=W):
+def _tiny_payload(max_walks=W, **kw):
     from repro.data import make_markov_task
     from repro.models.config import ModelConfig
     from repro.models.model import Model
@@ -62,7 +62,7 @@ def _tiny_payload(max_walks=W):
     )
     return RwSgdPayload(
         Model(cfg), adamw(1e-2), make_markov_task(cfg.vocab_size, rank=4),
-        max_walks=max_walks, local_batch=1, seq_len=8,
+        max_walks=max_walks, local_batch=1, seq_len=8, **kw,
     )
 
 
@@ -387,6 +387,44 @@ def test_payload_thinning_through_sweep(graph, payload):
         np.testing.assert_array_equal(
             np.asarray(ref.mean_loss), np.asarray(learn.mean_loss[i])
         )
+
+
+def test_payload_signature_structural_identity(graph, monkeypatch):
+    """Satellite 4 (ISSUE 6): two structurally equal payload instances
+    are ONE program — equal/hash-equal statics, one compile-cache slot,
+    zero extra lowerings and zero extra XLA compiles — and changing one
+    static knob (train_every) opens exactly one more slot + program."""
+    calls = _count_lowerings(monkeypatch)
+    T = 8
+    p1, p2 = _tiny_payload(), _tiny_payload()
+    assert p1 is not p2
+    assert p1 == p2 and hash(p1) == hash(p2)  # structural identity
+    assert p1.signature() is not None
+
+    mk = lambda p: Experiment(
+        graph=graph, protocol=_pcfg(), failures=FCFG, steps=T, payload=p,
+        outputs=("z", "mean_loss"),
+    )
+    out1, learn1 = mk(p1).ensemble(SEEDS, base_key=BASE_KEY)
+    base_entries = cache_stats()["entries"]
+    base_compiles = cache_stats()["xla_compiles"]
+    n_lower = len(calls)
+
+    out2, learn2 = mk(p2).ensemble(SEEDS, base_key=BASE_KEY)
+    assert len(calls) == n_lower  # fresh instance, same slot
+    assert cache_stats()["entries"] == base_entries
+    assert cache_stats()["xla_compiles"] == base_compiles  # shared program
+    np.testing.assert_array_equal(np.asarray(out1.z), np.asarray(out2.z))
+    np.testing.assert_array_equal(
+        np.asarray(learn1.mean_loss), np.asarray(learn2.mean_loss)
+    )
+
+    p3 = _tiny_payload(train_every=2)  # one static knob changed
+    assert p3 != p1 and p3.signature() != p1.signature()
+    mk(p3).ensemble(SEEDS, base_key=BASE_KEY)
+    assert len(calls) == n_lower + 1  # exactly one new slot...
+    assert cache_stats()["entries"] == base_entries + 1
+    assert cache_stats()["xla_compiles"] == base_compiles + 1  # ...one program
 
 
 def test_payload_spec_requires_addressable_outputs(graph):

@@ -1,0 +1,52 @@
+"""SweepResult error semantics (ISSUE 6 satellite 2).
+
+Three sharp edges, unified:
+  * unknown scenario-name lookup: ``KeyError`` listing the available
+    names (not ``tuple.index``'s bare ValueError);
+  * duplicate names: rejected at construction (a first-match duplicate
+    lookup silently returns the wrong scenario);
+  * ``payload()`` on a payload-free sweep: the same ``KeyError`` family
+    with an actionable message.
+"""
+import pytest
+
+from repro.api import SweepResult
+
+
+def _res(names=("a", "b"), payloads=None):
+    outputs = [f"out-{n}" for n in names]
+    return SweepResult(names=names, outputs=outputs, payloads=payloads)
+
+
+def test_lookup_by_name_and_position():
+    res = _res()
+    assert res["a"] == "out-a" == res[0]
+    assert res["b"] == "out-b" == res[1]
+    assert len(res) == 2
+    assert res.items() == [("a", "out-a"), ("b", "out-b")]
+
+
+def test_unknown_name_raises_keyerror_listing_available():
+    res = _res()
+    with pytest.raises(KeyError, match=r"unknown scenario name 'zz'.*'a', 'b'"):
+        res["zz"]
+    # name lookup on payloads goes through the same path
+    pres = _res(payloads=["pa", "pb"])
+    with pytest.raises(KeyError, match="available scenarios"):
+        pres.payload("zz")
+    assert pres.payload("b") == "pb"
+
+
+def test_duplicate_names_rejected_at_construction():
+    with pytest.raises(ValueError, match=r"duplicate scenario name\(s\) \['x'\]"):
+        _res(names=("x", "y", "x"))
+    with pytest.raises(ValueError, match="names but"):
+        SweepResult(names=("a",), outputs=["o1", "o2"])
+
+
+def test_payload_lookup_without_payload_is_keyerror():
+    res = _res()
+    with pytest.raises(KeyError, match="ran without a payload"):
+        res.payload("a")
+    with pytest.raises(KeyError, match="attach payload="):
+        res.payload(0)

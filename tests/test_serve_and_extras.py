@@ -72,6 +72,33 @@ def test_generate_eos_freezes_stream():
             assert (g[b, hits[0]:] == 0).all()  # frozen after EOS
 
 
+def test_generate_eos_early_exit_bitwise_and_step_count():
+    """ISSUE 6 satellite 3: once every stream is finished the decode
+    loop actually exits (periodic host check), the eos-padded tail is
+    bitwise what the full loop would have emitted, and decode_steps /
+    tokens_per_s count only the steps actually executed."""
+    from repro.launch.serve import generate
+
+    cfg = get_smoke_config("yi_6b")
+    model = Model(cfg)
+    key = jax.random.key(4)
+    params = model.init(key)
+    batch = _prefill_batch(cfg, 1, 8, key)
+    T = 10
+    ref, _ = generate(model, params, batch, max_new_tokens=T)
+    eos = int(np.asarray(ref)[0, 1])  # the greedy stream emits this early
+
+    full, fstats = generate(model, params, batch, max_new_tokens=T,
+                            eos_id=eos, eos_check_every=0)  # exit disabled
+    early, estats = generate(model, params, batch, max_new_tokens=T,
+                             eos_id=eos, eos_check_every=1)
+    assert fstats["decode_steps"] == T - 1  # full loop ran to the end
+    assert 1 <= estats["decode_steps"] < T - 1  # early exit fired
+    assert early.shape == (1, T)
+    np.testing.assert_array_equal(np.asarray(early), np.asarray(full))
+    assert estats["tokens_per_s"] > 0
+
+
 # ---------------------------------------------------------------------------
 # remaining decode/prefill consistency families (audio, vlm, absorbed MLA)
 # ---------------------------------------------------------------------------

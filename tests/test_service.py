@@ -1,0 +1,313 @@
+"""ExperimentService (ISSUE 6 tentpole): coalescing submission queue.
+
+Contract under test:
+  * K submissions spanning G static structures execute as exactly G
+    compiled programs (the ``_lower`` seam + ``cache_stats`` both
+    agree), however many callers contributed;
+  * coalescing is bitwise-invisible: every caller's results equal a
+    private ``Plan.sweep`` of just their scenarios under the same
+    seeds/base key;
+  * differing seeds or base keys must NOT coalesce (they change the
+    per-seed key derivation);
+  * futures stream per-group results incrementally and in completion
+    order; errors in a group propagate to exactly the touching futures;
+  * the background-worker mode delivers the same results under
+    concurrent submitters.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.api import Experiment, ExperimentService
+from repro.api import plan as plan_mod
+from repro.core import FailureConfig, ProtocolConfig
+from repro.graphs import random_regular_graph
+from repro.sweep import Scenario
+
+N, W, Z0, STEPS, SEEDS, BASE_KEY = 24, 10, 5, 40, 2, 7
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return random_regular_graph(N, 4, seed=3)
+
+
+def _pcfg(**kw):
+    base = dict(algorithm="decafork", z0=Z0, max_walks=W, rt_bins=32,
+                protocol_start=10, eps=1.8)
+    base.update(kw)
+    return ProtocolConfig(**base)
+
+
+def _scen(name, **kw):
+    fcfg = kw.pop("fcfg", FailureConfig())
+    return Scenario(name, _pcfg(**kw), fcfg)
+
+
+def _exp(graph, **kw):
+    return Experiment(graph=graph, steps=STEPS, outputs="scalars",
+                      scenarios=[_scen("base")], **kw)
+
+
+def _count_lowerings(monkeypatch):
+    calls = []
+    real = plan_mod._lower
+
+    def counting(mode, signature):
+        calls.append((mode, signature))
+        return real(mode, signature)
+
+    monkeypatch.setattr(plan_mod, "_lower", counting)
+    return calls
+
+
+def _assert_tree_equal(ref, got, label):
+    import jax
+
+    rl = jax.tree_util.tree_leaves(ref)
+    gl = jax.tree_util.tree_leaves(got)
+    assert len(rl) == len(gl), label
+    for a, b in zip(rl, gl):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=label)
+
+
+# ---------------------------------------------------------------------------
+# coalescing: K submissions, G static structures, G compiled programs
+# ---------------------------------------------------------------------------
+
+
+def test_submissions_coalesce_into_one_program_per_structure(
+    graph, monkeypatch
+):
+    """Five scenario rows from three callers spanning TWO static
+    structures (rt_bins 48 vs 64) run as exactly two compiled calls —
+    counted at the _lower seam AND in jax's own compile cache."""
+    calls = _count_lowerings(monkeypatch)
+    svc = ExperimentService(_exp(graph), store=None, autostart=False)
+
+    f1 = svc.submit(
+        [_scen("a1", rt_bins=48, eps=1.6), _scen("a2", rt_bins=48, eps=2.0)],
+        seeds=SEEDS, base_key=BASE_KEY,
+    )
+    f2 = svc.submit([_scen("b1", rt_bins=48, eps=2.4)],
+                    seeds=SEEDS, base_key=BASE_KEY)
+    f3 = svc.submit(
+        [_scen("c1", rt_bins=64), _scen("c2", rt_bins=48, eps=1.9)],
+        seeds=SEEDS, base_key=BASE_KEY,
+    )
+    before = plan_mod.cache_stats()["xla_compiles"]
+    svc.flush()
+    assert [c[0] for c in calls] == ["sweep", "sweep"]  # exactly G=2
+    assert svc.stats["batches"] == 2
+    assert svc.stats["coalesced"] == 4  # the four rt_bins=48 rows shared
+    assert plan_mod.cache_stats()["xla_compiles"] - before <= 2
+    for f in (f1, f2, f3):
+        assert f.done()
+    assert list(f1.result().names) == ["a1", "a2"]
+    svc.close()
+
+
+def test_coalesced_results_bitwise_equal_private_sweep(graph):
+    """A caller's coalesced results are bitwise what a private
+    Plan.sweep of ONLY their scenarios returns — strangers sharing the
+    batch are invisible (the PR-1 stacking invariant, end to end)."""
+    mine = [_scen("mine1", eps=1.7), _scen("mine2", eps=2.1)]
+    stranger = [_scen("other1", eps=2.5), _scen("other2", eps=1.9),
+                _scen("other3", fcfg=FailureConfig(burst_times=(15,),
+                                                   burst_sizes=(2,)))]
+    exp = _exp(graph)
+    svc = ExperimentService(exp, store=None, autostart=False)
+    f_mine = svc.submit(mine, seeds=SEEDS, base_key=BASE_KEY)
+    f_other = svc.submit(stranger, seeds=SEEDS, base_key=BASE_KEY)
+    svc.flush()
+    res = f_mine.result()
+    ref = exp.plan().sweep(mine, seeds=SEEDS, base_key=BASE_KEY)
+    for name in ("mine1", "mine2"):
+        _assert_tree_equal(ref[name], res[name], f"coalesced vs private: {name}")
+    assert f_other.result().names == ("other1", "other2", "other3")
+    svc.close()
+
+
+def test_differing_seeds_or_base_key_never_coalesce(graph, monkeypatch):
+    """seeds/base_key are part of the coalescing key: same structure but
+    different batching axes must run as separate stacked calls."""
+    svc = ExperimentService(_exp(graph), store=None, autostart=False)
+    svc.submit([_scen("s1")], seeds=SEEDS, base_key=BASE_KEY)
+    svc.submit([_scen("s2")], seeds=SEEDS + 1, base_key=BASE_KEY)
+    svc.submit([_scen("s3")], seeds=SEEDS, base_key=BASE_KEY + 1)
+    svc.flush()
+    assert svc.stats["batches"] == 3
+    assert svc.stats["coalesced"] == 0
+    svc.close()
+
+
+# ---------------------------------------------------------------------------
+# futures: streaming, ordering, errors
+# ---------------------------------------------------------------------------
+
+
+def test_future_streams_per_group_results(graph):
+    """A mixed submission yields scenarios per coalesced group as each
+    group's compiled call finishes (first-seen group order), while
+    ``result()`` restores submission order."""
+    svc = ExperimentService(_exp(graph), store=None, autostart=False)
+    fut = svc.submit(
+        [_scen("slow", rt_bins=64), _scen("fast1", rt_bins=48),
+         _scen("fast2", rt_bins=48, eps=2.2)],
+        seeds=SEEDS,
+    )
+    svc.flush()
+    order = [name for name, outs, pay in fut.stream()]
+    # groups run in first-seen order: rt_bins=64 first, then the 48s
+    assert order == ["slow", "fast1", "fast2"]
+    res = fut.result()
+    assert res.names == ("slow", "fast1", "fast2")  # input order restored
+    svc.close()
+
+
+def test_submit_validates_eagerly(graph):
+    svc = ExperimentService(_exp(graph), store=None, autostart=False)
+    with pytest.raises(ValueError, match="at least one scenario"):
+        svc.submit([], seeds=SEEDS)
+    with pytest.raises(ValueError, match="duplicate scenario names"):
+        svc.submit([_scen("dup"), _scen("dup")], seeds=SEEDS)
+    svc.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        svc.submit([_scen("late")], seeds=SEEDS)
+
+
+def test_group_error_propagates_to_touching_futures_only(graph):
+    """An invalid scenario poisons exactly the futures that share its
+    batch; disjoint groups still deliver. (A concrete-array z0 defers
+    the capacity check from config construction to stacking time, so
+    the error fires inside the service's compiled-group run.)"""
+    import jax.numpy as jnp
+
+    bad = Scenario(
+        "bad", _pcfg(z0=jnp.asarray(W + 5)), FailureConfig()
+    )
+    svc = ExperimentService(_exp(graph), store=None, autostart=False)
+    f_bad = svc.submit([bad], seeds=SEEDS)
+    f_ok = svc.submit([_scen("ok", rt_bins=64)], seeds=SEEDS)
+    svc.flush()
+    with pytest.raises(ValueError, match="max_walks"):
+        f_bad.result()
+    with pytest.raises(ValueError, match="max_walks"):
+        list(f_bad.stream())
+    assert f_ok.result().names == ("ok",)
+    svc.close()
+
+
+def test_result_timeout_reports_progress(graph, monkeypatch):
+    """result(timeout=) raises while the batch is still in flight, and
+    resolves normally once it lands."""
+    svc = ExperimentService(_exp(graph), store=None, autostart=True,
+                            linger=0.0)
+    release = threading.Event()
+    real = svc.plan.sweep_stacked
+
+    def slow(*a, **kw):
+        release.wait(60)
+        return real(*a, **kw)
+
+    monkeypatch.setattr(svc.plan, "sweep_stacked", slow)
+    fut = svc.submit([_scen("s")], seeds=SEEDS)
+    with pytest.raises(TimeoutError, match="0/1 scenarios"):
+        fut.result(timeout=0.1)
+    release.set()
+    assert fut.result(timeout=120).names == ("s",)
+    svc.close()
+
+
+# ---------------------------------------------------------------------------
+# background-worker mode
+# ---------------------------------------------------------------------------
+
+
+def test_threaded_submitters_coalesce_and_match(graph):
+    """Concurrent submitters against the live worker: every caller gets
+    their own bitwise-correct rows, and the batch count stays below the
+    submission count (some coalescing happened across the linger)."""
+    exp = _exp(graph)
+    ref = exp.plan().sweep(
+        [_scen(f"t{i}", eps=1.5 + 0.1 * i) for i in range(6)],
+        seeds=SEEDS, base_key=BASE_KEY,
+    )
+    svc = ExperimentService(exp, store=None, autostart=True, linger=0.25)
+    futures = [None] * 6
+    start = threading.Barrier(6)
+
+    def caller(i):
+        start.wait()
+        futures[i] = svc.submit(
+            [_scen(f"t{i}", eps=1.5 + 0.1 * i)], seeds=SEEDS, base_key=BASE_KEY
+        )
+
+    threads = [threading.Thread(target=caller, args=(i,)) for i in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    for i, fut in enumerate(futures):
+        res = fut.result(timeout=120)
+        _assert_tree_equal(ref[f"t{i}"], res[f"t{i}"], f"threaded t{i}")
+    assert svc.stats["submissions"] == 6
+    assert svc.stats["batches"] < 6  # the linger window coalesced some
+    svc.close()
+
+
+def test_service_run_convenience_and_context_manager(graph):
+    with ExperimentService(_exp(graph), store=None, autostart=False) as svc:
+        res = svc.run([_scen("one")], seeds=SEEDS, base_key=BASE_KEY)
+        assert res.names == ("one",)
+
+
+# ---------------------------------------------------------------------------
+# named-experiment registry
+# ---------------------------------------------------------------------------
+
+
+def test_experiment_from_config_builds_registered_study():
+    from repro.api import registry
+
+    exp = Experiment.from_config({
+        "experiment": "walks",
+        "graph": "regular",
+        "n": N,
+        "graph_seed": 3,
+        "steps": STEPS,
+        "scenarios": [
+            {"name": "calm", "protocol": {"z0": Z0, "max_walks": W}},
+            {"name": "burst", "protocol": {"z0": Z0, "max_walks": W},
+             "failures": {"burst_times": [15], "burst_sizes": [2]}},
+        ],
+        "outputs": "scalars",
+    })
+    assert exp.graph.n == N and exp.steps == STEPS
+    assert [s.name for s in exp.scenarios] == ["calm", "burst"]
+    assert "walks" in registry.names()
+    with pytest.raises(KeyError, match="registered experiments"):
+        Experiment.from_config({"experiment": "nope"})
+    with pytest.raises(ValueError, match="'experiment' key"):
+        Experiment.from_config({"n": 8})
+
+
+def test_registry_rejects_bad_builders_and_rows():
+    from repro.api import registry
+
+    @registry.register("tmp-bad")
+    def _bad(**kw):
+        return "not an experiment"
+
+    try:
+        with pytest.raises(TypeError, match="expected an Experiment"):
+            registry.build("tmp-bad")
+    finally:
+        registry._REGISTRY.pop("tmp-bad", None)
+    with pytest.raises(TypeError, match="unknown keys"):
+        Experiment.from_config({
+            "experiment": "walks", "n": 12, "steps": 5,
+            "scenarios": [{"name": "x", "bogus": 1}],
+        })

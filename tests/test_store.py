@@ -1,0 +1,329 @@
+"""ResultStore + checkpoint atomicity (ISSUE 6 tentpole + satellite 1).
+
+Contract under test:
+  * a store-warm ``sweep_stacked`` in the SAME process returns the
+    persisted pytree with zero new lowerings and zero new XLA compiles
+    (the executable path is skipped entirely), bitwise equal to the
+    cold run;
+  * a store-warm re-run in a FRESH process (subprocess) is bitwise
+    identical and compiles nothing;
+  * keys are content hashes: changing the base key, seed count, a
+    scenario leaf or the graph changes the key; identical inputs agree
+    across Plan instances;
+  * signature components without a stable encoding (a signature-less
+    payload) refuse persistence with UnstableSignatureError;
+  * corrupt / truncated entries degrade to misses, never errors;
+  * checkpoint writes are atomic: a simulated crash mid-write never
+    shadows the previous good snapshot (array file OR metadata).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import Experiment, ResultStore
+from repro.api import plan as plan_mod
+from repro.api.store import UnstableSignatureError, canonical_token
+from repro.checkpoint import load_pytree, save_pytree
+from repro.checkpoint import checkpoint as ckpt_mod
+from repro.core import FailureConfig, ProtocolConfig
+from repro.graphs import random_regular_graph
+from repro.sweep import Scenario
+
+N, W, Z0, STEPS, SEEDS, BASE_KEY = 24, 10, 5, 40, 2, 7
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return random_regular_graph(N, 4, seed=3)
+
+
+def _pcfg(**kw):
+    base = dict(algorithm="decafork", z0=Z0, max_walks=W, rt_bins=32,
+                protocol_start=10, eps=1.8)
+    base.update(kw)
+    return ProtocolConfig(**base)
+
+
+def _scenarios():
+    return [
+        Scenario("calm", _pcfg(), FailureConfig()),
+        Scenario("burst", _pcfg(eps=2.1),
+                 FailureConfig(burst_times=(15,), burst_sizes=(2,))),
+    ]
+
+
+def _exp(graph):
+    return Experiment(graph=graph, steps=STEPS, outputs="scalars",
+                      scenarios=_scenarios())
+
+
+def _digest(tree) -> str:
+    import hashlib
+
+    h = hashlib.sha256()
+    for leaf in jax.tree_util.tree_leaves(tree):
+        a = np.ascontiguousarray(np.asarray(leaf))
+        h.update(str(a.dtype).encode() + str(a.shape).encode() + a.tobytes())
+    return h.hexdigest()
+
+
+def _count_lowerings(monkeypatch):
+    calls = []
+    real = plan_mod._lower
+
+    def counting(mode, signature):
+        calls.append((mode, signature))
+        return real(mode, signature)
+
+    monkeypatch.setattr(plan_mod, "_lower", counting)
+    return calls
+
+
+# ---------------------------------------------------------------------------
+# same-process warm hits
+# ---------------------------------------------------------------------------
+
+
+def test_store_warm_hit_skips_execution_and_matches(graph, tmp_path, monkeypatch):
+    store = ResultStore(tmp_path / "store")
+    plan = _exp(graph).plan()
+    cold = plan.sweep_stacked(seeds=SEEDS, base_key=BASE_KEY, store=store)
+    assert store.puts == 1 and store.misses == 1
+
+    calls = _count_lowerings(monkeypatch)
+    before = plan_mod.cache_stats()["xla_compiles"]
+    warm = plan.sweep_stacked(seeds=SEEDS, base_key=BASE_KEY, store=store)
+    assert store.hits == 1
+    assert calls == []  # no new lowering...
+    assert plan_mod.cache_stats()["xla_compiles"] == before  # ...no compile
+    assert _digest(warm) == _digest(cold)  # bitwise round-trip
+
+    # Plan.sweep threads the store through per-group stacked calls
+    res = _exp(graph).plan().sweep(seeds=SEEDS, base_key=BASE_KEY, store=store)
+    assert store.hits == 2
+    assert res.names == ("calm", "burst")
+
+
+def test_store_key_is_content_addressed(graph):
+    plan = _exp(graph).plan()
+    store = ResultStore("/tmp/unused-keys-only")
+    from repro.sweep.scenario import stack_configs
+
+    scen = _scenarios()
+    stacked = stack_configs(scen)
+    lens = (1, 0)
+    sig = plan._signature("sweep", scen[0].pcfg, lens)
+    key = lambda **kw: store.sweep_key(
+        kw.get("sig", sig),
+        kw.get("graph", graph),
+        kw.get("cfg", stacked),
+        kw.get("seeds", SEEDS),
+        jax.random.key(kw.get("base_key", BASE_KEY)),
+    )
+    base = key()
+    assert key() == base  # deterministic
+    assert key(seeds=SEEDS + 1) != base
+    assert key(base_key=BASE_KEY + 1) != base
+    other = stack_configs([
+        Scenario("calm", _pcfg(eps=1.81), scen[0].fcfg), scen[1]
+    ])
+    assert key(cfg=other) != base  # a single traced leaf changes the key
+    g2 = random_regular_graph(N, 4, seed=4)
+    assert key(graph=g2) != base
+
+
+def test_unstable_payload_refuses_persistence(graph, tmp_path):
+    from repro.core.payload import Payload
+
+    class Anon(Payload):  # no signature(): identity-hashed
+        pass
+
+    with pytest.raises(UnstableSignatureError, match="Payload.signature"):
+        canonical_token(plan_mod.payload_key(Anon()))
+    exp = Experiment(graph=graph, steps=STEPS, scenarios=_scenarios(),
+                     payload=Anon())
+    with pytest.raises(UnstableSignatureError):
+        exp.plan().sweep_stacked(seeds=SEEDS, store=ResultStore(tmp_path))
+
+
+def test_corrupt_entries_degrade_to_misses(graph, tmp_path):
+    store = ResultStore(tmp_path / "store")
+    plan = _exp(graph).plan()
+    plan.sweep_stacked(seeds=SEEDS, base_key=BASE_KEY, store=store)
+    (key,) = [
+        f[: -len(".meta.json")]
+        for sub in os.listdir(store.root)
+        for f in os.listdir(os.path.join(store.root, sub))
+        if f.endswith(".meta.json")
+    ]
+    base, npz, meta = store._paths(key)
+    assert key in store
+
+    with open(npz, "wb") as f:
+        f.write(b"not a zipfile")
+    assert store.get(key) is None  # corrupt npz: miss, not error
+
+    plan.sweep_stacked(seeds=SEEDS, base_key=BASE_KEY, store=store)  # re-put
+    os.remove(meta)
+    assert key not in store
+    assert store.get(key) is None  # half-missing entry: miss
+
+
+# ---------------------------------------------------------------------------
+# fresh-process warm hit (the cross-process claim)
+# ---------------------------------------------------------------------------
+
+_CHILD = textwrap.dedent(
+    """
+    import json, sys
+    import jax, numpy as np
+    from repro.api import Experiment, ResultStore, cache_stats
+    from repro.core import FailureConfig, ProtocolConfig
+    from repro.graphs import random_regular_graph
+    from repro.sweep import Scenario
+
+    N, W, Z0, STEPS, SEEDS, BASE_KEY = 24, 10, 5, 40, 2, 7
+
+    def _pcfg(**kw):
+        base = dict(algorithm="decafork", z0=Z0, max_walks=W, rt_bins=32,
+                    protocol_start=10, eps=1.8)
+        base.update(kw)
+        return ProtocolConfig(**base)
+
+    scenarios = [
+        Scenario("calm", _pcfg(), FailureConfig()),
+        Scenario("burst", _pcfg(eps=2.1),
+                 FailureConfig(burst_times=(15,), burst_sizes=(2,))),
+    ]
+    graph = random_regular_graph(N, 4, seed=3)
+    plan = Experiment(graph=graph, steps=STEPS, outputs="scalars",
+                      scenarios=scenarios).plan()
+    store = ResultStore.from_env()
+    result = plan.sweep_stacked(seeds=SEEDS, base_key=BASE_KEY, store=store)
+
+    import hashlib
+    h = hashlib.sha256()
+    for leaf in jax.tree_util.tree_leaves(result):
+        a = np.ascontiguousarray(np.asarray(leaf))
+        h.update(str(a.dtype).encode() + str(a.shape).encode() + a.tobytes())
+    print(json.dumps({
+        "digest": h.hexdigest(),
+        "hits": store.hits,
+        "misses": store.misses,
+        "xla_compiles": cache_stats()["xla_compiles"],
+    }))
+    """
+)
+
+
+@pytest.mark.slow
+def test_fresh_process_store_hit_bitwise_zero_compiles(graph, tmp_path):
+    """The headline persistence claim: a second PROCESS re-running the
+    same study answers from disk — bitwise identical leaves, zero XLA
+    compiles in the warm child."""
+    store = ResultStore(tmp_path / "store")
+    cold = _exp(graph).plan().sweep_stacked(
+        seeds=SEEDS, base_key=BASE_KEY, store=store
+    )
+    env = dict(os.environ)
+    env["REPRO_RESULT_STORE"] = store.root
+    env["JAX_PLATFORMS"] = "cpu"
+    src = os.path.join(os.path.dirname(os.path.dirname(__file__)), "src")
+    env["PYTHONPATH"] = src + os.pathsep * bool(env.get("PYTHONPATH")) + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, "-c", _CHILD], env=env, capture_output=True,
+        text=True, timeout=600,
+    )
+    assert out.returncode == 0, out.stderr
+    report = json.loads(out.stdout.strip().splitlines()[-1])
+    assert report["hits"] == 1 and report["misses"] == 0
+    assert report["xla_compiles"] == 0  # the child never compiled anything
+    assert report["digest"] == _digest(cold)  # bitwise across processes
+
+
+# ---------------------------------------------------------------------------
+# checkpoint atomicity (satellite 1)
+# ---------------------------------------------------------------------------
+
+
+def _snap(path):
+    with open(path, "rb") as f:
+        return f.read()
+
+
+def test_partial_write_never_shadows_previous_snapshot(tmp_path, monkeypatch):
+    """A writer that dies mid-write (here: np.savez fails after emitting
+    partial bytes) leaves the previous snapshot byte-identical and
+    loadable, and leaves no temp debris behind."""
+    path = str(tmp_path / "ckpt")
+    tree = {"a": np.arange(6, dtype=np.float32), "b": np.ones((2, 3))}
+    save_pytree(path, tree, metadata={"step": 1})
+    good_npz = _snap(path + ".npz")
+    good_meta = _snap(path + ".meta.json")
+
+    def dying_savez(f, **arrays):
+        f.write(b"PARTIAL GARBAGE")
+        raise OSError("disk full")
+
+    monkeypatch.setattr(ckpt_mod.np, "savez", dying_savez)
+    with pytest.raises(OSError, match="disk full"):
+        save_pytree(path, {"a": np.zeros(6, np.float32),
+                           "b": np.zeros((2, 3))}, metadata={"step": 2})
+    monkeypatch.undo()
+
+    assert _snap(path + ".npz") == good_npz  # old snapshot intact...
+    assert _snap(path + ".meta.json") == good_meta
+    assert not [f for f in os.listdir(tmp_path) if ".tmp-" in f]  # no debris
+    restored = load_pytree(path, tree)  # ...and still loadable
+    np.testing.assert_array_equal(restored["a"], tree["a"])
+    np.testing.assert_array_equal(restored["b"], tree["b"])
+
+
+def test_partial_metadata_write_keeps_previous_meta(tmp_path, monkeypatch):
+    """Array write succeeding but the metadata write dying must not
+    leave a torn .meta.json either."""
+    path = str(tmp_path / "ckpt")
+    save_pytree(path, {"x": np.arange(3)}, metadata={"v": 1})
+    good_meta = _snap(path + ".meta.json")
+
+    real = ckpt_mod._atomic_write
+
+    def dying_meta(p, write_fn):
+        if p.endswith(".meta.json"):
+            def torn(f):
+                f.write(b'{"v":')
+                raise OSError("crash")
+
+            return real(p, torn)
+        return real(p, write_fn)
+
+    monkeypatch.setattr(ckpt_mod, "_atomic_write", dying_meta)
+    with pytest.raises(OSError, match="crash"):
+        save_pytree(path, {"x": np.arange(3)}, metadata={"v": 2})
+    monkeypatch.undo()
+    assert _snap(path + ".meta.json") == good_meta
+    json.loads(_snap(path + ".meta.json"))  # parses
+
+
+def test_atomic_write_replaces_only_on_success(tmp_path):
+    from repro.checkpoint.checkpoint import _atomic_write
+
+    path = str(tmp_path / "f.bin")
+    _atomic_write(path, lambda f: f.write(b"v1"))
+    assert _snap(path) == b"v1"
+    _atomic_write(path, lambda f: f.write(b"v2-longer"))
+    assert _snap(path) == b"v2-longer"
+    with pytest.raises(RuntimeError):
+        def die(f):
+            f.write(b"half")
+            raise RuntimeError("boom")
+
+        _atomic_write(path, die)
+    assert _snap(path) == b"v2-longer"
+    assert os.listdir(tmp_path) == ["f.bin"]
