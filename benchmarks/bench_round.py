@@ -1,0 +1,221 @@
+"""BENCH: the simulator round — whole-round fusion and the estimator
+microbench (results/bench_round.json).
+
+Two measurements:
+
+``run_whole_round`` — the headline: the PR-4 per-stage round
+(``round_impl="unfused"``: topology step, hop, failure stack,
+observation scatter, estimator, decisions as separate XLA stages — in
+particular a per-round ``cumsum`` over the return-time histogram, which
+XLA CPU lowers to a quadratic reduce-window) versus the fused whole
+round (``round_impl="fused"``: row-restricted hop, pairwise choose, and
+the incrementally-carried cumulative return-time table on CPU; the
+single-pass Pallas kernel on TPU). Both arms run the bench_sweep
+workload — the fig5-style epsilon grid (8 scenarios x 4 seeds x 600
+steps reduced) on the canonical n=100 8-regular graph — through the
+same batched sweep engine, both warm (steady = min over cached re-runs
+after the cold compile), and must agree bitwise on every recorded
+output before any number is reported.
+
+``run_round`` — the PR-4 microbench, unchanged grid: ONE fused
+observation round (scatter + last-seen update + theta) per
+``estimator_impl`` (gather / compare / fused; plus the interpret-mode
+Pallas kernels off-TPU for completeness) across an (n, W, B) grid.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import FULL, default_graph, save_result
+from benchmarks.bench_sweep import STEPS, SEEDS, _scenarios
+from repro.api import Experiment
+
+REPEATS = 3  # steady-state = min over this many fully-cached re-runs
+
+
+def _sweep_arm(graph, scenarios, round_impl):
+    """The bench_sweep workload with every scenario pinned to one
+    round_impl; returns (wall seconds, recorded outputs)."""
+    pinned = [
+        (dataclasses.replace(p, round_impl=round_impl), f)
+        for p, f in scenarios
+    ]
+    t0 = time.time()
+    out = Experiment(graph=graph, scenarios=pinned, steps=STEPS)\
+        .plan().sweep_stacked(seeds=SEEDS, base_key=0)
+    jax.block_until_ready(out)
+    return time.time() - t0, out
+
+
+def run_whole_round(verbose: bool = True):
+    """Fused whole round vs the per-stage sequence, both arms warm."""
+    graph = default_graph()
+    scenarios = _scenarios()
+    denom = len(scenarios) * STEPS * SEEDS
+    rows, outs, steady = [], {}, {}
+    for impl in ("unfused", "fused"):
+        t_cold, out = _sweep_arm(graph, scenarios, impl)
+        best = None
+        for _ in range(REPEATS):
+            t, out = _sweep_arm(graph, scenarios, impl)
+            best = t if best is None else min(best, t)
+        outs[impl], steady[impl] = out, best
+        rows += [
+            {"name": f"bench_round/whole_{impl}_cold", "wall_s": t_cold,
+             "us_per_call": t_cold * 1e6 / denom},
+            {"name": f"bench_round/whole_{impl}_steady", "wall_s": best,
+             "us_per_call": best * 1e6 / denom},
+        ]
+        if verbose:
+            print(
+                f"bench_round/whole_{impl},{best * 1e6 / denom:.2f},"
+                f"cold={t_cold:.2f}s|steady={best:.2f}s"
+            )
+    # the fused round must be bitwise the unfused sequence — no number
+    # is worth reporting if the arms computed different trajectories
+    for name, a, b in zip(
+        outs["fused"]._fields, outs["fused"], outs["unfused"]
+    ):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b), err_msg=f"fused vs unfused: {name}"
+        )
+    extra = {
+        "scenarios": len(scenarios),
+        "steps": STEPS,
+        "seeds": SEEDS,
+        "repeats": REPEATS,
+        "speedup_fused_vs_unfused": steady["unfused"] / steady["fused"],
+    }
+    if verbose:
+        print(
+            f"BENCH bench_round whole-round speedup_fused_vs_unfused="
+            f"{extra['speedup_fused_vs_unfused']:.2f}x "
+            f"({len(scenarios)} scenarios x {SEEDS} seeds x {STEPS} steps)"
+        )
+    return rows, extra
+
+
+# ---------------------------------------------------------------------------
+# round-level estimator microbench (the PR-4 grid)
+# ---------------------------------------------------------------------------
+
+ROUND_GRID = (
+    [(100, 64, 1024), (1000, 64, 1024), (4096, 128, 1024), (16384, 128, 512)]
+    if FULL
+    else [(100, 64, 1024), (1000, 64, 1024), (4096, 128, 512)]
+)
+ROUND_ITERS = 30 if FULL else 10
+# interpret-mode Pallas (the off-TPU fallback) is an emulation, orders of
+# magnitude off its compiled speed — only meaningful to time on TPU or at
+# tiny shapes; keep it to the smallest grid point elsewhere
+PALLAS_MAX_N = 10**9 if jax.default_backend() == "tpu" else 128
+
+
+def _round_inputs(key, n, W, B):
+    from repro.kernels.round_update import random_round_inputs
+
+    return random_round_inputs(key, n, W, B, W, t=500)
+
+
+def _round_impls():
+    """Jitted one-round pipelines per estimator_impl: scatter + last-seen
+    update + theta for the visiting walks (what one scan step pays)."""
+    from repro.core import estimator as est
+    from repro.kernels import round_update_pallas, round_update_ref
+    from repro.kernels import theta_sums_pallas
+
+    def scatter(ls, hist, total, pos, track, r, valid, upd):
+        rts = est.record_returns(est.ReturnTimeState(hist, total), pos, r, valid)
+        ls = ls.at[pos, track].max(upd, mode="drop")
+        return ls, rts
+
+    @jax.jit
+    def gather(ls, hist, total, pos, track, r, valid, upd, t):
+        ls, rts = scatter(ls, hist, total, pos, track, r, valid, upd)
+        theta = est.theta_hat_rows(ls, rts.hist, rts.total, t, pos, track)
+        return ls, rts.hist, rts.total, theta
+
+    @jax.jit
+    def compare(ls, hist, total, pos, track, r, valid, upd, t):
+        ls, rts = scatter(ls, hist, total, pos, track, r, valid, upd)
+        sums = est.node_sums_compare(ls, rts.hist, rts.total, t)
+        return ls, rts.hist, rts.total, est.theta_hat_from_node_sums(sums, pos)
+
+    @jax.jit
+    def fused(ls, hist, total, pos, track, r, valid, upd, t):
+        ls, hist, total, sums = round_update_ref(
+            ls, hist, total, pos, track, r, valid, upd, t
+        )
+        return ls, hist, total, est.theta_hat_from_node_sums(sums, pos)
+
+    @jax.jit
+    def pallas_fused(ls, hist, total, pos, track, r, valid, upd, t):
+        ls, hist, total, sums = round_update_pallas(
+            ls, hist, total, pos, track, r, valid, upd, t
+        )
+        return ls, hist, total, est.theta_hat_from_node_sums(sums, pos)
+
+    @jax.jit
+    def pallas_theta(ls, hist, total, pos, track, r, valid, upd, t):
+        ls, rts = scatter(ls, hist, total, pos, track, r, valid, upd)
+        sums = theta_sums_pallas(ls, rts.hist, rts.total, t)
+        return ls, rts.hist, rts.total, est.theta_hat_from_node_sums(sums, pos)
+
+    return {
+        "gather": gather,
+        "compare": compare,
+        "fused": fused,
+        "pallas_fused": pallas_fused,
+        "pallas_theta": pallas_theta,
+    }
+
+
+def run_round(verbose: bool = True):
+    impls = _round_impls()
+    rows = []
+    key = jax.random.key(0)
+    for n, W, B in ROUND_GRID:
+        args = _round_inputs(jax.random.fold_in(key, n), n, W, B)
+        thetas = {}
+        for name, fn in impls.items():
+            if name.startswith("pallas") and n > PALLAS_MAX_N:
+                continue
+            out = fn(*args)  # compile + correctness probe
+            thetas[name] = np.asarray(out[3])
+            jax.block_until_ready(out)
+            t0 = time.time()
+            for _ in range(ROUND_ITERS):
+                out = fn(*args)
+            jax.block_until_ready(out)
+            us = (time.time() - t0) * 1e6 / ROUND_ITERS
+            rows.append(
+                {"name": f"bench_round/{name}", "n": n, "W": W, "B": B,
+                 "us_per_round": us}
+            )
+            if verbose:
+                print(f"bench_round/{name},{us:.1f},n={n}|W={W}|B={B}")
+        # the node-sum impls agree bitwise; gather differs only in float
+        # association (same math, different reduction path) and is
+        # comparable at active walks (node-sum theta assumes the walk's
+        # own column was just stamped — exactly where the protocol reads)
+        for a in ("fused", "pallas_fused", "pallas_theta"):
+            if a in thetas:
+                np.testing.assert_array_equal(thetas[a], thetas["compare"], a)
+        act = np.asarray(args[7]) >= 0  # upd != NEVER <=> active slot
+        np.testing.assert_allclose(
+            thetas["gather"][act], thetas["compare"][act],
+            rtol=1e-5, atol=1e-5,
+        )
+    return rows
+
+
+def run(verbose: bool = True):
+    whole_rows, extra = run_whole_round(verbose)
+    micro_rows = run_round(verbose)
+    extra = dict(extra, iters=ROUND_ITERS, backend=jax.default_backend())
+    save_result("bench_round", whole_rows + micro_rows, extra)
+    return whole_rows + micro_rows

@@ -1,9 +1,12 @@
-"""BENCH: batched scenario sweep vs the per-scenario baseline, plus a
-round-level estimator microbench.
+"""BENCH: batched scenario sweep vs the per-scenario baseline.
 
 Workload: a fig5-style epsilon grid (8 scenarios x 4 seeds reduced;
 16 x 8 with BENCH_FULL=1) on the canonical figure configuration — the
 PR-1 workload, unchanged across PRs so the numbers are comparable.
+``benchmarks.bench_round`` reuses this exact workload (same
+``_scenarios`` / STEPS / SEEDS) for its fused-vs-unfused whole-round
+comparison, and now owns the round-level estimator microbench that
+used to live here.
 
 Three engines over the identical workload:
   - ``sweep``     : ONE jit-compiled call for the whole grid
@@ -27,11 +30,6 @@ shared hosts). The headline ratios:
     arms fully warm, the honest batched-vs-dispatched throughput ratio
     (PR-1 reported cold sweep vs warm-ish loop = 0.65x; that mixed
     number is kept as ``speedup_vs_warm_loop_cold``).
-
-``bench_round`` (results/bench_round.json) microbenchmarks ONE fused
-observation round — scatter + last-seen update + theta — per
-``estimator_impl`` (gather / compare / fused; plus the interpret-mode
-pallas kernels off-TPU for completeness) across an (n, W, B) grid.
 """
 from __future__ import annotations
 
@@ -160,124 +158,6 @@ def run(verbose: bool = True):
     return rows
 
 
-# ---------------------------------------------------------------------------
-# round-level estimator microbench
-# ---------------------------------------------------------------------------
-
-ROUND_GRID = (
-    [(100, 64, 1024), (1000, 64, 1024), (4096, 128, 1024), (16384, 128, 512)]
-    if FULL
-    else [(100, 64, 1024), (1000, 64, 1024), (4096, 128, 512)]
-)
-ROUND_ITERS = 30 if FULL else 10
-# interpret-mode Pallas (the off-TPU fallback) is an emulation, orders of
-# magnitude off its compiled speed — only meaningful to time on TPU or at
-# tiny shapes; keep it to the smallest grid point elsewhere
-PALLAS_MAX_N = 10**9 if jax.default_backend() == "tpu" else 128
-
-
-def _round_inputs(key, n, W, B):
-    from repro.kernels.round_update import random_round_inputs
-
-    return random_round_inputs(key, n, W, B, W, t=500)
-
-
-def _round_impls():
-    """Jitted one-round pipelines per estimator_impl: scatter + last-seen
-    update + theta for the visiting walks (what one scan step pays)."""
-    from repro.core import estimator as est
-    from repro.kernels import round_update_pallas, round_update_ref
-    from repro.kernels import theta_sums_pallas
-
-    def scatter(ls, hist, total, pos, track, r, valid, upd):
-        rts = est.record_returns(est.ReturnTimeState(hist, total), pos, r, valid)
-        ls = ls.at[pos, track].max(upd, mode="drop")
-        return ls, rts
-
-    @jax.jit
-    def gather(ls, hist, total, pos, track, r, valid, upd, t):
-        ls, rts = scatter(ls, hist, total, pos, track, r, valid, upd)
-        theta = est.theta_hat_rows(ls, rts.hist, rts.total, t, pos, track)
-        return ls, rts.hist, rts.total, theta
-
-    @jax.jit
-    def compare(ls, hist, total, pos, track, r, valid, upd, t):
-        ls, rts = scatter(ls, hist, total, pos, track, r, valid, upd)
-        sums = est.node_sums_compare(ls, rts.hist, rts.total, t)
-        return ls, rts.hist, rts.total, est.theta_hat_from_node_sums(sums, pos)
-
-    @jax.jit
-    def fused(ls, hist, total, pos, track, r, valid, upd, t):
-        ls, hist, total, sums = round_update_ref(
-            ls, hist, total, pos, track, r, valid, upd, t
-        )
-        return ls, hist, total, est.theta_hat_from_node_sums(sums, pos)
-
-    @jax.jit
-    def pallas_fused(ls, hist, total, pos, track, r, valid, upd, t):
-        ls, hist, total, sums = round_update_pallas(
-            ls, hist, total, pos, track, r, valid, upd, t
-        )
-        return ls, hist, total, est.theta_hat_from_node_sums(sums, pos)
-
-    @jax.jit
-    def pallas_theta(ls, hist, total, pos, track, r, valid, upd, t):
-        ls, rts = scatter(ls, hist, total, pos, track, r, valid, upd)
-        sums = theta_sums_pallas(ls, rts.hist, rts.total, t)
-        return ls, rts.hist, rts.total, est.theta_hat_from_node_sums(sums, pos)
-
-    return {
-        "gather": gather,
-        "compare": compare,
-        "fused": fused,
-        "pallas_fused": pallas_fused,
-        "pallas_theta": pallas_theta,
-    }
-
-
-def run_round(verbose: bool = True):
-    impls = _round_impls()
-    rows = []
-    key = jax.random.key(0)
-    for n, W, B in ROUND_GRID:
-        args = _round_inputs(jax.random.fold_in(key, n), n, W, B)
-        thetas = {}
-        for name, fn in impls.items():
-            if name.startswith("pallas") and n > PALLAS_MAX_N:
-                continue
-            out = fn(*args)  # compile + correctness probe
-            thetas[name] = np.asarray(out[3])
-            jax.block_until_ready(out)
-            t0 = time.time()
-            for _ in range(ROUND_ITERS):
-                out = fn(*args)
-            jax.block_until_ready(out)
-            us = (time.time() - t0) * 1e6 / ROUND_ITERS
-            rows.append(
-                {"name": f"bench_round/{name}", "n": n, "W": W, "B": B,
-                 "us_per_round": us}
-            )
-            if verbose:
-                print(f"bench_round/{name},{us:.1f},n={n}|W={W}|B={B}")
-        # the node-sum impls agree bitwise; gather differs only in float
-        # association (same math, different reduction path) and is
-        # comparable at active walks (node-sum theta assumes the walk's
-        # own column was just stamped — exactly where the protocol reads)
-        for a in ("fused", "pallas_fused", "pallas_theta"):
-            if a in thetas:
-                np.testing.assert_array_equal(thetas[a], thetas["compare"], a)
-        act = np.asarray(args[7]) >= 0  # upd != NEVER <=> active slot
-        np.testing.assert_allclose(
-            thetas["gather"][act], thetas["compare"][act],
-            rtol=1e-5, atol=1e-5,
-        )
-    save_result(
-        "bench_round", rows,
-        {"iters": ROUND_ITERS, "backend": jax.default_backend()},
-    )
-    return rows
-
-
 if __name__ == "__main__":
     run()
-    run_round()
+

@@ -171,9 +171,32 @@ def default_graph(n: int = 100, seed: int = 0):
     return make_graph("regular", n, seed=seed, degree=8)
 
 
+def machine_metadata() -> dict:
+    """The environment block stamped into every results/*.json: numbers
+    from different machines / jax builds / backends are not comparable,
+    and a result file that doesn't say where it came from is a trap."""
+    import platform as _platform
+
+    import jax
+
+    dev = jax.devices()[0]
+    return {
+        "machine": _platform.node(),
+        "platform": _platform.platform(),
+        "cpu_count": os.cpu_count(),
+        "python": _platform.python_version(),
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_kind": getattr(dev, "device_kind", str(dev)),
+        "device_count": jax.device_count(),
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+    }
+
+
 def save_result(bench: str, rows: list, extra: dict | None = None) -> None:
     os.makedirs(RESULTS_DIR, exist_ok=True)
-    payload = {"bench": bench, "full": FULL, "rows": rows}
+    payload = {"bench": bench, "full": FULL, "rows": rows,
+               "meta": machine_metadata()}
     if extra:
         payload.update(extra)
     with open(os.path.join(RESULTS_DIR, f"{bench}.json"), "w") as f:

@@ -19,6 +19,7 @@ import time
 from benchmarks import (
     auto_eps,
     bench_payload,
+    bench_round,
     bench_service,
     bench_sweep,
     fig1_burst,
@@ -46,7 +47,7 @@ BENCHES = {
     "kernel_theta": kernel_theta.run,
     "auto_eps": auto_eps.run,
     "sweep": bench_sweep.run,
-    "round": bench_sweep.run_round,
+    "round": bench_round.run,
     "payload": bench_payload.run,
     "service": bench_service.run,
 }
@@ -63,6 +64,9 @@ def smoke() -> None:
         estimator_impl (gather vs compare/pallas/fused decisions may
         round differently in float, so trajectories are compared within
         the node-sum family and the gather family separately);
+      * the whole-round fused path (``round_impl="fused"``) is bitwise
+        the literal unfused stage sequence over a full churny
+        trajectory — every recorded output, not just z;
       * the legacy runner shims (run_simulation / run_ensemble /
         run_sweep / run_scenarios) are bitwise the new Experiment API —
         the deprecation layer must never drift from the real path.
@@ -136,6 +140,32 @@ def smoke() -> None:
         zs["auto"], zs[auto_family],
         err_msg=f"auto vs {auto_family} trajectory",
     )
+
+    # --- whole-round fusion vs the unfused oracle ------------------------
+    # the fused round must reproduce the literal stage sequence bitwise on
+    # every recorded output, under node/link churn and a burst
+    churn = FailureConfig(
+        burst_times=(30,), burst_sizes=(2,),
+        p_node_fail=0.02, p_node_recover=0.3, node_fail_start=10,
+        p_link_fail=0.05, p_link_recover=0.4, link_fail_start=10,
+    )
+    outs = {}
+    for rimpl in ("fused", "unfused"):
+        pcfg = ProtocolConfig(
+            algorithm="decafork+", z0=4, max_walks=8, eps=1.4, eps2=6.0,
+            protocol_start=15, rt_bins=32, estimator_impl="gather",
+            round_impl=rimpl,
+        )
+        _, outs[rimpl] = Experiment(
+            graph=g, protocol=pcfg, failures=churn, steps=60,
+            outputs="full",
+        ).run(key=5)
+    for name, a, b in zip(outs["fused"]._fields, outs["fused"],
+                          outs["unfused"]):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b),
+            err_msg=f"whole-round fused vs unfused: {name}",
+        )
 
     # --- new API vs legacy-shim bitwise agreement ------------------------
     from repro.core import run_ensemble, run_simulation

@@ -12,8 +12,18 @@ and estimates the number of live walks as (Eq. 1)
   theta_hat_i(t) = 1/2 + sum_{c != k, seen} S_i(t - last_seen[i, c]).
 
 Everything here is functional and jit/vmap-friendly: histograms are dense
-(n, B) float32 arrays, survival evaluation is a gather into the exclusive
-cumulative sum, and theta-hat is a masked (W, C) reduction.
+(n, B) int16 count arrays (exact — per-node-per-bin counts are bounded by
+the step budget, far below 32767; totals are int32 since W*steps can
+exceed int16), survival evaluation is a gather into the exclusive
+cumulative sum (widened to float32 at the read), and theta-hat is a
+masked (W, C) reduction.
+
+The fused whole-round path carries ``CumulativeReturnState`` instead: the
+(n, B+1) cumulative count table updated incrementally by scatter-adding
+step rows, which removes the per-round cumsum from the hot loop entirely
+(XLA CPU lowers ``cumsum`` to a quadratic reduce-window — it dominated
+the PR-4 round). Integer counts make the two carries exact transforms of
+each other: ``hist = diff(cum)``, ``total = cum[:, -1]``.
 """
 from __future__ import annotations
 
@@ -26,16 +36,23 @@ NEVER = -1  # sentinel for "walk never seen at this node"
 
 
 class ReturnTimeState(NamedTuple):
-    """Per-node empirical return-time statistics."""
+    """Per-node empirical return-time statistics.
 
-    hist: jax.Array  # (n, B) float32 counts; bin b <-> return time b+1
-    total: jax.Array  # (n,) float32 total sample count
+    Counts are exact integers: per-bin counts fit int16 (bounded by the
+    step budget — a node observes at most ``steps`` samples overall, let
+    alone per bin), totals are int32 (W * steps can exceed 32767). All
+    reads widen to float32, where every count is exactly representable
+    (far below 2**24), so the narrow carry is bitwise-neutral downstream.
+    """
+
+    hist: jax.Array  # (n, B) int16 counts; bin b <-> return time b+1
+    total: jax.Array  # (n,) int32 total sample count
 
 
 def init_return_time_state(n: int, bins: int) -> ReturnTimeState:
     return ReturnTimeState(
-        hist=jnp.zeros((n, bins), jnp.float32),
-        total=jnp.zeros((n,), jnp.float32),
+        hist=jnp.zeros((n, bins), jnp.int16),
+        total=jnp.zeros((n,), jnp.int32),
     )
 
 
@@ -45,18 +62,25 @@ def record_returns(
     r: jax.Array,  # (W,) int32 observed return times (t - last_seen)
     valid: jax.Array,  # (W,) bool — active walk with a prior visit record
 ) -> ReturnTimeState:
-    """Scatter-add observed return-time samples into per-node histograms."""
+    """Scatter-add observed return-time samples into per-node histograms.
+
+    Dtype-polymorphic (follows ``state``): the benchmark grid keeps a
+    float32 arm alive for measurement, the simulator carries int16/int32.
+    """
     bins = state.hist.shape[1]
     b = jnp.clip(r, 1, bins) - 1
-    w = valid.astype(jnp.float32)
-    hist = state.hist.at[nodes, b].add(w, mode="drop")
-    total = state.total.at[nodes].add(w, mode="drop")
+    hist = state.hist.at[nodes, b].add(
+        valid.astype(state.hist.dtype), mode="drop"
+    )
+    total = state.total.at[nodes].add(
+        valid.astype(state.total.dtype), mode="drop"
+    )
     return ReturnTimeState(hist=hist, total=total)
 
 
 def survival_cumulative(state: ReturnTimeState) -> jax.Array:
     """(n, B+1) table C with C[i, r] = #samples <= r (C[i, 0] = 0)."""
-    csum = jnp.cumsum(state.hist, axis=1)
+    csum = jnp.cumsum(state.hist.astype(jnp.float32), axis=1)
     return jnp.concatenate([jnp.zeros_like(csum[:, :1]), csum], axis=1)
 
 
@@ -73,7 +97,7 @@ def survival_eval(
     """
     bins = cum.shape[1] - 1
     r_cl = jnp.clip(r, 0, bins)
-    tot = total[nodes]
+    tot = total[nodes].astype(jnp.float32)
     seen_mass = cum[nodes, r_cl]
     s = 1.0 - seen_mass / jnp.maximum(tot, 1.0)
     s = jnp.where(tot > 0, s, 1.0)
@@ -162,10 +186,14 @@ def theta_hat_rows(
         bins = hist.shape[1]
         if max_elapsed is not None:
             bins = min(bins, max(int(max_elapsed), 1))
-        csum = jnp.cumsum(hist[pos][:, :bins], axis=1)  # visited rows only
+        csum = jnp.cumsum(
+            hist[pos][:, :bins].astype(jnp.float32), axis=1
+        )  # visited rows only
         cum = jnp.concatenate([jnp.zeros_like(csum[:, :1]), csum], axis=1)
         r_cl = jnp.clip(elapsed, 0, bins)
-        tot = jnp.broadcast_to(total[pos][:, None], (W, C))
+        tot = jnp.broadcast_to(
+            total[pos].astype(jnp.float32)[:, None], (W, C)
+        )
         seen_mass = jnp.take_along_axis(cum, r_cl, axis=1)
         s = 1.0 - seen_mass / jnp.maximum(tot, 1.0)
         s = jnp.where(tot > 0, s, 1.0)
@@ -194,15 +222,17 @@ def survival_node_sums_rows(
     """
     R, C = last_seen.shape
     B = hist.shape[1]
+    hist_f = hist.astype(jnp.float32)  # exact: integer counts < 2**24
+    total_f = total.astype(jnp.float32)
     valid = last_seen != NEVER
     r = jnp.where(valid, t - last_seen, 0)  # (R, C)
     bidx = jax.lax.broadcasted_iota(jnp.int32, (R, C, B), 2)
     over = (r[:, :, None] > bidx) & valid[:, :, None]
     cnt = jnp.sum(over.astype(jnp.float32), axis=1)  # (R, B)
-    mass = jnp.sum(cnt * hist, axis=1)
+    mass = jnp.sum(cnt * hist_f, axis=1)
     n_valid = jnp.sum(valid.astype(jnp.float32), axis=1)
-    s = n_valid - mass / jnp.maximum(total, 1.0)
-    return jnp.where(total > 0, s, n_valid)
+    s = n_valid - mass / jnp.maximum(total_f, 1.0)
+    return jnp.where(total_f > 0, s, n_valid)
 
 
 def node_sums_compare(
@@ -225,3 +255,108 @@ def theta_hat_from_node_sums(node_sums: jax.Array, pos: jax.Array) -> jax.Array:
     Valid only AFTER last_seen[pos, track] was updated to t.
     """
     return node_sums[pos] - 0.5
+
+
+# --- incremental cumulative carry (fused whole-round hot path) -----------
+
+
+class CumulativeReturnState(NamedTuple):
+    """Per-node cumulative return-time counts, carried incrementally.
+
+    ``cum[i, r] = #samples at node i with return time <= r`` for
+    r in 0..C (so ``cum[:, 0] == 0`` and ``cum[:, -1]`` is the total
+    sample count: every sample's clamped bin ``clip(r, 1, B) - 1`` lies
+    below ``C = min(B, steps)`` because observed return times never
+    exceed the step budget). This is exactly the table
+    ``theta_hat_rows`` rebuilds from the histogram with a per-round
+    cumsum; carrying it directly turns each observation into a
+    scatter-add of (W, C+1) 0/1 step rows and removes the cumsum —
+    XLA CPU's quadratic reduce-window — from the round entirely.
+    int32 throughout: the last column is total-bounded (W * steps).
+    """
+
+    cum: jax.Array  # (n, C+1) int32 cumulative counts
+
+
+def init_cumulative_state(n: int, bins: int) -> CumulativeReturnState:
+    """``bins`` here is the TRIMMED bin count C = min(rt_bins, steps)."""
+    return CumulativeReturnState(cum=jnp.zeros((n, bins + 1), jnp.int32))
+
+
+def record_returns_cumulative(
+    state: CumulativeReturnState,
+    nodes: jax.Array,  # (W,) int32 node visited by each walk
+    r: jax.Array,  # (W,) int32 observed return times (t - last_seen)
+    valid: jax.Array,  # (W,) bool — active walk with a prior visit record
+    bins: int,  # the FULL histogram bin count B (clamp target)
+) -> CumulativeReturnState:
+    """Scatter-add the step rows ``[col > b]`` — the cumulative image of
+    ``record_returns``'s one-hot at bin ``b = clip(r, 1, B) - 1``.
+
+    Exact-integer equivalent of ``record_returns`` on the cumulative
+    table: ``diff(cum)`` after this update equals ``hist`` after that
+    one, bin for bin.
+    """
+    b = jnp.clip(r, 1, bins) - 1  # (W,) same clamp as record_returns
+    cols = jnp.arange(state.cum.shape[1], dtype=b.dtype)[None, :]
+    rows = ((cols > b[:, None]) & valid[:, None]).astype(state.cum.dtype)
+    return CumulativeReturnState(
+        cum=state.cum.at[nodes].add(rows, mode="drop")
+    )
+
+
+def cumulative_to_return_time(
+    state: CumulativeReturnState, bins: int
+) -> ReturnTimeState:
+    """Exact inverse transform: ``hist = diff(cum)`` (zero-padded back to
+    the full ``bins``), ``total = cum[:, -1]``. Bitwise the histogram
+    ``record_returns`` would have accumulated from the same samples."""
+    cum = state.cum
+    hist = (cum[:, 1:] - cum[:, :-1]).astype(jnp.int16)
+    c = hist.shape[1]
+    if c < bins:
+        hist = jnp.pad(hist, ((0, 0), (0, bins - c)))
+    return ReturnTimeState(hist=hist, total=cum[:, -1])
+
+
+def theta_hat_cumulative(
+    last_seen: jax.Array,  # (n, C) int32
+    state: CumulativeReturnState,
+    t: jax.Array,  # scalar int32 current time
+    pos: jax.Array,  # (W,) node of each visiting walk
+    track: jax.Array,  # (W,) column owned by each walk
+    *,
+    pi: jax.Array | None = None,  # if set, use analytic survival instead
+) -> jax.Array:
+    """Eq. (1) read directly off the carried cumulative table.
+
+    Bitwise-identical to ``theta_hat_rows(..., max_elapsed=steps)`` when
+    the carry was trimmed to ``min(B, steps)`` bins: the gathered int32
+    prefix counts cast exactly to the float32 values the per-round
+    cumsum would produce (all counts < 2**24), and the survival tail is
+    the same expression. No cumsum anywhere — the dominant cost of the
+    gather-family round is gone.
+    """
+    W = pos.shape[0]
+    C = last_seen.shape[1]
+    ls = last_seen[pos]  # (W, C)
+    elapsed = t - ls  # (W, C)
+    if pi is not None:
+        nodes_b = jnp.broadcast_to(pos[:, None], (W, C))
+        s = analytic_survival_eval(pi, nodes_b, elapsed)
+    else:
+        cum = state.cum[pos]  # (W, bins+1) int32 — visited rows only
+        bins = cum.shape[1] - 1
+        r_cl = jnp.clip(elapsed, 0, bins)
+        seen_mass = jnp.take_along_axis(cum, r_cl, axis=1).astype(
+            jnp.float32
+        )
+        tot = jnp.broadcast_to(
+            cum[:, -1:].astype(jnp.float32), (W, C)
+        )
+        s = 1.0 - seen_mass / jnp.maximum(tot, 1.0)
+        s = jnp.where(tot > 0, s, 1.0)
+        s = jnp.where(elapsed <= 0, 1.0, s)
+    cols = jnp.arange(C)[None, :]
+    mask = (ls != NEVER) & (cols != track[:, None])
+    return 0.5 + jnp.sum(jnp.where(mask, s, 0.0), axis=1)

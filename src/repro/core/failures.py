@@ -191,6 +191,69 @@ def step_byzantine(
     return active & ~kill, byz_state
 
 
+def topology_uniforms(
+    key: jax.Array, neighbors: jax.Array, mirror: jax.Array
+):
+    """Draw and symmetrize one step's topology uniforms.
+
+    Returns ``(u_nfail, u_nrec, e_fail, e_rec)`` — the node crash /
+    recovery uniforms and the already-mirror-symmetrized link fail /
+    recovery uniforms (one canonical draw per undirected edge, living at
+    the lower endpoint, reflected to the partner slot via ``mirror``).
+    Split out of :func:`step_topology` so the fused whole-round path can
+    pre-draw the exact same streams outside its kernel; composing it
+    with :func:`apply_topology` IS ``step_topology``, bit for bit.
+    """
+    n, D = neighbors.shape
+    k_nfail, k_nrec, k_lfail, k_lrec = jax.random.split(key, 4)
+    u_nfail = jax.random.uniform(k_nfail, (n,))
+    u_nrec = jax.random.uniform(k_nrec, (n,))
+    u_fail = jax.random.uniform(k_lfail, (n, D))
+    u_rec = jax.random.uniform(k_lrec, (n, D))
+    ids = jnp.arange(n, dtype=jnp.int32)
+    lower = ids[:, None] < neighbors  # this slot holds the canonical draw
+    e_fail = jnp.where(lower, u_fail, u_fail[neighbors, mirror])
+    e_rec = jnp.where(lower, u_rec, u_rec[neighbors, mirror])
+    return u_nfail, u_nrec, e_fail, e_rec
+
+
+def scheduled_crash_mask(
+    n: int, t: jax.Array, cfg: FailureConfig
+) -> jax.Array:
+    """(n,) bool — nodes downed by a schedule entry firing at step ``t``
+    (time -1 / id -1 never fire — the padding encoding)."""
+    sched_down = jnp.zeros((n,), bool)
+    ids = jnp.arange(n, dtype=jnp.int32)
+    for i in range(cfg.n_node_crashes):
+        fire = (t == cfg.node_crash_times[i]) & (cfg.node_crash_ids[i] >= 0)
+        sched_down = sched_down | ((ids == cfg.node_crash_ids[i]) & fire)
+    return sched_down
+
+
+def apply_topology(
+    gs,
+    t: jax.Array,
+    cfg: FailureConfig,
+    sched_down: jax.Array,  # (n,) bool from scheduled_crash_mask
+    u_nfail: jax.Array,  # (n,) node crash uniforms
+    u_nrec: jax.Array,  # (n,) node recovery uniforms
+    e_fail: jax.Array,  # (n, D) symmetrized link-fail uniforms
+    e_rec: jax.Array,  # (n, D) symmetrized link-recovery uniforms
+):
+    """Pure mask update given pre-drawn uniforms (see ``step_topology``)."""
+    from repro.graphs.state import GraphState
+
+    crash = (u_nfail < cfg.p_node_fail) & (t >= cfg.node_fail_start)
+    recover = u_nrec < cfg.p_node_recover
+    node_up = jnp.where(
+        gs.node_up, ~(crash | sched_down), recover & ~sched_down
+    )
+    fail = (e_fail < cfg.p_link_fail) & (t >= cfg.link_fail_start)
+    rec = e_rec < cfg.p_link_recover
+    edge_up = jnp.where(gs.edge_up, ~fail, rec)
+    return GraphState(node_up=node_up, edge_up=edge_up)
+
+
 def step_topology(
     gs,
     t: jax.Array,
@@ -211,38 +274,17 @@ def step_topology(
     availability stays symmetric. All draws consume dedicated keys, so a
     config with every topology knob disabled leaves ``gs`` untouched AND
     leaves every other random stream bitwise unchanged.
+
+    Composition of :func:`topology_uniforms` (the draws) and
+    :func:`apply_topology` (the branch-free mask update); the fused
+    whole-round path calls the two halves separately.
     """
-    from repro.graphs.state import GraphState
-
-    n, D = neighbors.shape
-    k_nfail, k_nrec, k_lfail, k_lrec = jax.random.split(key, 4)
-
-    # scheduled crashes (time -1 / id -1 never fire — padding encoding)
-    sched_down = jnp.zeros((n,), bool)
-    ids = jnp.arange(n, dtype=jnp.int32)
-    for i in range(cfg.n_node_crashes):
-        fire = (t == cfg.node_crash_times[i]) & (cfg.node_crash_ids[i] >= 0)
-        sched_down = sched_down | ((ids == cfg.node_crash_ids[i]) & fire)
-
-    crash = (jax.random.uniform(k_nfail, (n,)) < cfg.p_node_fail) & (
-        t >= cfg.node_fail_start
+    n = neighbors.shape[0]
+    u_nfail, u_nrec, e_fail, e_rec = topology_uniforms(key, neighbors, mirror)
+    sched_down = scheduled_crash_mask(n, t, cfg)
+    return apply_topology(
+        gs, t, cfg, sched_down, u_nfail, u_nrec, e_fail, e_rec
     )
-    recover = jax.random.uniform(k_nrec, (n,)) < cfg.p_node_recover
-    node_up = jnp.where(
-        gs.node_up, ~(crash | sched_down), recover & ~sched_down
-    )
-
-    # symmetric link draws: canonical uniform lives at the lower endpoint
-    u_fail = jax.random.uniform(k_lfail, (n, D))
-    u_rec = jax.random.uniform(k_lrec, (n, D))
-    lower = ids[:, None] < neighbors  # this slot holds the canonical draw
-    e_fail = jnp.where(lower, u_fail, u_fail[neighbors, mirror])
-    e_rec = jnp.where(lower, u_rec, u_rec[neighbors, mirror])
-    fail = (e_fail < cfg.p_link_fail) & (t >= cfg.link_fail_start)
-    rec = e_rec < cfg.p_link_recover
-    edge_up = jnp.where(gs.edge_up, ~fail, rec)
-
-    return GraphState(node_up=node_up, edge_up=edge_up)
 
 
 def kill_resident_walks(

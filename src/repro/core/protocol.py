@@ -53,7 +53,10 @@ _PROTOCOL_META = (
     "estimator_impl",
     "auto_eps",
     "theta_bin_width",
+    "round_impl",
 )
+
+ROUND_IMPLS = ("auto", "fused", "unfused")
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -86,10 +89,20 @@ class ProtocolConfig:
     eps2_quantile: float | jax.Array = 0.995  # terminate above this quantile
     theta_bin_width: float = 0.25  # histogram bin width, static (shapes)
     auto_min_samples: int | jax.Array = 50  # below: fall back to eps/eps2
+    # 'fused' (whole-round single pass: hop + topology + failures +
+    # decisions in one dispatch) | 'unfused' (the literal per-stage
+    # sequence — the bitwise oracle) | 'auto' (best per backend,
+    # REPRO_ROUND_IMPL env override honored). Static (program shape).
+    round_impl: str = "auto"
 
     def __post_init__(self):
         if self.algorithm not in ALGORITHMS:
             raise ValueError(f"unknown algorithm {self.algorithm!r}")
+        if self.round_impl not in ROUND_IMPLS:
+            raise ValueError(
+                f"unknown round_impl {self.round_impl!r}; "
+                f"expected one of {ROUND_IMPLS}"
+            )
         # traced z0 values defer this check to the caller (sweep stacks
         # validate statically before batching)
         if isinstance(self.z0, numbers.Integral) and self.max_walks < self.z0:
@@ -153,6 +166,23 @@ def choose_walks(pos: jax.Array, active: jax.Array, n_nodes: int) -> jax.Array:
     cand = jnp.where(active, slots, W)
     best = jnp.full((n_nodes,), W, jnp.int32).at[pos].min(cand, mode="drop")
     return active & (best[pos] == slots)
+
+
+def choose_walks_pairwise(pos: jax.Array, active: jax.Array) -> jax.Array:
+    """``choose_walks`` without the (n,)-sized scatter: each walk takes the
+    min candidate slot over the walks sharing its node, via a (W, W)
+    compare. Bitwise-identical — for an active walk, the set minimized
+    over is exactly the candidates scattered to its node (inactive
+    co-located walks contribute the same sentinel W either way) — but
+    every array is walk-sized, which is what the fused whole-round path
+    needs (W*W tiny; no n-sized intermediate, no scatter).
+    """
+    W = pos.shape[0]
+    slots = jnp.arange(W, dtype=jnp.int32)
+    cand = jnp.where(active, slots, W)
+    same = pos[:, None] == pos[None, :]
+    best = jnp.min(jnp.where(same, cand[None, :], W), axis=1)
+    return active & (best == slots)
 
 
 def decafork_decisions(

@@ -75,7 +75,13 @@ from repro.core.outputs import SCALARS, StepOutputs
 from repro.core.payload import PAYLOAD_STREAM, payload_init_key
 from repro.graphs.generators import Graph
 from repro.graphs.spectral import stationary_distribution
-from repro.graphs.state import GraphState, availability, init_graph_state, mirror_indices
+from repro.graphs.state import (
+    GraphState,
+    availability,
+    availability_rows,
+    init_graph_state,
+    mirror_indices,
+)
 from repro.utils.prng import fold_in_time
 
 
@@ -83,7 +89,10 @@ class SimState(NamedTuple):
     t: jax.Array  # scalar int32
     walks: wlk.WalkState
     last_seen: jax.Array  # (n, W) int32
-    rts: est.ReturnTimeState
+    # ReturnTimeState (histogram carry) on the unfused / kernel paths,
+    # CumulativeReturnState (incremental CDF carry) on the fused-ref
+    # whole-round path — decided statically by the config (_will_fuse_round)
+    rts: est.ReturnTimeState | est.CumulativeReturnState
     byz_state: jax.Array  # scalar bool
     key: jax.Array
     theta_hist: jax.Array  # (n, TB) warmup theta-hat histogram (auto_eps)
@@ -97,13 +106,20 @@ def init_state(
     fcfg: flr.FailureConfig,
     key: jax.Array,
     n_obs: int | None = None,
+    steps: int | None = None,
 ) -> SimState:
     """Initial simulator state; ``n_obs`` (>= n, default n) is the row
     count of the observation-state arrays (``last_seen``, return-time
     histograms). The fused estimator path carries them PRE-padded to the
     node tile (``observation_rows``) so the per-round pad+slice inside
     the scan disappears; pad rows are masked "no data" rows no walk can
-    hit, so every real row is bitwise what the unpadded run computes."""
+    hit, so every real row is bitwise what the unpadded run computes.
+
+    ``steps`` (static, optional) is the run's step budget: on the
+    fused-ref whole-round path the return-time carry is the cumulative
+    table trimmed to ``min(rt_bins, steps)`` bins (the same trim
+    ``theta_hat_rows`` applies through ``max_elapsed`` — bitwise-neutral,
+    see its docstring); without it the carry keeps all ``rt_bins``."""
     n_obs = n if n_obs is None else n_obs
     W = pcfg.max_walks
     k_init, k_run = jax.random.split(key)
@@ -124,11 +140,18 @@ def init_state(
             jnp.where(walks.active, 0, est.NEVER)
         )
     tb = _theta_bins(pcfg)
+    if _will_fuse_round(pcfg) and _fused_round_backend() == "ref":
+        cbins = pcfg.rt_bins if steps is None else min(
+            pcfg.rt_bins, max(int(steps), 1)
+        )
+        rts = est.init_cumulative_state(n_obs, cbins)
+    else:
+        rts = est.init_return_time_state(n_obs, pcfg.rt_bins)
     return SimState(
         t=jnp.int32(0),
         walks=walks,
         last_seen=last_seen,
-        rts=est.init_return_time_state(n_obs, pcfg.rt_bins),
+        rts=rts,
         byz_state=jnp.asarray(fcfg.byz_start),
         key=k_run,
         theta_hist=jnp.zeros((n, tb), jnp.float32),
@@ -160,15 +183,63 @@ def _will_fuse(pcfg: prt.ProtocolConfig) -> bool:
     )
 
 
+def resolved_round_impl(pcfg: prt.ProtocolConfig) -> str:
+    """``round_impl`` with ``'auto'`` resolved for the current backend
+    (trace-time; honors the ``REPRO_ROUND_IMPL`` env override)."""
+    impl = pcfg.round_impl
+    if impl == "auto":
+        from repro.kernels.platform import best_round_impl
+
+        impl = best_round_impl()
+    return impl
+
+
+def _fused_round_backend() -> str:
+    from repro.kernels.platform import fused_round_backend
+
+    return fused_round_backend()
+
+
+def _will_fuse_round(pcfg: prt.ProtocolConfig) -> bool:
+    """Whether the trajectory takes the fused WHOLE-round path (movement
+    + topology + failures + observations + decisions in one dispatch) —
+    THE whole-round fuse predicate. ``init_state`` (carry representation)
+    and ``protocol_step`` (dispatch) both consume it, so the carry and
+    the step function agree by construction for every caller.
+
+    Gated to the configurations the fused round reproduces bitwise:
+    DECAFORK/DECAFORK+ with empirical survival and fixed thresholds, on
+    the estimator family the backend's fused round computes — the
+    gather family for the ref (incremental-CDF) round, the node-sum
+    family (compare/pallas/fused) for the whole-round Pallas kernel.
+    Everything else keeps the literal unfused sequence, which doubles as
+    the fused path's golden oracle (``round_impl="unfused"``).
+    """
+    if resolved_round_impl(pcfg) != "fused":
+        return False
+    if pcfg.algorithm not in ("decafork", "decafork+"):
+        return False
+    if pcfg.analytic_survival or pcfg.auto_eps:
+        return False
+    impl = resolved_estimator_impl(pcfg)
+    if _fused_round_backend() == "pallas":
+        return impl in ("compare", "pallas", "fused")
+    return impl == "gather"
+
+
 def observation_rows(n: int, pcfg: prt.ProtocolConfig) -> int:
     """Static row count of the observation-state arrays for a run.
 
-    On the fused path the node axis is padded up to the round kernel's
+    On the fused paths (observation-fused estimator, or the whole-round
+    Pallas kernel) the node axis is padded up to the round kernel's
     tile ONCE here, instead of pad+slice every round inside the scan (one
     observation-state copy per round saved whenever ``n`` is not
     tile-aligned); everywhere else it is just ``n``.
     """
-    if not _will_fuse(pcfg):
+    pad_for_kernel = _will_fuse(pcfg) or (
+        _will_fuse_round(pcfg) and _fused_round_backend() == "pallas"
+    )
+    if not pad_for_kernel:
         return n
     from repro.kernels.round_update import DEFAULT_BLOCK_NODES
 
@@ -198,7 +269,20 @@ def protocol_step(
     whole run — the trajectory scan passes its ``steps`` — letting the
     estimator trim the dead tail of the cumulative return-time table
     (bitwise-identical results; see ``estimator.theta_hat_rows``).
+
+    When ``_will_fuse_round(pcfg)`` holds, the round dispatches to the
+    fused whole-round implementation (``_protocol_step_fused``) — bitwise
+    the sequence below, verified by the whole-round golden tests. This
+    function body IS the unfused oracle (``round_impl="unfused"``).
     """
+    if _will_fuse_round(pcfg):
+        if pi is not None:
+            raise ValueError(
+                "the fused whole-round path does not take an analytic-"
+                "survival table; pass round_impl='unfused' (or a config "
+                "with analytic_survival=True, which never fuses)"
+            )
+        return _protocol_step_fused(state, pcfg, fcfg, neighbors, degrees, mirror)
     t = state.t
     key = state.key
     k_move = fold_in_time(key, t, 0)
@@ -345,10 +429,248 @@ def protocol_step(
     return new_state, out
 
 
-def _strip_obs_pad(state: SimState, n: int) -> SimState:
-    """Slice the pre-padded observation rows back to the graph's ``n``
-    (one slice per *run*, vs one pad+slice per round without carrying
-    padded state); a no-op when the run never padded."""
+def _protocol_step_fused(
+    state: SimState,
+    pcfg: prt.ProtocolConfig,
+    fcfg: flr.FailureConfig,
+    neighbors: jax.Array,
+    degrees: jax.Array,
+    mirror: jax.Array,
+):
+    """The fused whole-round implementation behind ``round_impl="fused"``.
+
+    Bitwise-identical to the unfused sequence in ``protocol_step`` (its
+    golden oracle) by construction: every PRNG stream is derived with the
+    exact same key folds, the failure/topology helpers are the same
+    functions, and each restructured stage is an exact-arithmetic
+    transform of its unfused counterpart —
+
+      * movement is row-restricted (``move_walks_rows`` over
+        ``availability_rows`` at the walks' own rows) — the rank-select
+        acts row-locally, so gathering first changes nothing;
+      * "choose one walk per node" is the (W, W) pairwise minimum
+        (``choose_walks_pairwise``) instead of an (n,)-scatter;
+      * on the ref backend (CPU/GPU) the return-time statistics are the
+        incrementally-carried cumulative table
+        (``CumulativeReturnState``): observation is a scatter-add of 0/1
+        step rows and theta reads prefix counts straight off the carry
+        (``theta_hat_cumulative``) — no per-round cumsum, which XLA CPU
+        lowers to a quadratic reduce-window and which dominated the
+        PR-4 round;
+      * on TPU the whole round (hop + topology + failures + observation
+        + decisions) is one node-tiled Pallas pass
+        (``kernels.round_update.whole_round_pallas``) with all uniforms
+        pre-drawn from the same streams.
+
+    Fork/terminate execution (slot machinery) stays outside in both
+    branches — it is walk-sized and shared with every other path.
+    """
+    t = state.t
+    key = state.key
+    k_move = fold_in_time(key, t, 0)
+    k_pfail = fold_in_time(key, t, 1)
+    k_burst = fold_in_time(key, t, 2)
+    k_byz = fold_in_time(key, t, 3)
+    k_dec = fold_in_time(key, t, 4)
+    k_topo = fold_in_time(key, t, 5)
+
+    ws = state.walks
+    W = ws.pos.shape[0]
+    n = degrees.shape[0]
+    n_before = jnp.sum(ws.active)
+    enabled = t >= pcfg.protocol_start
+
+    if _fused_round_backend() == "ref":
+        # 1. topology evolves; a crashing node kills its resident walks
+        gs = flr.step_topology(state.graph, t, fcfg, k_topo, neighbors, mirror)
+        ws = ws._replace(
+            active=flr.kill_resident_walks(ws.active, ws.pos, gs.node_up)
+        )
+
+        # 2. movement, row-restricted to the walks' own adjacency rows
+        u_move = jax.random.uniform(k_move, (W,))
+        avail_rows = availability_rows(
+            gs.edge_up[ws.pos], gs.node_up[ws.pos], gs.node_up,
+            neighbors[ws.pos], degrees[ws.pos],
+        )
+        ws = ws._replace(
+            pos=wlk.move_walks_rows(
+                ws, neighbors[ws.pos], u_move, avail_rows, degrees.dtype
+            )
+        )
+
+        # 3. walk-level threat models (same helpers, same keys)
+        active = flr.apply_probabilistic_failures(ws.active, t, fcfg, k_pfail)
+        active = flr.apply_burst_failures(active, t, fcfg, k_burst)
+        active, byz_state = flr.step_byzantine(
+            active, ws.pos, t, state.byz_state, fcfg, k_byz
+        )
+        active = flr.apply_pacman(active, ws.pos, t, fcfg)
+        ws = ws._replace(active=active)
+        n_failed = n_before - jnp.sum(active)
+
+        # 4. observations on the incremental cumulative carry
+        last_seen = state.last_seen
+        prev = last_seen[ws.pos, ws.track]
+        r = t - prev
+        valid = ws.active & (prev != est.NEVER) & (r >= 1)
+        upd = jnp.where(ws.active, t, est.NEVER)
+        rts = est.record_returns_cumulative(
+            state.rts, ws.pos, r, valid, pcfg.rt_bins
+        )
+        last_seen = last_seen.at[ws.pos, ws.track].max(upd, mode="drop")
+
+        # 5. estimation + decisions; no cumsum anywhere
+        chosen = prt.choose_walks_pairwise(ws.pos, ws.active)
+        theta = est.theta_hat_cumulative(
+            last_seen, rts, t, ws.pos, ws.track
+        )
+        fork_mask, term_mask = prt.decafork_decisions(
+            theta, chosen, k_dec, pcfg, enabled
+        )
+    else:
+        # TPU: one whole-round Pallas pass; pre-draw every uniform from
+        # the exact streams the unfused sequence consumes
+        from repro.kernels.round_update import whole_round_pallas
+
+        n_obs = state.last_seen.shape[0]
+        K = fcfg.n_bursts
+        u_move = jax.random.uniform(k_move, (W,))
+        u_pfail = jax.random.uniform(k_pfail, (W,))
+        if K:
+            u_burst = jnp.stack(
+                [
+                    jax.random.uniform(jax.random.fold_in(k_burst, i), (W,))
+                    for i in range(K)
+                ]
+            )
+            burst_sizes_eff = jnp.stack(
+                [
+                    jnp.where(t == fcfg.burst_times[i], fcfg.burst_sizes[i], 0)
+                    for i in range(K)
+                ]
+            ).astype(jnp.int32)
+        else:
+            u_burst = jnp.ones((1, W), jnp.float32)
+            burst_sizes_eff = jnp.zeros((1,), jnp.int32)
+        k_fork, k_term = jax.random.split(k_dec)
+        u_fork = jax.random.uniform(k_fork, (W,))
+        u_term = jax.random.uniform(k_term, (W,))
+        u_nfail, u_nrec, e_fail, e_rec = flr.topology_uniforms(
+            k_topo, neighbors, mirror
+        )
+        sched_down = flr.scheduled_crash_mask(n, t, fcfg)
+
+        # Byzantine chain advances outside (one scalar draw); the kernel
+        # only needs "which node kills this round" (-1: none)
+        byz_armed = (t >= fcfg.byz_start_time) & (fcfg.byzantine_node >= 0)
+        flip = (jax.random.uniform(k_byz, ()) < fcfg.p_byz) & byz_armed
+        byz_state = jnp.logical_xor(state.byz_state, flip)
+        byz_kill_node = jnp.where(
+            byz_state & byz_armed, fcfg.byzantine_node, -1
+        ).astype(jnp.int32)
+        pac_armed = (t >= fcfg.pacman_start_time) & (fcfg.pacman_node >= 0)
+        pac_node = jnp.where(pac_armed, fcfg.pacman_node, -1).astype(jnp.int32)
+
+        # start-gated rates fold the gate into the threshold (u in [0,1)
+        # is never < -1, so "not started" == rate -1)
+        p_fail_eff = jnp.where(t >= fcfg.p_fail_start, fcfg.p_fail, -1.0)
+        p_nf_eff = jnp.where(t >= fcfg.node_fail_start, fcfg.p_node_fail, -1.0)
+        p_lf_eff = jnp.where(t >= fcfg.link_fail_start, fcfg.p_link_fail, -1.0)
+
+        def _pad_nodes(x, fill):
+            pad = n_obs - x.shape[0]
+            if pad == 0:
+                return x
+            return jnp.concatenate(
+                [x, jnp.full((pad,) + x.shape[1:], fill, x.dtype)]
+            )
+
+        # pad rows stay down forever: node_up False, recovery uniform 1.0
+        outs = whole_round_pallas(
+            state.last_seen, state.rts.hist, state.rts.total,
+            _pad_nodes(state.graph.node_up, False),
+            _pad_nodes(state.graph.edge_up, False),
+            ws.pos, ws.track, ws.active,
+            neighbors[ws.pos], degrees[ws.pos],
+            state.graph.edge_up[ws.pos], e_fail[ws.pos], e_rec[ws.pos],
+            u_move, u_pfail, u_fork, u_term,
+            u_burst, burst_sizes_eff,
+            _pad_nodes(u_nfail, 1.0), _pad_nodes(u_nrec, 1.0),
+            _pad_nodes(sched_down, False),
+            _pad_nodes(e_fail, 1.0), _pad_nodes(e_rec, 1.0),
+            params_f=jnp.stack(
+                [
+                    jnp.asarray(p_fail_eff, jnp.float32),
+                    jnp.asarray(p_nf_eff, jnp.float32),
+                    jnp.asarray(p_lf_eff, jnp.float32),
+                    jnp.asarray(fcfg.p_node_recover, jnp.float32),
+                    jnp.asarray(fcfg.p_link_recover, jnp.float32),
+                    jnp.asarray(pcfg.eps, jnp.float32),
+                    jnp.asarray(pcfg.eps2, jnp.float32),
+                    jnp.asarray(pcfg.p, jnp.float32),
+                ]
+            )[None, :],
+            params_i=jnp.stack(
+                [
+                    jnp.asarray(t, jnp.int32),
+                    byz_kill_node,
+                    pac_node,
+                    enabled.astype(jnp.int32),
+                ]
+            )[None, :],
+            decafork_plus=pcfg.algorithm == "decafork+",
+        )
+        (last_seen, hist, tot, node_up_new, edge_up_new,
+         pos_new, act_new, theta, chosen, fork_mask, term_mask) = outs
+        gs = GraphState(node_up=node_up_new[:n], edge_up=edge_up_new[:n])
+        ws = ws._replace(pos=pos_new, active=act_new)
+        rts = est.ReturnTimeState(hist=hist, total=tot)
+        n_failed = n_before - jnp.sum(act_new)
+
+    # forks/terminations execute through the shared slot machinery
+    ws = wlk.execute_terminations(ws, term_mask)
+    n_terms = jnp.sum(term_mask)
+    ws, last_seen, n_forks, fork_parent = wlk.execute_forks(
+        ws, last_seen, fork_mask, ws.pos, None, t
+    )
+    theta_mean = jnp.sum(jnp.where(chosen, theta, 0.0)) / jnp.maximum(
+        jnp.sum(chosen), 1
+    )
+
+    new_state = SimState(
+        t=t + 1,
+        walks=ws,
+        last_seen=last_seen,
+        rts=rts,
+        byz_state=byz_state,
+        key=key,
+        theta_hist=state.theta_hist,
+        graph=gs,
+    )
+    out = StepOutputs(
+        z=jnp.sum(ws.active),
+        forks=n_forks,
+        terms=n_terms,
+        failures=n_failed,
+        theta_mean=theta_mean,
+        fork_parent=fork_parent,
+        terminated=term_mask,
+    )
+    return new_state, out
+
+
+def _strip_obs_pad(state: SimState, n: int, pcfg: prt.ProtocolConfig) -> SimState:
+    """Final-state normalization: slice the pre-padded observation rows
+    back to the graph's ``n`` (one slice per *run*, vs one pad+slice per
+    round without carrying padded state) and convert a cumulative
+    whole-round carry back to the public ``ReturnTimeState`` (exact
+    integer transform — see ``estimator.cumulative_to_return_time``), so
+    every consumer of a final state sees one representation."""
+    rts = state.rts
+    if isinstance(rts, est.CumulativeReturnState):
+        rts = est.cumulative_to_return_time(rts, pcfg.rt_bins)
+        state = state._replace(rts=rts)
     if state.last_seen.shape[0] == n:
         return state
     return state._replace(
@@ -396,7 +718,9 @@ def _run_core(
     ``((final SimState, final carry), (RecordedOutputs, payload_outputs))``.
     """
     n_obs = observation_rows(n, pcfg)
-    state = init_state(n, neighbors.shape[1], pcfg, fcfg, key, n_obs=n_obs)
+    state = init_state(
+        n, neighbors.shape[1], pcfg, fcfg, key, n_obs=n_obs, steps=steps
+    )
 
     if payload is None:
 
@@ -408,7 +732,7 @@ def _run_core(
             return s2, spec.select(out)
 
         final, recorded = jax.lax.scan(body, state, None, length=steps)
-        return _strip_obs_pad(final, n), recorded
+        return _strip_obs_pad(final, n, pcfg), recorded
 
     pcarry = payload.init(payload_init_key(key))
 
@@ -429,7 +753,7 @@ def _run_core(
     (final, pcarry), recorded = jax.lax.scan(
         body, (state, pcarry), None, length=steps
     )
-    return (_strip_obs_pad(final, n), pcarry), recorded
+    return (_strip_obs_pad(final, n, pcfg), pcarry), recorded
 
 
 # deliberately NO input donation on any entry point: the trajectory

@@ -88,6 +88,30 @@ def move_walks(
     return ws._replace(pos=jnp.where(can_move, nxt, ws.pos))
 
 
+def move_walks_rows(
+    ws: WalkState,
+    neighbors_rows: jax.Array,  # (W, D) = neighbors[ws.pos]
+    u: jax.Array,  # (W,) pre-drawn hop uniforms
+    avail_rows: jax.Array,  # (W, D) availability at each walk's node
+    count_dtype,
+) -> jax.Array:
+    """Row-restricted hop: ``move_walks`` on pre-gathered walk rows.
+
+    Takes the (W, D) adjacency and availability rows of the walks' own
+    nodes (instead of gathering from the (n, D) tables internally) plus
+    pre-drawn uniforms, and returns the new ``pos``. Bitwise-identical
+    to ``move_walks`` with ``avail`` built from the same masks: the
+    rank-select and the hold-position rule act row-locally, and
+    ``take_along_axis`` on the gathered rows reads the very same
+    entries as ``neighbors[pos, sel]``. This is the fused whole-round
+    hop — everything it needs is (W, D)-shaped and VMEM-friendly.
+    """
+    adeg, sel = select_available_edge(avail_rows, u, count_dtype)
+    nxt = jnp.take_along_axis(neighbors_rows, sel[:, None], axis=1)[:, 0]
+    can_move = ws.active & (adeg > 0)
+    return jnp.where(can_move, nxt, ws.pos)
+
+
 def execute_terminations(ws: WalkState, term: jax.Array) -> WalkState:
     return ws._replace(active=ws.active & ~term)
 

@@ -1,20 +1,27 @@
 """Pallas TPU kernels for the system's compute hot loops:
 
   round_update — the fused per-round observation pass (scatter + max-
-                 update + theta sums), ``estimator_impl="fused"``
+                 update + theta sums), ``estimator_impl="fused"``, and
+                 the whole-round kernel (``whole_round_pallas``: topology
+                 + hop + failures + observation + decisions in ONE pass),
+                 ``round_impl="fused"`` on TPU
   theta_survival — the standalone DECAFORK estimator sweep
   flash_attention — payload attention (causal + sliding-window, GQA)
   ssd_scan — Mamba-2 intra-chunk SSD block
 
 Each kernel has a pure-jnp oracle (``ref.py``, or the unfused reference
-sequence in ``round_update.round_update_ref``) and interpret-mode sweeps
-in tests/ — ``round_update`` is held to *bitwise* oracle equality.
+sequence in ``round_update.round_update_ref`` / the literal unfused
+round ``round_impl="unfused"``) and interpret-mode sweeps in tests/ —
+``round_update`` and ``whole_round_pallas`` are held to *bitwise* oracle
+equality. Implementation resolution (explicit config > ``"auto"`` >
+``REPRO_*_IMPL`` env > backend default) lives in ``kernels.platform``.
 """
 from repro.kernels.ops import attention_pallas, ssd_pallas, theta_sums_pallas
 from repro.kernels.round_update import (
     round_update,
     round_update_pallas,
     round_update_ref,
+    whole_round_pallas,
 )
 
 __all__ = [
@@ -24,4 +31,5 @@ __all__ = [
     "round_update",
     "round_update_pallas",
     "round_update_ref",
+    "whole_round_pallas",
 ]

@@ -7,6 +7,13 @@ drop-in replacements the model code selects via ``cfg.use_pallas``:
   theta_sums_pallas(...)              <-> kernels.ref.theta_sums_ref
   ssd_pallas(x, dt, a, b, c, chunk)   <-> ssm.ssd_chunked
 
+The round kernels (``round_update``, ``whole_round_pallas``) live in
+``kernels.round_update`` and are already jitted wrappers themselves; the
+simulator reaches them through its ``estimator_impl`` / ``round_impl``
+resolution (``kernels.platform.best_*``, honoring the
+``REPRO_ESTIMATOR_IMPL`` / ``REPRO_ROUND_IMPL`` env overrides) rather
+than through this module.
+
 ``interpret`` defaults are platform-aware everywhere (wrappers AND the
 underlying kernels): emulated on CPU, compiled on TPU — see
 ``kernels.platform.default_interpret``. Pass an explicit bool to override.

@@ -2,11 +2,37 @@
 
 Leaf module (no intra-package imports) so both ``kernels/ops.py`` and the
 kernel modules themselves can use it without an import cycle.
+
+Implementation resolution is layered: an explicit config value always
+wins; ``"auto"`` resolves through the ``best_*`` helpers here, which
+honor the ``REPRO_ESTIMATOR_IMPL`` / ``REPRO_ROUND_IMPL`` environment
+variables (validated — an unknown value raises) before falling back to
+the per-backend default. The env hooks let benchmarks, CI lanes, and bug
+reproductions force an implementation without editing configs.
 """
 from __future__ import annotations
 
+import os
+
 import jax
 import jax.numpy as jnp
+
+ESTIMATOR_IMPLS = ("gather", "compare", "pallas", "fused")
+ROUND_IMPLS = ("fused", "unfused")
+
+
+def _env_impl(var: str, allowed: tuple) -> str | None:
+    """Validated environment override: the value of ``var`` if set (must
+    be one of ``allowed`` — anything else raises so typos can't silently
+    run the wrong arm), else None."""
+    val = os.environ.get(var)
+    if val is None or val == "":
+        return None
+    if val not in allowed:
+        raise ValueError(
+            f"{var}={val!r} is not a valid override; expected one of {allowed}"
+        )
+    return val
 
 
 def default_interpret() -> bool:
@@ -17,14 +43,41 @@ def default_interpret() -> bool:
 def best_estimator_impl() -> str:
     """Best DECAFORK ``estimator_impl`` for the current backend.
 
-    TPU: the fused round kernel (``kernels/round_update.py``) — one
+    ``REPRO_ESTIMATOR_IMPL`` (if set, validated) wins. Otherwise — TPU:
+    the fused observation kernel (``kernels/round_update.py``) — one
     VMEM pass over node tiles, no full cumulative table, no gathers.
     CPU/GPU: the row-restricted gather path (``estimator.theta_hat_rows``)
     — gathers are cheap there and the per-round work is O(W*B), not
     O(n*W*B). ``ProtocolConfig(estimator_impl="auto")`` resolves through
     this at trace time.
     """
+    env = _env_impl("REPRO_ESTIMATOR_IMPL", ESTIMATOR_IMPLS)
+    if env is not None:
+        return env
     return "fused" if jax.default_backend() == "tpu" else "gather"
+
+
+def best_round_impl() -> str:
+    """Best whole-round implementation for the current backend.
+
+    ``REPRO_ROUND_IMPL`` (if set, validated) wins. Otherwise ``"fused"``
+    everywhere: the fused round is bitwise the unfused sequence by
+    construction (golden tests enforce it) and strictly cheaper — on
+    CPU it carries the cumulative return-time table incrementally
+    (no per-round cumsum), on TPU it is the whole-round Pallas kernel.
+    ``ProtocolConfig(round_impl="auto")`` resolves through this.
+    """
+    env = _env_impl("REPRO_ROUND_IMPL", ROUND_IMPLS)
+    if env is not None:
+        return env
+    return "fused"
+
+
+def fused_round_backend() -> str:
+    """How ``round_impl='fused'`` executes: the whole-round Pallas kernel
+    on TPU, the fused pure-jnp reference elsewhere (interpret-mode Pallas
+    inside a long scan would be pure overhead on CPU)."""
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
 
 
 def pad_node_axis(bn: int, last_seen, hist, total):
@@ -49,8 +102,9 @@ def pad_node_axis(bn: int, last_seen, hist, total):
     return last_seen, hist, total, pad
 
 
-def best_round_impl() -> str:
-    """Implementation backing ``estimator_impl='fused'``: the Pallas
-    kernel on TPU, the fused pure-jnp reference elsewhere (interpret-mode
-    Pallas inside a long scan would be pure overhead on CPU)."""
+def best_round_update_impl() -> str:
+    """Implementation backing ``estimator_impl='fused'`` (the PR-4
+    observation-pipeline kernel): the Pallas kernel on TPU, the fused
+    pure-jnp reference elsewhere (interpret-mode Pallas inside a long
+    scan would be pure overhead on CPU)."""
     return "pallas" if jax.default_backend() == "tpu" else "ref"

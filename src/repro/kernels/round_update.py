@@ -20,18 +20,33 @@ reduces the theta sums for its rows while they are still resident. The
 ``(bn, C, B)`` compare intermediate never leaves VMEM, and per-round HBM
 traffic drops to one read + one write of the observation state.
 
-Exactness contract: ``hist``/``total`` hold event *counts* (integer-valued
-f32, as ``record_returns`` maintains) and the walk weights are 0/1, so the
-one-hot matmul accumulates exactly the same floats as the reference
-scatter-adds; the max-updates are integer ops. The kernel is therefore
-*bitwise* equal to the unfused reference sequence — ``round_update_ref``
-(which literally IS that sequence, with ``estimator.node_sums_compare``
-as the sums oracle) — and is golden-tested as such, including node counts
-that are not a multiple of the tile (padded with masked "no data" rows).
+Exactness contract: ``hist``/``total`` hold event *counts* (int16/int32
+as ``record_returns`` maintains — per-bin counts are step-bounded, far
+below 32767; the f32 one-hot matmul accumulates exact small integers that
+cast back losslessly) and the walk weights are 0/1, so the kernel updates
+bitwise what the reference scatter-adds would; the max-updates are
+integer ops. The kernel is therefore *bitwise* equal to the unfused
+reference sequence — ``round_update_ref`` (which literally IS that
+sequence, with ``estimator.node_sums_compare`` as the sums oracle) — and
+is golden-tested as such, including node counts that are not a multiple
+of the tile (padded with masked "no data" rows). Both kernels are
+dtype-polymorphic (outputs follow the input carry), so the benchmark
+grid can still measure a float32 arm.
 
 ``round_update`` dispatches per backend (``kernels.platform``): the
 Pallas kernel on TPU, the fused-at-the-jnp-level reference elsewhere.
 The simulator selects this whole path with ``estimator_impl="fused"``.
+
+``whole_round_pallas`` extends the fusion to the ENTIRE round: one
+node-tiled two-phase pass performing the topology step, resident-walk
+kills, the masked rank-select hop, walk-level failures (probabilistic /
+burst / Byzantine / Pac-Man), the observation update above, AND the
+fork/terminate decision masks — everything between two scan carries
+except the walk-slot fork/terminate execution, which stays outside. All
+uniforms are pre-drawn by the caller from the exact PRNG streams the
+unfused sequence consumes (``core.simulator._protocol_step_fused``), so
+the kernel is deterministic data flow and bitwise-testable against the
+literal unfused round.
 """
 from __future__ import annotations
 
@@ -42,8 +57,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core import estimator as est
+from repro.core import protocol as prt
+from repro.core import walkers as wlk
 from repro.kernels.platform import (
-    best_round_impl,
+    best_round_update_impl,
     default_interpret,
     pad_node_axis,
 )
@@ -61,8 +78,8 @@ def random_round_inputs(key, n, C, B, W, t=70, p_active=0.8):
     upd, t)``, i.e. ``round_update``'s argument tuple."""
     ks = jax.random.split(key, 5)
     ls = jax.random.randint(ks[0], (n, C), -1, t, dtype=jnp.int32)
-    hist = jnp.floor(jax.random.uniform(ks[1], (n, B)) * 3).astype(jnp.float32)
-    total = hist.sum(1)
+    hist = jnp.floor(jax.random.uniform(ks[1], (n, B)) * 3).astype(jnp.int16)
+    total = hist.sum(1, dtype=jnp.int32)
     pos = jax.random.randint(ks[2], (W,), 0, n, dtype=jnp.int32)
     track = jax.random.randint(ks[3], (W,), 0, C, dtype=jnp.int32)
     active = jax.random.uniform(ks[4], (W,)) < p_active
@@ -96,8 +113,8 @@ def _round_kernel(
     w = w_ref[0, :]  # (W,) 0/1 observation weight
     upd = upd_ref[0, :]  # (W,) last-seen update value (NEVER if inactive)
     ls = ls_ref[...]  # (bn, C) int32
-    hist = hist_ref[...]  # (bn, B) f32
-    tot = tot_ref[...]  # (bn, 1) f32
+    hist = hist_ref[...]  # (bn, B) int16 counts (or f32 on the bench arm)
+    tot = tot_ref[...]  # (bn, 1) int32 counts (or f32 on the bench arm)
     bn, C = ls.shape
     B = hist.shape[1]
     W = pos.shape[0]
@@ -106,13 +123,16 @@ def _round_kernel(
     rows = jax.lax.broadcasted_iota(jnp.int32, (bn, W), 0) + base
     hit = rows == pos[None, :]  # (bn, W): walk j visits row i of this tile
 
-    # 1. return-time scatter as a one-hot contraction: counts are exact
-    #    integer-valued f32, so the matmul accumulates bitwise what the
-    #    reference scatter-adds would
+    # 1. return-time scatter as a one-hot contraction: the f32 matmul
+    #    accumulates exact small integers (counts are step-bounded, far
+    #    below 2**24), so the cast back to the carry dtype is lossless
+    #    and the result is bitwise the reference scatter-adds
     bin_iota = jax.lax.broadcasted_iota(jnp.int32, (W, B), 1)
     ev = jnp.where(bin_iota == rbin[:, None], w[:, None], 0.0)  # (W, B)
-    hist = hist + jnp.dot(hit.astype(jnp.float32), ev)
-    tot = tot + jnp.sum(jnp.where(hit, w[None, :], 0.0), axis=1, keepdims=True)
+    hist = hist + jnp.dot(hit.astype(jnp.float32), ev).astype(hist.dtype)
+    tot = tot + jnp.sum(
+        jnp.where(hit, w[None, :], 0.0), axis=1, keepdims=True
+    ).astype(tot.dtype)
 
     # 2. last-seen scatter-max at (pos[j], track[j]) <- upd[j]
     col_iota = jax.lax.broadcasted_iota(jnp.int32, (W, C), 1)
@@ -133,8 +153,8 @@ def _round_kernel(
 @functools.partial(jax.jit, static_argnames=("block_nodes", "interpret"))
 def round_update_pallas(
     last_seen: jax.Array,  # (n, C) int32
-    hist: jax.Array,  # (n, B) f32 counts
-    total: jax.Array,  # (n,) f32 counts
+    hist: jax.Array,  # (n, B) int16 counts (f32 bench arm also supported)
+    total: jax.Array,  # (n,) int32 counts (f32 bench arm also supported)
     pos: jax.Array,  # (W,) int32
     track: jax.Array,  # (W,) int32
     r: jax.Array,  # (W,) int32 observed return times (t - prev)
@@ -190,8 +210,8 @@ def round_update_pallas(
         ],
         out_shape=[
             jax.ShapeDtypeStruct((npad, C), last_seen.dtype),
-            jax.ShapeDtypeStruct((npad, B), jnp.float32),
-            jax.ShapeDtypeStruct((npad, 1), jnp.float32),
+            jax.ShapeDtypeStruct((npad, B), hist.dtype),
+            jax.ShapeDtypeStruct((npad, 1), total.dtype),
             jax.ShapeDtypeStruct((npad, 1), jnp.float32),
         ],
         interpret=interpret,
@@ -214,10 +234,10 @@ def round_update(
     *, impl: str | None = None,
 ):
     """Backend-dispatched fused round: ``impl=None`` resolves through
-    ``kernels.platform.best_round_impl`` ('pallas' on TPU, 'ref' on
-    CPU/GPU). Both implementations are bitwise-interchangeable."""
+    ``kernels.platform.best_round_update_impl`` ('pallas' on TPU, 'ref'
+    on CPU/GPU). Both implementations are bitwise-interchangeable."""
     if impl is None:
-        impl = best_round_impl()
+        impl = best_round_update_impl()
     if impl == "pallas":
         return round_update_pallas(
             last_seen, hist, total, pos, track, r, valid, upd, t
@@ -227,3 +247,363 @@ def round_update(
             last_seen, hist, total, pos, track, r, valid, upd, t
         )
     raise ValueError(f"unknown round impl {impl!r}; use 'pallas' or 'ref'")
+
+
+# ---------------------------------------------------------------------------
+# Whole-round kernel: topology + hop + failures + observations + decisions
+# ---------------------------------------------------------------------------
+
+
+def _whole_round_kernel(
+    decafork_plus,
+    # broadcast scalars
+    params_f_ref,  # (1, 8) f32: p_fail, p_nfail, p_lfail, p_nrec, p_lrec,
+    #                            eps, eps2, fork_prob (start-gates folded in)
+    params_i_ref,  # (1, 4) i32: t, byz_kill_node, pacman_node, enabled
+    # walk-level inputs (broadcast to every tile)
+    pos_ref, track_ref, act_ref,  # (1, W) i32 / i32 / bool
+    u_move_ref, u_pfail_ref, u_fork_ref, u_term_ref,  # (1, W) f32
+    deg_ref,  # (1, W) i32 degrees at the walks' pre-hop nodes
+    nbrw_ref, eupw_ref, efw_ref, erw_ref,  # (W, D) walk-row adjacency/masks
+    uburst_ref,  # (K', W) f32 per-burst score uniforms
+    bsz_ref,  # (1, K') i32 effective burst sizes (0 when not firing)
+    # node-level inputs
+    nodeup_ref, unfail_ref, unrec_ref, sched_ref,  # (1, N) full node axis
+    eup_ref, ef_ref, er_ref,  # (bn, D) edge tiles: mask + symmetrized u's
+    ls_ref, hist_ref, tot_ref,  # (bn, C) i32 / (bn, B) i16 / (bn, 1) i32
+    # outputs
+    ls_out, hist_out, tot_out,  # updated observation tiles
+    eup_out,  # (bn, D) updated edge tile
+    nodeup_out,  # (1, N) updated node mask (constant block)
+    pos_out, act_out,  # (1, W) post-hop / post-failure walk state
+    theta_out,  # (1, W) f32 theta-hat accumulator -> final theta
+    chosen_out, fork_out, term_out,  # (1, W) bool decision masks
+):
+    """Two-phase whole-round pass; grid = (2, num_tiles), phase-major.
+
+    Phase 0 advances the topology per tile and, in its first step, runs
+    the walk epilogue (resident kills, masked rank-select hop, walk-level
+    failures) on the full walk vectors, publishing ``pos_out``/``act_out``
+    for phase 1 to read. Phase 1 applies the observation update to each
+    tile (the PR-4 fused pipeline) and accumulates per-walk theta sums
+    into ``theta_out``; its last step computes the fork/terminate masks.
+    Output blocks with constant index maps persist across grid steps
+    (the standard Pallas accumulation idiom), which is what carries the
+    walk state and theta accumulator between phases. Tile-mapped outputs
+    are written in BOTH phases (topology recomputed, observation tiles
+    passed through in phase 0) so no revisited block holds stale data.
+    """
+    ph = pl.program_id(0)
+    i = pl.program_id(1)
+    pf = params_f_ref[0, :]
+    pint = params_i_ref[0, :]
+    t = pint[0]
+    byz_node = pint[1]
+    pac_node = pint[2]
+    enabled = pint[3] > 0
+    p_fail, p_nfail, p_lfail = pf[0], pf[1], pf[2]
+    p_nrec, p_lrec, eps, eps2, p_fork = pf[3], pf[4], pf[5], pf[6], pf[7]
+
+    # -- edge-tile topology update, recomputed in both phases so every
+    #    mapped output block is written on every grid step
+    eup = eup_ref[...]
+    fail = ef_ref[...] < p_lfail
+    rec = er_ref[...] < p_lrec
+    eup_out[...] = jnp.where(eup, ~fail, rec)
+
+    # the full updated node mask (cheap (N,) elementwise; the epilogue
+    # needs it for kills and for BOTH hop endpoints)
+    node_up = nodeup_ref[0, :]
+    crash = unfail_ref[0, :] < p_nfail
+    recov = unrec_ref[0, :] < p_nrec
+    sched = sched_ref[0, :]
+    node_new = jnp.where(node_up, ~(crash | sched), recov & ~sched)
+
+    @pl.when(ph == 0)
+    def _pass_through_obs():
+        ls_out[...] = ls_ref[...]
+        hist_out[...] = hist_ref[...]
+        tot_out[...] = tot_ref[...]
+
+    @pl.when((ph == 0) & (i == 0))
+    def _walk_epilogue():
+        nodeup_out[...] = node_new[None, :]
+        pos = pos_ref[0, :]
+        active = act_ref[0, :]
+        # resident kills at the pre-hop positions
+        active = active & node_new[pos]
+        # masked rank-select hop over the walks' own adjacency rows
+        nbr = nbrw_ref[...]
+        fail_w = efw_ref[...] < p_lfail
+        rec_w = erw_ref[...] < p_lrec
+        eup_new_w = jnp.where(eupw_ref[...], ~fail_w, rec_w)
+        deg = deg_ref[0, :]
+        within = (
+            jax.lax.broadcasted_iota(jnp.int32, nbr.shape, 1) < deg[:, None]
+        )
+        avail = within & eup_new_w & node_new[pos][:, None] & node_new[nbr]
+        adeg, sel = wlk.select_available_edge(
+            avail, u_move_ref[0, :], jnp.int32
+        )
+        nxt = jnp.take_along_axis(nbr, sel[:, None], axis=1)[:, 0]
+        pos = jnp.where(active & (adeg > 0), nxt, pos)
+        # walk-level threat models: probabilistic, bursts, Byz, Pac-Man
+        active = active & ~(u_pfail_ref[0, :] < p_fail)
+        for b in range(uburst_ref.shape[0]):
+            score = jnp.where(active, uburst_ref[b, :], jnp.inf)
+            rank = jnp.sum(score[:, None] > score[None, :], axis=1)
+            active = active & ~(rank < bsz_ref[0, b])
+        active = active & ~(pos == byz_node)  # -1 sentinels never match
+        active = active & ~(pos == pac_node)
+        pos_out[...] = pos[None, :]
+        act_out[...] = active[None, :]
+
+    @pl.when(ph == 1)
+    def _observe_and_decide():
+        pos = pos_out[0, :]
+        active = act_out[0, :]
+        track = track_ref[0, :]
+        ls = ls_ref[...]
+        hist = hist_ref[...]
+        tot = tot_ref[...]
+        bn, C = ls.shape
+        B = hist.shape[1]
+        W = pos.shape[0]
+        base = i * bn
+        rows = jax.lax.broadcasted_iota(jnp.int32, (bn, W), 0) + base
+        hit = rows == pos[None, :]
+        # prev = last_seen[pos, track]: a walk's row lives in exactly one
+        # tile, so the masked max over this tile IS the gather for the
+        # walks that land here (others see NEVER -> no contribution)
+        ls_track = jnp.take(ls, track, axis=1)  # (bn, W)
+        prev = jnp.max(jnp.where(hit, ls_track, NEVER), axis=0)
+        r = t - prev
+        valid = active & (prev != NEVER) & (r >= 1)
+        rbin = jnp.clip(r, 1, B) - 1
+        w8 = valid.astype(jnp.float32)
+        bin_iota = jax.lax.broadcasted_iota(jnp.int32, (W, B), 1)
+        ev = jnp.where(bin_iota == rbin[:, None], w8[:, None], 0.0)
+        hist = hist + jnp.dot(hit.astype(jnp.float32), ev).astype(hist.dtype)
+        tot = tot + jnp.sum(
+            jnp.where(hit, w8[None, :], 0.0), axis=1, keepdims=True
+        ).astype(tot.dtype)
+        upd = jnp.where(active, t, NEVER)
+        col_iota = jax.lax.broadcasted_iota(jnp.int32, (W, C), 1)
+        m = jnp.where(col_iota == track[:, None], upd[:, None], NEVER)
+        upd_rows = jnp.max(
+            jnp.where(hit[:, :, None], m[None, :, :], NEVER), axis=1
+        )
+        ls = jnp.maximum(ls, upd_rows)
+        ls_out[...] = ls
+        hist_out[...] = hist
+        tot_out[...] = tot
+        # per-walk theta contribution from this tile's node sums
+        sums = est.survival_node_sums_rows(ls, hist, tot[:, 0], t)
+        contrib = jnp.sum(jnp.where(hit, sums[:, None], 0.0), axis=0)
+        acc = jnp.where(i == 0, contrib, theta_out[0, :] + contrib)
+        theta_out[...] = acc[None, :]
+
+        @pl.when(i == pl.num_programs(1) - 1)
+        def _decide():
+            theta = acc - 0.5  # theta_hat_from_node_sums
+            theta_out[...] = theta[None, :]
+            chosen = prt.choose_walks_pairwise(pos, active)
+            fork = (
+                chosen & (theta < eps) & (u_fork_ref[0, :] < p_fork) & enabled
+            )
+            if decafork_plus:
+                term = (
+                    chosen
+                    & (theta > eps2)
+                    & (u_term_ref[0, :] < p_fork)
+                    & enabled
+                )
+                term = term & ~fork
+            else:
+                term = jnp.zeros_like(fork)
+            chosen_out[...] = chosen[None, :]
+            fork_out[...] = fork[None, :]
+            term_out[...] = term[None, :]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("decafork_plus", "block_nodes", "interpret"),
+)
+def whole_round_pallas(
+    last_seen: jax.Array,  # (n, C) int32
+    hist: jax.Array,  # (n, B) int16 counts
+    total: jax.Array,  # (n,) int32 counts
+    node_up: jax.Array,  # (n,) bool live-node mask (pre-round)
+    edge_up: jax.Array,  # (n, D) bool live-edge mask (pre-round)
+    pos: jax.Array,  # (W,) int32 pre-hop positions
+    track: jax.Array,  # (W,) int32
+    active: jax.Array,  # (W,) bool pre-round liveness
+    neighbors_rows: jax.Array,  # (W, D) = neighbors[pos]
+    degrees_rows: jax.Array,  # (W,) = degrees[pos]
+    edge_up_rows: jax.Array,  # (W, D) = edge_up[pos]
+    e_fail_rows: jax.Array,  # (W, D) symmetrized link-fail uniforms at pos
+    e_rec_rows: jax.Array,  # (W, D) symmetrized link-recovery uniforms
+    u_move: jax.Array,  # (W,) hop uniforms
+    u_pfail: jax.Array,  # (W,) probabilistic-failure uniforms
+    u_fork: jax.Array,  # (W,) fork-decision uniforms
+    u_term: jax.Array,  # (W,) terminate-decision uniforms
+    u_burst: jax.Array,  # (K', W) per-burst score uniforms
+    burst_sizes_eff: jax.Array,  # (K',) i32, 0 where the burst is not firing
+    u_nfail: jax.Array,  # (n,) node crash uniforms
+    u_nrec: jax.Array,  # (n,) node recovery uniforms
+    sched_down: jax.Array,  # (n,) bool scheduled-crash mask for this step
+    e_fail: jax.Array,  # (n, D) symmetrized link-fail uniforms, full table
+    e_rec: jax.Array,  # (n, D) symmetrized link-recovery uniforms
+    params_f: jax.Array,  # (1, 8) f32 — see _whole_round_kernel
+    params_i: jax.Array,  # (1, 4) i32 — see _whole_round_kernel
+    *,
+    decafork_plus: bool = False,
+    block_nodes: int = DEFAULT_BLOCK_NODES,
+    interpret: bool | None = None,
+):
+    """One whole simulator round as a single node-tiled Pallas pass.
+
+    Every random draw is made by the caller (from the exact PRNG streams
+    the unfused sequence consumes) and enters as data, so the kernel is
+    deterministic and bitwise-testable against the literal unfused round.
+    Start-gates are folded into effective rates/sentinels by the caller:
+    a rate of -1 never fires (uniforms live in [0, 1)), a node id of -1
+    never matches. Returns
+
+      ``(last_seen, hist, total, node_up, edge_up, pos, active, theta,
+      chosen, fork, term)``
+
+    — the updated observation state, the stepped topology masks, the
+    post-hop post-failure walk state, per-walk theta-hat, and the
+    decision masks for ``execute_forks`` / ``execute_terminations``
+    (which stay outside: they are walk-sized and shared with every other
+    path). ``n`` need not divide the tile; the node axis is padded with
+    masked rows no walk can reach and sliced off the outputs.
+    """
+    n, C = last_seen.shape
+    B = hist.shape[1]
+    W = pos.shape[0]
+    D = edge_up.shape[1]
+    K = u_burst.shape[0]
+    if interpret is None:
+        interpret = default_interpret()
+    bn = min(block_nodes, n)
+    last_seen, hist, total, pad = pad_node_axis(bn, last_seen, hist, total)
+    if pad:
+        node_up = jnp.concatenate([node_up, jnp.zeros((pad,), bool)])
+        edge_up = jnp.concatenate([edge_up, jnp.zeros((pad, D), bool)])
+        u_nfail = jnp.concatenate([u_nfail, jnp.ones((pad,), u_nfail.dtype)])
+        u_nrec = jnp.concatenate([u_nrec, jnp.ones((pad,), u_nrec.dtype)])
+        sched_down = jnp.concatenate([sched_down, jnp.zeros((pad,), bool)])
+        # pad edge-uniform rows with 1.0: never fails, never recovers
+        e_fail = jnp.concatenate(
+            [e_fail, jnp.ones((pad, D), e_fail.dtype)]
+        )
+        e_rec = jnp.concatenate([e_rec, jnp.ones((pad, D), e_rec.dtype)])
+    npad = n + pad
+    walk_spec = pl.BlockSpec((1, W), lambda p, i: (0, 0))
+    wd_spec = pl.BlockSpec((W, D), lambda p, i: (0, 0))
+    node_full_spec = pl.BlockSpec((1, npad), lambda p, i: (0, 0))
+    edge_tile_spec = pl.BlockSpec((bn, D), lambda p, i: (i, 0))
+    outs = pl.pallas_call(
+        functools.partial(_whole_round_kernel, decafork_plus),
+        grid=(2, npad // bn),
+        in_specs=[
+            pl.BlockSpec((1, 8), lambda p, i: (0, 0)),  # params_f
+            pl.BlockSpec((1, 4), lambda p, i: (0, 0)),  # params_i
+            walk_spec,  # pos
+            walk_spec,  # track
+            walk_spec,  # active
+            walk_spec,  # u_move
+            walk_spec,  # u_pfail
+            walk_spec,  # u_fork
+            walk_spec,  # u_term
+            walk_spec,  # degrees_rows
+            wd_spec,  # neighbors_rows
+            wd_spec,  # edge_up_rows
+            wd_spec,  # e_fail_rows
+            wd_spec,  # e_rec_rows
+            pl.BlockSpec((K, W), lambda p, i: (0, 0)),  # u_burst
+            pl.BlockSpec((1, K), lambda p, i: (0, 0)),  # burst_sizes_eff
+            node_full_spec,  # node_up
+            node_full_spec,  # u_nfail
+            node_full_spec,  # u_nrec
+            node_full_spec,  # sched_down
+            edge_tile_spec,  # edge_up tile
+            edge_tile_spec,  # e_fail tile
+            edge_tile_spec,  # e_rec tile
+            pl.BlockSpec((bn, C), lambda p, i: (i, 0)),  # last_seen tile
+            pl.BlockSpec((bn, B), lambda p, i: (i, 0)),  # hist tile
+            pl.BlockSpec((bn, 1), lambda p, i: (i, 0)),  # total tile
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, C), lambda p, i: (i, 0)),  # last_seen
+            pl.BlockSpec((bn, B), lambda p, i: (i, 0)),  # hist
+            pl.BlockSpec((bn, 1), lambda p, i: (i, 0)),  # total
+            edge_tile_spec,  # edge_up
+            node_full_spec,  # node_up
+            walk_spec,  # pos
+            walk_spec,  # active
+            walk_spec,  # theta
+            walk_spec,  # chosen
+            walk_spec,  # fork
+            walk_spec,  # term
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((npad, C), last_seen.dtype),
+            jax.ShapeDtypeStruct((npad, B), hist.dtype),
+            jax.ShapeDtypeStruct((npad, 1), total.dtype),
+            jax.ShapeDtypeStruct((npad, D), jnp.bool_),
+            jax.ShapeDtypeStruct((1, npad), jnp.bool_),
+            jax.ShapeDtypeStruct((1, W), pos.dtype),
+            jax.ShapeDtypeStruct((1, W), jnp.bool_),
+            jax.ShapeDtypeStruct((1, W), jnp.float32),
+            jax.ShapeDtypeStruct((1, W), jnp.bool_),
+            jax.ShapeDtypeStruct((1, W), jnp.bool_),
+            jax.ShapeDtypeStruct((1, W), jnp.bool_),
+        ],
+        interpret=interpret,
+    )(
+        params_f,
+        params_i,
+        pos[None, :],
+        track[None, :],
+        active[None, :],
+        u_move[None, :],
+        u_pfail[None, :],
+        u_fork[None, :],
+        u_term[None, :],
+        degrees_rows.astype(jnp.int32)[None, :],
+        neighbors_rows,
+        edge_up_rows,
+        e_fail_rows.astype(jnp.float32),
+        e_rec_rows.astype(jnp.float32),
+        u_burst,
+        burst_sizes_eff[None, :],
+        node_up[None, :],
+        u_nfail[None, :],
+        u_nrec[None, :],
+        sched_down[None, :],
+        edge_up,
+        e_fail,
+        e_rec,
+        last_seen,
+        hist,
+        total[:, None],
+    )
+    (ls_o, hist_o, tot_o, eup_o, nup_o, pos_o, act_o, theta_o,
+     chosen_o, fork_o, term_o) = outs
+    return (
+        ls_o[:n],
+        hist_o[:n],
+        tot_o[:n, 0],
+        nup_o[0, :n],
+        eup_o[:n],
+        pos_o[0],
+        act_o[0],
+        theta_o[0],
+        chosen_o[0],
+        fork_o[0],
+        term_o[0],
+    )

@@ -1,0 +1,377 @@
+"""Whole-round fusion (``round_impl="fused"``): bitwise oracle tests.
+
+The contract is *bitwise* (not allclose): one fused round — topology
+step, resident kills, masked rank-select hop, walk-level failures,
+observation update, theta and the fork/terminate decisions — must be
+freely interchangeable with the literal unfused sequence in
+``protocol_step`` (``round_impl="unfused"``, THE oracle), over whole
+multi-round trajectories, on shapes including node counts that are not
+a multiple of the Pallas tile, under partial GraphState masks (node and
+link churn), and on both execution backends of the fused round (the
+pure-jnp incremental-CDF reference and the whole-round Pallas kernel,
+exercised in interpret mode by pinning the backend).
+"""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import estimator as est
+from repro.core import failures as flr
+from repro.core import protocol as prt
+from repro.core import simulator as sim
+from repro.core.simulator import _graph_arrays, _run_core
+from repro.graphs.generators import erdos_renyi_graph, random_regular_graph
+from repro.kernels import platform
+
+KEY = jax.random.key(20)
+
+# every threat model at once: bursts, probabilistic kills, a Byzantine
+# chain, node/link churn (partial GraphState masks), a scheduled crash
+# and a Pac-Man node — the fused round must track the oracle through all
+CHURN = flr.FailureConfig(
+    burst_times=(10, 25), burst_sizes=(3, 2), p_fail=0.01,
+    byzantine_node=2, p_byz=0.05, byz_start_time=8,
+    p_node_fail=0.02, p_node_recover=0.3, node_fail_start=5,
+    p_link_fail=0.05, p_link_recover=0.4, link_fail_start=5,
+    pacman_node=4, pacman_start_time=20,
+    node_crash_times=(12,), node_crash_ids=(3,),
+)
+QUIET = flr.FailureConfig()  # full masks: the hop must equal the unmasked hop
+
+
+def _pcfg(alg, impl, round_impl, **kw):
+    return prt.ProtocolConfig(
+        algorithm=alg, z0=6, max_walks=16, rt_bins=64,
+        estimator_impl=impl, round_impl=round_impl, **kw
+    )
+
+
+def _trajectory(graph, pcfg, fcfg, steps=40, key=KEY):
+    nbr, deg, mir, pi = _graph_arrays(graph, pcfg)
+    return _run_core(key, nbr, deg, mir, pi, pcfg, fcfg, steps, graph.n)
+
+
+def _assert_trajectories_equal(got, want, label):
+    sf, tf = got
+    su, tu = want
+    for fld in tf._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(tf, fld)), np.asarray(getattr(tu, fld)),
+            err_msg=f"{label}: out.{fld}",
+        )
+    np.testing.assert_array_equal(
+        np.asarray(sf.last_seen), np.asarray(su.last_seen),
+        err_msg=f"{label}: last_seen",
+    )
+    for fld in ("hist", "total"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(sf.rts, fld)), np.asarray(getattr(su.rts, fld)),
+            err_msg=f"{label}: rts.{fld}",
+        )
+    for fld in ("pos", "active", "track"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(sf.walks, fld)),
+            np.asarray(getattr(su.walks, fld)),
+            err_msg=f"{label}: walks.{fld}",
+        )
+    for fld in ("node_up", "edge_up"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(sf.graph, fld)),
+            np.asarray(getattr(su.graph, fld)),
+            err_msg=f"{label}: graph.{fld}",
+        )
+
+
+# deliberately include n that are NOT multiples of the node tile (8).
+# The fast lane keeps the most adversarial graph (n=19, non-tile-multiple);
+# the remaining shapes ride the nightly full lane (each arm re-traces a
+# whole 40-round scan, ~25s apiece on CPU).
+GRAPHS = [
+    pytest.param(
+        "regular16", random_regular_graph(16, 4, seed=3),
+        marks=pytest.mark.slow,
+    ),
+    pytest.param("er19", erdos_renyi_graph(19, p=0.3, seed=7)),
+    pytest.param(
+        "er13", erdos_renyi_graph(13, p=0.4, seed=5),
+        marks=pytest.mark.slow,
+    ),
+]
+
+
+@pytest.mark.parametrize("alg", ["decafork", "decafork+"])
+@pytest.mark.parametrize("gname,graph", GRAPHS)
+def test_fused_ref_matches_unfused_trajectory(alg, gname, graph):
+    """The fused-ref round (incremental cumulative carry, row-restricted
+    hop, pairwise choose) == the unfused oracle, bitwise, through a full
+    churny trajectory."""
+    pcfg_f = _pcfg(alg, "gather", "fused")
+    pcfg_u = dataclasses.replace(pcfg_f, round_impl="unfused")
+    assert sim._will_fuse_round(pcfg_f)
+    assert not sim._will_fuse_round(pcfg_u)
+    key = jax.random.fold_in(KEY, graph.n)
+    _assert_trajectories_equal(
+        _trajectory(graph, pcfg_f, CHURN, key=key),
+        _trajectory(graph, pcfg_u, CHURN, key=key),
+        f"{alg}/{gname}",
+    )
+    # the public carry representation is identical too (int16 counts)
+    sf, _ = _trajectory(graph, pcfg_f, CHURN, key=key)
+    assert sf.rts.hist.dtype == jnp.int16
+    assert sf.rts.total.dtype == jnp.int32
+
+
+@pytest.mark.parametrize("alg", ["decafork", "decafork+"])
+def test_fused_ref_full_mask_noop_parity(alg):
+    """With every failure knob off the masks stay full and the fused hop
+    must be bitwise the unmasked hop — same walks, same observations."""
+    g = random_regular_graph(19, 4, seed=2)
+    pcfg_f = _pcfg(alg, "gather", "fused")
+    pcfg_u = dataclasses.replace(pcfg_f, round_impl="unfused")
+    got = _trajectory(g, pcfg_f, QUIET, steps=60)
+    want = _trajectory(g, pcfg_u, QUIET, steps=60)
+    _assert_trajectories_equal(got, want, f"{alg}/quiet")
+    # sanity: nothing ever went down
+    assert bool(jnp.all(got[0].graph.node_up))
+    assert bool(jnp.all(got[0].graph.edge_up))
+
+
+@pytest.mark.parametrize("alg", ["decafork", "decafork+"])
+@pytest.mark.parametrize("gname,graph", GRAPHS)
+def test_whole_round_pallas_matches_unfused_trajectory(
+    alg, gname, graph, monkeypatch
+):
+    """The whole-round Pallas kernel (interpret mode on CPU, pinned via
+    the backend hook) == the unfused oracle, bitwise, through a churny
+    trajectory — including non-tile-multiple n and partial masks."""
+    pcfg_f = _pcfg(alg, "compare", "fused")
+    pcfg_u = dataclasses.replace(pcfg_f, round_impl="unfused")
+    key = jax.random.fold_in(KEY, 100 + graph.n)
+    want = _trajectory(graph, pcfg_u, CHURN, key=key)
+    monkeypatch.setattr(platform, "fused_round_backend", lambda: "pallas")
+    assert sim._will_fuse_round(pcfg_f)
+    got = _trajectory(graph, pcfg_f, CHURN, key=key)
+    _assert_trajectories_equal(got, want, f"pallas/{alg}/{gname}")
+
+
+def test_whole_round_pallas_block_size_invariance():
+    """Tile size must not change a single bit of any kernel output
+    (padding rows are inert), on an n that no tested tile divides."""
+    from repro.kernels.round_update import whole_round_pallas
+
+    g = random_regular_graph(19, 4, seed=3)
+    n, D, W, C, B, K = 19, 4, 12, 12, 16, 2
+    ks = jax.random.split(jax.random.fold_in(KEY, 77), 20)
+    pos = jax.random.randint(ks[0], (W,), 0, n, dtype=jnp.int32)
+    neighbors = jnp.asarray(g.neighbors)
+    args = (
+        jax.random.randint(ks[1], (n, C), -1, 20, dtype=jnp.int32),  # ls
+        jax.random.randint(ks[2], (n, B), 0, 5, dtype=jnp.int16),  # hist
+        jax.random.randint(ks[3], (n,), 0, 50, dtype=jnp.int32),  # total
+        jax.random.bernoulli(ks[4], 0.9, (n,)),  # node_up
+        jax.random.bernoulli(ks[5], 0.9, (n, D)),  # edge_up
+        pos,
+        jnp.arange(W, dtype=jnp.int32),  # track
+        jax.random.bernoulli(ks[6], 0.8, (W,)),  # active
+        neighbors[pos],
+        jnp.asarray(g.degrees)[pos],
+        jax.random.bernoulli(ks[7], 0.9, (W, D)),  # edge_up_rows
+        jax.random.uniform(ks[8], (W, D)),  # e_fail_rows
+        jax.random.uniform(ks[9], (W, D)),  # e_rec_rows
+        jax.random.uniform(ks[10], (W,)),  # u_move
+        jax.random.uniform(ks[11], (W,)),  # u_pfail
+        jax.random.uniform(ks[12], (W,)),  # u_fork
+        jax.random.uniform(ks[13], (W,)),  # u_term
+        jax.random.uniform(ks[14], (K, W)),  # u_burst
+        jnp.asarray([2, 0], jnp.int32),  # burst_sizes_eff
+        jax.random.uniform(ks[15], (n,)),  # u_nfail
+        jax.random.uniform(ks[16], (n,)),  # u_nrec
+        jnp.zeros((n,), bool).at[3].set(True),  # sched_down
+        jax.random.uniform(ks[17], (n, D)),  # e_fail
+        jax.random.uniform(ks[18], (n, D)),  # e_rec
+    )
+    kw = dict(
+        params_f=jnp.asarray(
+            [[0.02, 0.03, 0.05, 0.3, 0.4, 2.0, 5.75, 0.2]], jnp.float32
+        ),
+        params_i=jnp.asarray([[17, 2, -1, 1]], jnp.int32),
+        decafork_plus=True,
+        interpret=True,
+    )
+    want = whole_round_pallas(*args, block_nodes=8, **kw)
+    for bn in (3, 19, 100):
+        got = whole_round_pallas(*args, block_nodes=bn, **kw)
+        for j, (a, b) in enumerate(zip(got, want)):
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b), err_msg=f"bn={bn}, out[{j}]"
+            )
+
+
+def test_choose_walks_pairwise_matches_scatter():
+    """The (W, W) pairwise choose == the (n,)-scatter choose, bitwise,
+    over randomized occupancy patterns (shared nodes, inactive slots)."""
+    for i in range(20):
+        k1, k2 = jax.random.split(jax.random.fold_in(KEY, i))
+        n, W = 11, 24
+        pos = jax.random.randint(k1, (W,), 0, n, dtype=jnp.int32)
+        active = jax.random.bernoulli(k2, 0.6, (W,))
+        np.testing.assert_array_equal(
+            np.asarray(prt.choose_walks_pairwise(pos, active)),
+            np.asarray(prt.choose_walks(pos, active, n)),
+            err_msg=f"case {i}",
+        )
+
+
+# ---------------------------------------------------------------------------
+# the incremental cumulative carry (the fused-ref round's estimator)
+# ---------------------------------------------------------------------------
+
+
+def test_cumulative_carry_matches_histogram_carry():
+    """record_returns_cumulative + cumulative_to_return_time == the
+    histogram-carry record_returns, and theta_hat_cumulative == the
+    gather path, bitwise, over random observation streams."""
+    n, B, W, C = 13, 24, 10, 10
+    rts = est.init_return_time_state(n, B)
+    cum = est.init_cumulative_state(n, B)
+    key = KEY
+    for step in range(30):
+        key, k1, k2, k3 = jax.random.split(key, 4)
+        nodes = jax.random.randint(k1, (W,), 0, n, dtype=jnp.int32)
+        r = jax.random.randint(k2, (W,), 1, B + 5, dtype=jnp.int32)
+        valid = jax.random.bernoulli(k3, 0.7, (W,))
+        rts = est.record_returns(rts, nodes, r, valid)
+        cum = est.record_returns_cumulative(cum, nodes, r, valid, B)
+    back = est.cumulative_to_return_time(cum, B)
+    np.testing.assert_array_equal(np.asarray(back.hist), np.asarray(rts.hist))
+    np.testing.assert_array_equal(
+        np.asarray(back.total), np.asarray(rts.total)
+    )
+    assert back.hist.dtype == rts.hist.dtype == jnp.int16
+    # theta agrees bitwise on random walk placements
+    key, k1, k2, k3 = jax.random.split(key, 4)
+    ls = jax.random.randint(k1, (n, C), -1, 25, dtype=jnp.int32)
+    pos = jax.random.randint(k2, (W,), 0, n, dtype=jnp.int32)
+    track = jax.random.randint(k3, (W,), 0, C, dtype=jnp.int32)
+    t = jnp.int32(25)
+    np.testing.assert_array_equal(
+        np.asarray(est.theta_hat_cumulative(ls, cum, t, pos, track)),
+        np.asarray(
+            est.theta_hat_rows(ls, rts.hist, rts.total, t, pos, track)
+        ),
+    )
+
+
+def test_cumulative_bin_trim_is_bitwise_neutral():
+    """Trimming the cumulative table to the step budget (init_state's
+    ``steps``) changes nothing: elapsed times never exceed t."""
+    g = random_regular_graph(16, 4, seed=3)
+    pcfg = _pcfg("decafork", "gather", "fused", protocol_start=5)
+    assert sim._will_fuse_round(pcfg)
+    nbr, deg, mir, pi = _graph_arrays(g, pcfg)
+    # steps=30 < rt_bins=64 -> the carry is trimmed to 30 bins
+    st, _ = _run_core(KEY, nbr, deg, mir, pi, pcfg, QUIET, 30, g.n)
+    st_u, _ = _run_core(
+        KEY, nbr, deg, mir, pi,
+        dataclasses.replace(pcfg, round_impl="unfused"), QUIET, 30, g.n,
+    )
+    assert st.rts.hist.shape == st_u.rts.hist.shape  # padded back to rt_bins
+    np.testing.assert_array_equal(
+        np.asarray(st.rts.hist), np.asarray(st_u.rts.hist)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(st.rts.total), np.asarray(st_u.rts.total)
+    )
+
+
+# ---------------------------------------------------------------------------
+# resolution layering: explicit config > auto > env override > default
+# ---------------------------------------------------------------------------
+
+
+def test_env_override_round_impl(monkeypatch):
+    monkeypatch.setenv("REPRO_ROUND_IMPL", "unfused")
+    assert platform.best_round_impl() == "unfused"
+    assert not sim._will_fuse_round(_pcfg("decafork", "gather", "auto"))
+    monkeypatch.setenv("REPRO_ROUND_IMPL", "fused")
+    assert platform.best_round_impl() == "fused"
+    assert sim._will_fuse_round(_pcfg("decafork", "gather", "auto"))
+    # explicit config wins over the env override
+    monkeypatch.setenv("REPRO_ROUND_IMPL", "fused")
+    assert sim.resolved_round_impl(
+        _pcfg("decafork", "gather", "unfused")
+    ) == "unfused"
+    monkeypatch.delenv("REPRO_ROUND_IMPL")
+    assert platform.best_round_impl() == "fused"  # backend default
+
+
+def test_env_override_estimator_impl(monkeypatch):
+    monkeypatch.setenv("REPRO_ESTIMATOR_IMPL", "compare")
+    assert platform.best_estimator_impl() == "compare"
+    assert sim.resolved_estimator_impl(
+        _pcfg("decafork", "auto", "unfused")
+    ) == "compare"
+    # explicit config wins
+    assert sim.resolved_estimator_impl(
+        _pcfg("decafork", "gather", "unfused")
+    ) == "gather"
+    monkeypatch.delenv("REPRO_ESTIMATOR_IMPL")
+    assert platform.best_estimator_impl() in ("gather", "fused")
+
+
+@pytest.mark.parametrize(
+    "var,val",
+    [("REPRO_ROUND_IMPL", "bogus"), ("REPRO_ESTIMATOR_IMPL", "bogus"),
+     ("REPRO_ROUND_IMPL", "auto")],  # 'auto' is a config value, not an env one
+)
+def test_env_override_invalid_values_raise(monkeypatch, var, val):
+    monkeypatch.setenv(var, val)
+    fn = (
+        platform.best_round_impl
+        if var == "REPRO_ROUND_IMPL"
+        else platform.best_estimator_impl
+    )
+    with pytest.raises(ValueError, match=var):
+        fn()
+
+
+def test_empty_env_override_is_unset(monkeypatch):
+    monkeypatch.setenv("REPRO_ROUND_IMPL", "")
+    assert platform.best_round_impl() == "fused"
+
+
+def test_round_impl_validated_in_config():
+    with pytest.raises(ValueError, match="round_impl"):
+        prt.ProtocolConfig(round_impl="bogus")
+
+
+def test_fuse_gate_excludes_unsupported_configs():
+    """Configurations outside the fused round's bitwise envelope keep the
+    literal unfused sequence."""
+    assert not sim._will_fuse_round(_pcfg("missingperson", "gather", "fused"))
+    assert not sim._will_fuse_round(_pcfg("none", "gather", "fused"))
+    assert not sim._will_fuse_round(
+        _pcfg("decafork", "gather", "fused", auto_eps=True)
+    )
+    assert not sim._will_fuse_round(
+        _pcfg("decafork", "gather", "fused", analytic_survival=True)
+    )
+    # ref backend fuses the gather family only
+    if platform.fused_round_backend() == "ref":
+        assert not sim._will_fuse_round(_pcfg("decafork", "compare", "fused"))
+        assert sim._will_fuse_round(_pcfg("decafork", "gather", "fused"))
+
+
+def test_fused_path_rejects_analytic_pi():
+    g = random_regular_graph(16, 4, seed=3)
+    pcfg = _pcfg("decafork", "gather", "fused")
+    nbr, deg, mir, _ = _graph_arrays(g, pcfg)
+    state = sim.init_state(g.n, nbr.shape[1], pcfg, QUIET, KEY)
+    with pytest.raises(ValueError, match="analytic"):
+        sim.protocol_step(
+            state, pcfg, QUIET, nbr, deg, mir, jnp.ones((g.n,)) / g.n
+        )

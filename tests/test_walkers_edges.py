@@ -113,3 +113,64 @@ def test_forks_execute_inside_jit_and_vmap():
     n, z = jax.jit(jax.vmap(fork_once))(jax.random.split(jax.random.key(0), 3))
     np.testing.assert_array_equal(np.asarray(n), [2, 2, 2])
     np.testing.assert_array_equal(np.asarray(z), [5, 5, 5])
+
+
+# ---------------------------------------------------------------------------
+# masked movement edge cases (the fused round's hop shares these paths)
+# ---------------------------------------------------------------------------
+
+
+def test_walk_holds_position_when_every_incident_edge_is_down():
+    """A walk on a node whose incident edges are ALL down must hold
+    position (not teleport, not die) — on both hop implementations."""
+    # a triangle: every node has degree 2
+    neighbors = jnp.asarray([[1, 2], [0, 2], [0, 1]], jnp.int32)
+    degrees = jnp.asarray([2, 2, 2], jnp.int32)
+    ws = _state([0, 1], [True, True])
+    avail = jnp.asarray(
+        [[False, False], [True, True], [True, True]]
+    )  # node 0 isolated
+    key = jax.random.key(3)
+    moved = wlk.move_walks(ws, neighbors, degrees, key, avail)
+    assert int(moved.pos[0]) == 0  # stranded walk held position
+    assert int(moved.pos[1]) in (0, 2)  # free walk moved
+    # row-restricted variant agrees bitwise (same uniforms)
+    u = jax.random.uniform(key, (2,))
+    got = wlk.move_walks_rows(
+        ws, neighbors[ws.pos], u, avail[ws.pos], degrees.dtype
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(moved.pos))
+
+
+def test_select_available_edge_zero_count_rank_select():
+    """adeg == 0 rows: the returned count is 0 (callers hold position);
+    the selected index stays in-bounds garbage, never out of range."""
+    row_mask = jnp.asarray(
+        [[False, False, False], [True, False, True], [False, True, False]]
+    )
+    u = jnp.asarray([0.99, 0.99, 0.0])
+    adeg, sel = wlk.select_available_edge(row_mask, u, jnp.int32)
+    np.testing.assert_array_equal(np.asarray(adeg), [0, 2, 1])
+    assert 0 <= int(sel[0]) < 3  # garbage but in-bounds
+    assert int(sel[1]) == 2  # u=0.99 over 2 available -> rank 1 -> slot 2
+    assert int(sel[2]) == 1  # u=0.0 -> rank 0 -> the only available slot
+
+
+def test_degree_one_node_under_link_churn():
+    """A walk on a degree-1 node: moves over its single edge while the
+    link is up, holds position while it is down, resumes after recovery
+    — the fused and unfused hops agree at every phase."""
+    # path graph 0 - 1 - 2; node 0 has degree 1 (padded slot at col 1)
+    neighbors = jnp.asarray([[1, 0], [0, 2], [1, 0]], jnp.int32)
+    degrees = jnp.asarray([1, 2, 1], jnp.int32)
+    ws = _state([0], [True])
+    key = jax.random.key(9)
+    u = jax.random.uniform(key, (1,))
+    for edge_up, want in [(True, 1), (False, 0), (True, 1)]:
+        avail = jnp.asarray([[edge_up, False], [edge_up, True], [True, False]])
+        moved = wlk.move_walks(ws, neighbors, degrees, key, avail)
+        assert int(moved.pos[0]) == want, f"edge_up={edge_up}"
+        got = wlk.move_walks_rows(
+            ws, neighbors[ws.pos], u, avail[ws.pos], degrees.dtype
+        )
+        assert int(got[0]) == want, f"rows, edge_up={edge_up}"
