@@ -1,0 +1,129 @@
+"""Fig. 9 (beyond-paper): the zoo — attacks x defenses cross-product.
+
+The resilience story as a grid: every walk-variant *defense* in
+``repro.zoo.variants`` against every adversary in ``repro.zoo.attacks``,
+on the two-community graph whose id boundary is exactly what the
+``edge_cut`` attack severs. The whole grid is declared through the
+registered ``"zoo"`` experiment builder (``Experiment.from_config``) and
+runs through one Plan: the sweep engine compiles ONE program per static
+group (walk variant x attack statics x schedule widths), and
+``Plan.round_decisions`` records how each group executes its rounds —
+fused or stage-sequence fallback, with the reason — so the result file
+documents not just the numbers but the programs that produced them.
+
+Qualitative expectations the grid exhibits:
+
+  * ``none``          — every defense holds Z near Z0 (sanity row);
+  * ``mobile_pacman`` — a hopping absorber bleeds walks everywhere; the
+    self-regulation (forking) has to outpace it;
+  * ``multi_pacman``  — one absorber per community doubles the drain;
+  * ``edge_cut``      — the partition strands walks; ``jump`` teleports
+    across the cut while ``uniform`` cannot re-mix.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import (
+    EPS2_DFKP, EPS_DFKP, FULL, MAX_WALKS, Z0, save_result,
+)
+from repro.api import Experiment
+
+N = 64
+STEPS = 4500 if FULL else 1200
+SEEDS = 16 if FULL else 4
+PROTO_START = 1000 if FULL else 200
+ATTACK_AT = PROTO_START + (STEPS - PROTO_START) // 3
+HALF = N // 2
+
+DEFENSES = ("uniform", "jump", "biased", "bloom")
+ATTACKS = (
+    ("none", {}),
+    ("mobile_pacman", {"node": 0, "hop_prob": 0.5, "start": ATTACK_AT}),
+    ("multi_pacman", {"nodes": (0, HALF), "start": ATTACK_AT}),
+    ("edge_cut", {"time": ATTACK_AT, "threshold": HALF}),
+)
+
+
+def experiment() -> Experiment:
+    """The grid as one declarative, registry-named experiment."""
+    return Experiment.from_config({
+        "experiment": "zoo",
+        "n": N,
+        "graph_seed": 0,
+        "graph_kwargs": {"k_bridges": 2},
+        "steps": STEPS,
+        "protocol": {
+            "algorithm": "decafork+", "z0": Z0, "eps": EPS_DFKP,
+            "eps2": EPS2_DFKP, "max_walks": MAX_WALKS,
+            "protocol_start": PROTO_START, "rt_bins": 1024,
+        },
+        "defenses": DEFENSES,
+        "attacks": ATTACKS,
+        "name": "fig9_zoo",
+    })
+
+
+def run(verbose: bool = True):
+    exp = experiment()
+    plan = exp.plan()
+    names = [s.name for s in exp.scenarios]
+    groups = plan.groups()
+    decisions = [
+        {
+            "scenarios": [names[i] for i in idxs],
+            "impl": dec.impl,
+            "backend": dec.backend,
+            "reason": dec.reason,
+        }
+        for _sig, idxs, dec in plan.round_decisions()
+    ]
+
+    t0 = time.time()
+    res = plan.sweep(seeds=SEEDS)
+    zs = [np.asarray(o.z) for o in res.outputs]  # blocks until done
+    wall = time.time() - t0
+    us = wall * 1e6 / (STEPS * SEEDS * len(names))
+
+    rows = []
+    for name, z, o in zip(res.names, zs, res.outputs):
+        post = z[:, PROTO_START:]
+        row = {
+            "name": f"fig9/{name}",
+            "us_per_call": us,
+            "mean_z_post": float(post.mean()),
+            "mean_abs_dev": float(np.abs(post - Z0).mean()),
+            "min_z_post": int(post.min()),
+            "max_z": int(z.max()),
+            "survival_rate": float((z > 0).all(1).mean()),
+            "forks": int(np.asarray(o.forks).sum()),
+            "terms": int(np.asarray(o.terms).sum()),
+        }
+        rows.append(row)
+        if verbose:
+            print(
+                f"fig9/{name},{us:.2f},"
+                f"meanZ={row['mean_z_post']:.1f}|dev={row['mean_abs_dev']:.2f}"
+                f"|minZ={row['min_z_post']}|surv={row['survival_rate']:.2f}"
+            )
+    save_result(
+        "fig9_zoo",
+        rows,
+        extra={
+            "grid": {
+                "defenses": list(DEFENSES),
+                "attacks": [a for a, _ in ATTACKS],
+                "n": N, "steps": STEPS, "seeds": SEEDS,
+                "graph": "community", "attack_at": ATTACK_AT,
+            },
+            "compile_groups": len(groups),
+            "round_decisions": decisions,
+        },
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    run()

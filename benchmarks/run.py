@@ -30,6 +30,7 @@ from benchmarks import (
     fig6_graphs,
     fig7_topology,
     fig8_learning,
+    fig9_zoo,
     kernel_theta,
     theory_bounds,
 )
@@ -43,6 +44,7 @@ BENCHES = {
     "fig6": fig6_graphs.run,
     "fig7": fig7_topology.run,
     "fig8": fig8_learning.run,
+    "fig9": fig9_zoo.run,
     "theory": theory_bounds.run,
     "kernel_theta": kernel_theta.run,
     "auto_eps": auto_eps.run,
@@ -217,6 +219,41 @@ def smoke() -> None:
                 err_msg=f"shim drift: run_scenarios[{name}].{f}",
             )
 
+    # --- zoo default-variant bitwise tripwire ----------------------------
+    # the zoo's neutral row — uniform defense, every zoo knob explicit at
+    # its neutral value — must be bitwise the plain config: the variant
+    # dispatch and the attack machinery cost the default program nothing
+    from repro.zoo import defense, zoo_scenarios
+
+    plain_p = ProtocolConfig(
+        algorithm="decafork", z0=4, max_walks=8, eps=1.4,
+        protocol_start=15, rt_bins=32,
+    )
+    zoo_p = dataclasses.replace(
+        plain_p, **defense("uniform"),
+        walk_variant="uniform", p_jump=0.0, bias_p=1.0, bias_q=1.0,
+    )
+    zoo_f = dataclasses.replace(
+        churn, pacman_nodes=(), pacman_mobile=False,
+        edge_cut_times=(), edge_cut_thresholds=(),
+    )
+    plain_out = Experiment(
+        graph=g, protocol=plain_p, failures=churn, steps=60, outputs="full"
+    ).ensemble(2, base_key=5)
+    zoo_out = Experiment(
+        graph=g, protocol=zoo_p, failures=zoo_f, steps=60, outputs="full"
+    ).ensemble(2, base_key=5)
+    for name, a, b in zip(zoo_out._fields, zoo_out, plain_out):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b),
+            err_msg=f"zoo neutral row drift: {name}",
+        )
+    # and the grid helper stays wired: a defense|attack row is buildable
+    # and carries the expected statics
+    [row] = zoo_scenarios(["jump"], [("edge_cut", {"time": 30, "threshold": 9})],
+                          base_protocol=plain_p)
+    assert row.pcfg.walk_variant == "jump" and row.fcfg.n_edge_cuts == 1
+
     # --- service coalescing bitwise tripwire -----------------------------
     # two callers sharing one static structure coalesce into one batch,
     # and each caller's rows stay bitwise what a private sweep returns
@@ -239,8 +276,8 @@ def smoke() -> None:
             )
 
     print("SMOKE ok: estimator impls agree (round bitwise, trajectories); "
-          "legacy shims bitwise == Experiment API; coalesced service == "
-          "sequential sweep bitwise")
+          "zoo neutral row bitwise == plain config; legacy shims bitwise == "
+          "Experiment API; coalesced service == sequential sweep bitwise")
 
 
 def main() -> None:

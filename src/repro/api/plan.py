@@ -81,23 +81,26 @@ def plan_signature(
     max_deg: int,
     steps: int,
     pcfg,
-    schedule_lens: Tuple[int, int],
+    schedule_lens: Tuple[int, ...],
     payload,
     spec,
     pspec,
+    fcfg_static: tuple = (),
 ) -> tuple:
     """Hashable static signature of one compiled program.
 
     Two runs share an executable iff their signatures match: program
     shape comes from the protocol's static fields (algorithm /
-    estimator_impl / max_walks / rt_bins / ...), the pytree structure of
-    ``fork_prob`` (None vs value), the padded failure-schedule lengths,
-    the payload's :func:`payload_key` (a stable config tuple when the
-    payload declares ``signature()``, the identity-hashed object
-    otherwise), the output specs and the graph/trajectory dimensions.
-    Traced numeric leaves (eps grids, rates, schedules, topology knobs)
-    deliberately do NOT appear — they batch and re-run without
-    recompiling.
+    estimator_impl / max_walks / rt_bins / walk_variant / ...), the
+    pytree structure of ``fork_prob`` (None vs value), the padded
+    failure-schedule lengths (bursts, node crashes, extra Pac-Man ids,
+    edge cuts), the failure config's static aux fields
+    (``pacman_mobile`` — it changes the scan carry), the payload's
+    :func:`payload_key` (a stable config tuple when the payload declares
+    ``signature()``, the identity-hashed object otherwise), the output
+    specs and the graph/trajectory dimensions. Traced numeric leaves
+    (eps grids, rates, schedules, topology knobs) deliberately do NOT
+    appear — they batch and re-run without recompiling.
     """
     return (
         mode,
@@ -110,6 +113,7 @@ def plan_signature(
         payload_key(payload),
         spec,
         pspec,
+        tuple(fcfg_static),
     )
 
 
@@ -165,6 +169,13 @@ def clear_cache() -> None:
 
 def _as_key(key) -> jax.Array:
     return jax.random.key(key) if isinstance(key, int) else key
+
+
+def _schedule_lens(fcfg) -> tuple:
+    """The shape-bearing failure-schedule lengths, in signature order."""
+    return (
+        fcfg.n_bursts, fcfg.n_node_crashes, fcfg.n_pacman, fcfg.n_edge_cuts
+    )
 
 
 class Plan:
@@ -230,10 +241,11 @@ class Plan:
             )
         return self._pi_cache
 
-    def _signature(self, mode, pcfg, schedule_lens):
+    def _signature(self, mode, pcfg, schedule_lens, fcfg=None):
         return plan_signature(
             mode, self.n, self.max_deg, self.steps, pcfg,
             schedule_lens, self.payload, self.spec, self.pspec,
+            fcfg_static=() if fcfg is None else fcfg.static_fields,
         )
 
     def _require_base(self, what: str):
@@ -252,7 +264,7 @@ class Plan:
         (with a payload: ``((state, payload carry), (RecordedOutputs,
         payload outputs))``)."""
         pcfg, fcfg = self._require_base("run")
-        sig = self._signature("run", pcfg, (fcfg.n_bursts, fcfg.n_node_crashes))
+        sig = self._signature("run", pcfg, _schedule_lens(fcfg), fcfg)
         return executable("run", sig)(
             _as_key(key), self.neighbors, self.degrees, self.mirror,
             self._pi(pcfg), pcfg, fcfg,
@@ -264,9 +276,7 @@ class Plan:
         """vmap over seeds: outputs with a leading ``(seeds,)`` axis."""
         pcfg, fcfg = self._require_base("ensemble")
         keys = jax.random.split(_as_key(base_key), seeds)
-        sig = self._signature(
-            "ensemble", pcfg, (fcfg.n_bursts, fcfg.n_node_crashes)
-        )
+        sig = self._signature("ensemble", pcfg, _schedule_lens(fcfg), fcfg)
         return executable("ensemble", sig)(
             keys, self.neighbors, self.degrees, self.mirror,
             self._pi(pcfg), pcfg, fcfg,
@@ -309,8 +319,10 @@ class Plan:
         lens = (
             int(jnp.shape(fcfgs.burst_times)[-1]),
             int(jnp.shape(fcfgs.node_crash_times)[-1]),
+            int(jnp.shape(fcfgs.pacman_nodes)[-1]),
+            int(jnp.shape(fcfgs.edge_cut_times)[-1]),
         )
-        sig = self._signature("sweep", pcfg0, lens)
+        sig = self._signature("sweep", pcfg0, lens, fcfgs)
 
         from repro.api.store import ResultStore
 
@@ -380,6 +392,36 @@ class Plan:
         return SweepResult(names=names, outputs=results, payloads=payloads)
 
     # -- introspection -----------------------------------------------------
+
+    def round_decisions(self, scenarios: Sequence | None = None) -> list:
+        """How each compile group executes its rounds — with the reason.
+
+        Returns ``[(signature, indices, RoundDecision)]`` over the given
+        (or the Experiment's) scenario list; for a base-only plan (no
+        scenario rows) a single entry with ``signature=None`` and
+        ``indices=[0]``. The :class:`~repro.core.simulator.RoundDecision`
+        carries ``impl`` (``'fused'``/``'unfused'``), the fused backend,
+        and the ``reason`` string — the observability hook for configs
+        that silently fall back to the stage sequence (zoo walk variants,
+        attack statics outside a kernel's support). The decision is made
+        on the group's PADDED schedule widths, exactly as the compiled
+        program sees them: a cut-free scenario co-batched with an
+        edge-cut scenario shares its group's fallback.
+        """
+        from repro.core.failures import pad_bursts
+        from repro.core.simulator import round_impl_decision
+        from repro.sweep.scenario import as_pair
+
+        if scenarios is None and not self.experiment.scenarios:
+            pcfg, fcfg = self._require_base("round_decisions")
+            return [(None, [0], round_impl_decision(pcfg, fcfg))]
+        scenarios = self._scenarios(scenarios, "round_decisions")
+        out = []
+        for sig, idxs in self.groups(scenarios):
+            pairs = [as_pair(scenarios[i]) for i in idxs]
+            fcfgs = pad_bursts([f for _, f in pairs])
+            out.append((sig, idxs, round_impl_decision(pairs[0][0], fcfgs[0])))
+        return out
 
     def groups(self, scenarios: Sequence | None = None) -> list:
         """The static-signature grouping: ``[(signature, [indices])]``

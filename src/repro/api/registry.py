@@ -54,10 +54,22 @@ def get(name: str) -> Callable:
     try:
         return _REGISTRY[name]
     except KeyError:
-        raise KeyError(
-            f"unknown experiment {name!r}; registered experiments: "
-            f"{sorted(_REGISTRY)}"
-        ) from None
+        pass
+    # optional subsystems register their builders on import; pull them in
+    # lazily so ``repro.api`` never hard-depends on them at import time
+    import importlib
+
+    for mod in ("repro.zoo",):
+        try:
+            importlib.import_module(mod)
+        except ImportError:  # pragma: no cover - subsystem absent
+            continue
+        if name in _REGISTRY:
+            return _REGISTRY[name]
+    raise KeyError(
+        f"unknown experiment {name!r}; registered experiments: "
+        f"{sorted(_REGISTRY)}"
+    ) from None
 
 
 def names() -> tuple:

@@ -14,21 +14,31 @@ regimes, arXiv:2504.09792):
   5) link failures: each undirected edge independently fails w.p.
      ``p_link_fail`` per step and recovers w.p. ``p_link_recover``;
   6) Pac-Man: one adversarial node silently absorbs every visiting walk
-     (unlike the Byzantine chain it never flips back to honesty).
+     (unlike the Byzantine chain it never flips back to honesty);
+  7) zoo attacks (``repro.zoo``): *multiple* simultaneous Pac-Man nodes
+     (``pacman_nodes``, a shape-bearing id array), a *mobile* Pac-Man
+     whose position hops each round (``pacman_mobile`` — the hopping
+     position is traced scan state, see ``step_mobile_pacman``), and
+     scheduled *partition cuts* (``edge_cut_times``/``edge_cut_thresholds``
+     — at the scheduled step every edge crossing the node-id threshold
+     goes down at once, splitting the graph into two components).
 
-Models 4-6 act on :class:`repro.graphs.state.GraphState`, the live
-topology masks carried through the simulator's scan (``step_topology``);
-1-3 act directly on walk liveness.
+Models 4-7 act on :class:`repro.graphs.state.GraphState`, the live
+topology masks carried through the simulator's scan (``step_topology``),
+or on positions carried alongside it; 1-3 act directly on walk liveness.
 
-``FailureConfig`` is a registered jax pytree whose fields are all *traced
-numeric leaves*: rates, times and node ids are jax-traceable values, so
-many failure regimes batch under ``jax.vmap`` and share one compiled
-program (the sweep engine, ``repro.sweep``). Only the number of scheduled
-bursts / node crashes is shape-determining — configs with different
-schedule lengths have different pytree structures (pad with ``pad_bursts``
-to co-batch them). Every model below is branch-free on traced values: a
-disabled mechanism (rate 0, node -1, no schedule entries) is a numeric
-no-op on the same program.
+``FailureConfig`` is a registered jax pytree whose fields are almost all
+*traced numeric leaves*: rates, times and node ids are jax-traceable
+values, so many failure regimes batch under ``jax.vmap`` and share one
+compiled program (the sweep engine, ``repro.sweep``). Shape-determining
+exceptions: the number of scheduled bursts / node crashes / Pac-Man ids /
+edge cuts (configs with different schedule lengths have different pytree
+structures — pad with ``pad_bursts`` to co-batch them) and the single
+static aux field ``pacman_mobile`` (it decides whether the simulator
+carries Pac-Man positions in its scan state, i.e. program structure).
+Every model below is branch-free on traced values: a disabled mechanism
+(rate 0, node -1, no schedule entries) is a numeric no-op on the same
+program.
 """
 from __future__ import annotations
 
@@ -80,13 +90,26 @@ class FailureConfig:
     link_fail_start: int | jax.Array = 0  # i.i.d. link failures begin here
     pacman_node: int | jax.Array = -1  # silently absorbs visitors (-1 off)
     pacman_start_time: int | jax.Array = 0  # node honest before this step
+    # ---- zoo attacks (repro.zoo): multi / mobile Pac-Man, partition cuts
+    pacman_nodes: Tuple[int, ...] | jax.Array = ()  # extra Pac-Men (-1 off)
+    pacman_hop_prob: float | jax.Array = 1.0  # mobile: hop rate per step
+    edge_cut_times: Tuple[int, ...] | jax.Array = ()  # scheduled cuts (-1 off)
+    edge_cut_thresholds: Tuple[int, ...] | jax.Array = ()  # node-id boundary
+    # STATIC aux field (program structure, not a traced leaf): when True
+    # every armed Pac-Man position becomes scan state hopping each round
+    pacman_mobile: bool = False
 
     def __post_init__(self):
         if _static_len(self.burst_times) != _static_len(self.burst_sizes):
             raise ValueError("burst_times and burst_sizes must align")
         if _static_len(self.node_crash_times) != _static_len(self.node_crash_ids):
             raise ValueError("node_crash_times and node_crash_ids must align")
-        for f in ("burst_times", "burst_sizes", "node_crash_times", "node_crash_ids"):
+        if _static_len(self.edge_cut_times) != _static_len(self.edge_cut_thresholds):
+            raise ValueError("edge_cut_times and edge_cut_thresholds must align")
+        for f in (
+            "burst_times", "burst_sizes", "node_crash_times", "node_crash_ids",
+            "pacman_nodes", "edge_cut_times", "edge_cut_thresholds",
+        ):
             v = getattr(self, f)
             if isinstance(v, (tuple, list)):
                 object.__setattr__(
@@ -103,11 +126,31 @@ class FailureConfig:
         """Static scheduled-crash count (shape-bearing)."""
         return _static_len(self.node_crash_times)
 
+    @property
+    def n_pacman(self) -> int:
+        """Static extra-Pac-Man slot count (shape-bearing)."""
+        return _static_len(self.pacman_nodes)
+
+    @property
+    def n_edge_cuts(self) -> int:
+        """Static scheduled-edge-cut count (shape-bearing)."""
+        return _static_len(self.edge_cut_times)
+
+    @property
+    def static_fields(self) -> tuple:
+        """The hashable program-shape signature of this config (the aux
+        part only; shape-bearing schedule lengths are reconciled by
+        ``pad_bursts`` and tracked separately by the sweep grouping)."""
+        return tuple(getattr(self, f) for f in _FAILURE_META)
+
     # value-based eq/hash: the generated dataclass versions would raise on
     # the (K,) burst arrays; concrete configs stay usable in sets/dicts
     # (traced configs raise, as any tracer-hash must)
     def _canonical(self) -> tuple:
-        return tuple(_canonical_leaf(getattr(self, f)) for f in _FAILURE_LEAVES)
+        return tuple(
+            _canonical_leaf(getattr(self, f))
+            for f in _FAILURE_DATA + _FAILURE_META
+        )
 
     def __eq__(self, other):
         if not isinstance(other, FailureConfig):
@@ -118,18 +161,29 @@ class FailureConfig:
         return hash(self._canonical())
 
 
-_FAILURE_LEAVES = tuple(f.name for f in dataclasses.fields(FailureConfig))
+# static aux fields (program structure, hashed into compile-group keys);
+# everything else is a traced (vmap-batchable) data leaf
+_FAILURE_META = ("pacman_mobile",)
+_FAILURE_DATA = tuple(
+    f.name
+    for f in dataclasses.fields(FailureConfig)
+    if f.name not in _FAILURE_META
+)
 
 
 def _failure_flatten(cfg: FailureConfig):
-    return tuple(getattr(cfg, f) for f in _FAILURE_LEAVES), None
+    data = tuple(getattr(cfg, f) for f in _FAILURE_DATA)
+    aux = tuple(getattr(cfg, f) for f in _FAILURE_META)
+    return data, aux
 
 
-def _failure_unflatten(_aux, children) -> FailureConfig:
+def _failure_unflatten(aux, children) -> FailureConfig:
     # bypass __init__/__post_init__: jax may unflatten with placeholder
     # leaves (tracers, avals, bare object()), which must round-trip as-is
     cfg = object.__new__(FailureConfig)
-    for f, v in zip(_FAILURE_LEAVES, children):
+    for f, v in zip(_FAILURE_DATA, children):
+        object.__setattr__(cfg, f, v)
+    for f, v in zip(_FAILURE_META, aux):
         object.__setattr__(cfg, f, v)
     return cfg
 
@@ -239,8 +293,14 @@ def apply_topology(
     u_nrec: jax.Array,  # (n,) node recovery uniforms
     e_fail: jax.Array,  # (n, D) symmetrized link-fail uniforms
     e_rec: jax.Array,  # (n, D) symmetrized link-recovery uniforms
+    cut_down: jax.Array | None = None,  # (n, D) from edge_cut_mask
 ):
-    """Pure mask update given pre-drawn uniforms (see ``step_topology``)."""
+    """Pure mask update given pre-drawn uniforms (see ``step_topology``).
+
+    ``cut_down`` (when configs schedule edge cuts) forces those edge
+    slots down this step and blocks their recovery draw; None keeps the
+    pre-zoo program unchanged.
+    """
     from repro.graphs.state import GraphState
 
     crash = (u_nfail < cfg.p_node_fail) & (t >= cfg.node_fail_start)
@@ -250,7 +310,10 @@ def apply_topology(
     )
     fail = (e_fail < cfg.p_link_fail) & (t >= cfg.link_fail_start)
     rec = e_rec < cfg.p_link_recover
-    edge_up = jnp.where(gs.edge_up, ~fail, rec)
+    if cut_down is None:
+        edge_up = jnp.where(gs.edge_up, ~fail, rec)
+    else:
+        edge_up = jnp.where(gs.edge_up, ~(fail | cut_down), rec & ~cut_down)
     return GraphState(node_up=node_up, edge_up=edge_up)
 
 
@@ -282,8 +345,10 @@ def step_topology(
     n = neighbors.shape[0]
     u_nfail, u_nrec, e_fail, e_rec = topology_uniforms(key, neighbors, mirror)
     sched_down = scheduled_crash_mask(n, t, cfg)
+    cut_down = edge_cut_mask(neighbors, t, cfg) if cfg.n_edge_cuts else None
     return apply_topology(
-        gs, t, cfg, sched_down, u_nfail, u_nrec, e_fail, e_rec
+        gs, t, cfg, sched_down, u_nfail, u_nrec, e_fail, e_rec,
+        cut_down=cut_down,
     )
 
 
@@ -294,29 +359,124 @@ def kill_resident_walks(
     return active & node_up[pos]
 
 
+def initial_pacman_positions(cfg: FailureConfig) -> jax.Array:
+    """(1+K,) int32 — the primary ``pacman_node`` followed by the extra
+    ``pacman_nodes``. These are the initial positions a ``pacman_mobile``
+    run carries through the scan (``step_mobile_pacman`` advances them);
+    -1 entries are disarmed and never move or absorb."""
+    head = jnp.asarray(cfg.pacman_node, jnp.int32).reshape((1,))
+    if cfg.n_pacman == 0:
+        return head
+    extra = jnp.asarray(cfg.pacman_nodes, jnp.int32).reshape((-1,))
+    return jnp.concatenate([head, extra])
+
+
 def apply_pacman(
-    active: jax.Array, pos: jax.Array, t: jax.Array, cfg: FailureConfig
+    active: jax.Array,
+    pos: jax.Array,
+    t: jax.Array,
+    cfg: FailureConfig,
+    pac_pos: jax.Array | None = None,
 ) -> jax.Array:
     """Pac-Man (arXiv:2508.05663): the adversarial node silently absorbs
     every walk that steps onto it — deterministically, with no recovery
     phase (contrast ``step_byzantine``'s 2-state chain). ``pacman_node``
     of -1 disarms it as a numeric no-op on the same compiled program.
+
+    Zoo extensions: with extra ``pacman_nodes`` configured, every armed
+    position absorbs simultaneously; a mobile run passes the carried
+    ``pac_pos`` positions instead of the config's static ones.
     """
-    armed = (t >= cfg.pacman_start_time) & (cfg.pacman_node >= 0)
-    kill = active & armed & (pos == cfg.pacman_node)
+    if pac_pos is None and cfg.n_pacman == 0:
+        # singleton static path — the pre-zoo program, bit for bit
+        armed = (t >= cfg.pacman_start_time) & (cfg.pacman_node >= 0)
+        kill = active & armed & (pos == cfg.pacman_node)
+        return active & ~kill
+    pac = initial_pacman_positions(cfg) if pac_pos is None else pac_pos
+    hit = ((pos[:, None] == pac[None, :]) & (pac[None, :] >= 0)).any(axis=1)
+    kill = active & (t >= cfg.pacman_start_time) & hit
     return active & ~kill
+
+
+def step_mobile_pacman(
+    pac_pos: jax.Array,  # (P,) int32 current Pac-Man positions (-1 off)
+    t: jax.Array,
+    cfg: FailureConfig,
+    key: jax.Array,
+    neighbors: jax.Array,
+    degrees: jax.Array,
+    avail: jax.Array | None = None,
+) -> jax.Array:
+    """Hop each armed Pac-Man to a uniform *available* neighbor w.p.
+    ``pacman_hop_prob`` per step (mobile Pac-Man, after Chen et al.'s
+    moving-adversary regime).
+
+    Samples with the same rank-select primitive as walk movement
+    (``select_available_edge``) over the live availability mask, so a
+    mobile Pac-Man respects downed links exactly like a walk does. Hops
+    begin at ``pacman_start_time`` — before that (and wherever the
+    position is -1 or the node has no live incident edge) it holds.
+    Draws consume a dedicated key, never perturbing other streams.
+    """
+    from repro.core.walkers import select_available_edge
+
+    P = pac_pos.shape[0]
+    n, D = neighbors.shape
+    k_hop, k_gate = jax.random.split(key)
+    u = jax.random.uniform(k_hop, (P,))
+    gate = jax.random.uniform(k_gate, (P,)) < cfg.pacman_hop_prob
+    safe = jnp.clip(pac_pos, 0, n - 1)  # -1 rows gather garbage, masked below
+    if avail is None:
+        row_mask = (
+            jnp.arange(D, dtype=degrees.dtype)[None, :] < degrees[safe, None]
+        )
+    else:
+        row_mask = avail[safe]
+    adeg, sel = select_available_edge(row_mask, u, degrees.dtype)
+    nxt = neighbors[safe, sel]
+    can_move = (
+        gate & (pac_pos >= 0) & (adeg > 0) & (t >= cfg.pacman_start_time)
+    )
+    return jnp.where(can_move, nxt, pac_pos)
+
+
+def edge_cut_mask(
+    neighbors: jax.Array, t: jax.Array, cfg: FailureConfig
+) -> jax.Array:
+    """(n, D) bool — directed edge slots severed by a scheduled cut at ``t``.
+
+    At ``edge_cut_times[i]`` every edge whose endpoints straddle
+    ``edge_cut_thresholds[i]`` (node id < thr vs >= thr) goes down at
+    once, partitioning the graph along the id boundary — the correlated
+    failure regime that motivates the jump-walk defense. Time -1 /
+    threshold -1 never fire (the padding encoding). The mask is symmetric
+    by construction (``u < thr != v < thr`` is symmetric in u, v). Cut
+    edges stay down unless ``p_link_recover`` later revives them.
+    """
+    n, D = neighbors.shape
+    ids = jnp.arange(n, dtype=jnp.int32)
+    down = jnp.zeros((n, D), bool)
+    for i in range(cfg.n_edge_cuts):
+        thr = cfg.edge_cut_thresholds[i]
+        fire = (t == cfg.edge_cut_times[i]) & (thr >= 0)
+        cross = (ids[:, None] < thr) != (neighbors < thr)
+        down = down | (cross & fire)
+    return down
 
 
 def pad_bursts(cfgs):
     """Pad a list of FailureConfigs to common schedule lengths.
 
-    Covers both shape-bearing schedules — walk bursts and scheduled node
-    crashes. Padding entries use time -1 (never fires); the returned
-    configs share one pytree structure and therefore stack into a single
-    scenario batch.
+    Covers every shape-bearing schedule — walk bursts, scheduled node
+    crashes, extra Pac-Man ids, and scheduled edge cuts. Padding entries
+    use time/id/threshold -1 (never fires); the returned configs share
+    one pytree structure and therefore stack into a single scenario
+    batch.
     """
     kb_max = max((c.n_bursts for c in cfgs), default=0)
     kc_max = max((c.n_node_crashes for c in cfgs), default=0)
+    kp_max = max((c.n_pacman for c in cfgs), default=0)
+    ke_max = max((c.n_edge_cuts for c in cfgs), default=0)
 
     def _pad_field(v, k, k_max, fill):
         if k == k_max:
@@ -325,7 +485,12 @@ def pad_bursts(cfgs):
         return jnp.concatenate([jnp.asarray(v, jnp.int32).reshape((k,)), pad])
 
     def _pad(c: FailureConfig) -> FailureConfig:
-        if c.n_bursts == kb_max and c.n_node_crashes == kc_max:
+        if (
+            c.n_bursts == kb_max
+            and c.n_node_crashes == kc_max
+            and c.n_pacman == kp_max
+            and c.n_edge_cuts == ke_max
+        ):
             return c
         return dataclasses.replace(
             c,
@@ -336,6 +501,13 @@ def pad_bursts(cfgs):
             ),
             node_crash_ids=_pad_field(
                 c.node_crash_ids, c.n_node_crashes, kc_max, -1
+            ),
+            pacman_nodes=_pad_field(c.pacman_nodes, c.n_pacman, kp_max, -1),
+            edge_cut_times=_pad_field(
+                c.edge_cut_times, c.n_edge_cuts, ke_max, -1
+            ),
+            edge_cut_thresholds=_pad_field(
+                c.edge_cut_thresholds, c.n_edge_cuts, ke_max, -1
             ),
         )
 

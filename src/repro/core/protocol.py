@@ -43,6 +43,9 @@ _PROTOCOL_DATA = (
     "eps_quantile",
     "eps2_quantile",
     "auto_min_samples",
+    "p_jump",
+    "bias_p",
+    "bias_q",
 )
 # shape/branch-determining fields (pytree aux data, static under jit)
 _PROTOCOL_META = (
@@ -54,9 +57,22 @@ _PROTOCOL_META = (
     "auto_eps",
     "theta_bin_width",
     "round_impl",
+    "walk_variant",
+    "bloom_bits",
 )
 
 ROUND_IMPLS = ("auto", "fused", "unfused")
+
+# movement strategies (repro.zoo.variants implements the non-uniform ones):
+#   'uniform' — the paper's walk, a uniform available neighbor (default;
+#       compiles the identical pre-zoo program);
+#   'jump'    — w.p. p_jump teleport to a uniform up-node (Liu et al.,
+#       random walks with jumps — escapes partitions and slow mixing);
+#   'biased'  — node2vec-style p/q second-order walk (needs the walk's
+#       previous position, carried as a WalkState column);
+#   'bloom'   — self-avoiding walk with a per-walk Bloom-filter history
+#       (fixed bloom_bits bit array; forked with the slot).
+WALK_VARIANTS = ("uniform", "jump", "biased", "bloom")
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -94,6 +110,12 @@ class ProtocolConfig:
     # sequence — the bitwise oracle) | 'auto' (best per backend,
     # REPRO_ROUND_IMPL env override honored). Static (program shape).
     round_impl: str = "auto"
+    # ---- zoo walk variants (repro.zoo): movement strategy ---------------
+    walk_variant: str = "uniform"  # see WALK_VARIANTS; static (program)
+    p_jump: float | jax.Array = 0.0  # 'jump': teleport prob per step
+    bias_p: float | jax.Array = 1.0  # 'biased': return parameter p
+    bias_q: float | jax.Array = 1.0  # 'biased': in-out parameter q
+    bloom_bits: int = 64  # 'bloom': per-walk filter width, static
 
     def __post_init__(self):
         if self.algorithm not in ALGORITHMS:
@@ -102,6 +124,11 @@ class ProtocolConfig:
             raise ValueError(
                 f"unknown round_impl {self.round_impl!r}; "
                 f"expected one of {ROUND_IMPLS}"
+            )
+        if self.walk_variant not in WALK_VARIANTS:
+            raise ValueError(
+                f"unknown walk_variant {self.walk_variant!r}; "
+                f"expected one of {WALK_VARIANTS}"
             )
         # traced z0 values defer this check to the caller (sweep stacks
         # validate statically before batching)

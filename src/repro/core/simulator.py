@@ -97,6 +97,11 @@ class SimState(NamedTuple):
     key: jax.Array
     theta_hist: jax.Array  # (n, TB) warmup theta-hat histogram (auto_eps)
     graph: GraphState  # live topology masks (node_up, edge_up)
+    # (1+K,) mobile Pac-Man positions when fcfg.pacman_mobile (a static
+    # field, so the carry structure is a trace-time constant); None — an
+    # empty pytree subtree — otherwise, leaving the default program's
+    # scan carry structurally unchanged
+    pacman_pos: jax.Array | None = None
 
 
 def init_state(
@@ -124,6 +129,12 @@ def init_state(
     W = pcfg.max_walks
     k_init, k_run = jax.random.split(key)
     walks = wlk.init_walks(pcfg.z0, W, n, k_init)
+    if pcfg.walk_variant != "uniform":
+        # function-level import: the zoo package loads only when a
+        # non-default variant actually runs (no import cycle either way)
+        from repro.zoo.variants import init_variant_state
+
+        walks = init_variant_state(walks, pcfg)
     if pcfg.algorithm == "missingperson":
         if n_obs != n:
             raise ValueError("missingperson does not pad observation state")
@@ -140,7 +151,7 @@ def init_state(
             jnp.where(walks.active, 0, est.NEVER)
         )
     tb = _theta_bins(pcfg)
-    if _will_fuse_round(pcfg) and _fused_round_backend() == "ref":
+    if _will_fuse_round(pcfg, fcfg) and _fused_round_backend() == "ref":
         cbins = pcfg.rt_bins if steps is None else min(
             pcfg.rt_bins, max(int(steps), 1)
         )
@@ -156,6 +167,9 @@ def init_state(
         key=k_run,
         theta_hist=jnp.zeros((n, tb), jnp.float32),
         graph=init_graph_state(n, max_deg),
+        pacman_pos=(
+            flr.initial_pacman_positions(fcfg) if fcfg.pacman_mobile else None
+        ),
     )
 
 
@@ -200,34 +214,111 @@ def _fused_round_backend() -> str:
     return fused_round_backend()
 
 
-def _will_fuse_round(pcfg: prt.ProtocolConfig) -> bool:
-    """Whether the trajectory takes the fused WHOLE-round path (movement
-    + topology + failures + observations + decisions in one dispatch) —
-    THE whole-round fuse predicate. ``init_state`` (carry representation)
-    and ``protocol_step`` (dispatch) both consume it, so the carry and
-    the step function agree by construction for every caller.
+class RoundDecision(NamedTuple):
+    """Trace-time record of how one scenario's round will execute.
+
+    ``impl`` is ``'fused'`` or ``'unfused'``; ``backend`` names the fused
+    round flavor (``'ref'``/``'pallas'``) when fused, else None; and
+    ``reason`` says WHY — which gate sent an intended-fused config back
+    to the stage sequence. ``Plan.round_decisions()`` surfaces this per
+    compile group, so a silently-degraded config is one call away from
+    explaining itself.
+    """
+
+    impl: str
+    backend: str | None
+    reason: str
+
+    @property
+    def fused(self) -> bool:
+        return self.impl == "fused"
+
+
+def round_impl_decision(
+    pcfg: prt.ProtocolConfig, fcfg: flr.FailureConfig | None = None
+) -> RoundDecision:
+    """Resolve how a (protocol, failure) config pair executes its rounds —
+    THE whole-round fuse predicate, with the fallback reason attached.
+    ``init_state`` (carry representation) and ``protocol_step``
+    (dispatch) both consume it, so the carry and the step function agree
+    by construction for every caller.
 
     Gated to the configurations the fused round reproduces bitwise:
     DECAFORK/DECAFORK+ with empirical survival and fixed thresholds, on
     the estimator family the backend's fused round computes — the
     gather family for the ref (incremental-CDF) round, the node-sum
     family (compare/pallas/fused) for the whole-round Pallas kernel.
-    Everything else keeps the literal unfused sequence, which doubles as
-    the fused path's golden oracle (``round_impl="unfused"``).
+    Zoo configs narrow this further: non-uniform walk variants always
+    take the stage sequence, and the Pallas whole-round kernel (unlike
+    the ref round, which shares the jnp failure helpers) does not fuse
+    multi/mobile Pac-Man or scheduled edge cuts. Everything else keeps
+    the literal unfused sequence, which doubles as the fused path's
+    golden oracle (``round_impl="unfused"``).
+
+    ``fcfg=None`` means "no zoo attack statics" (the pre-zoo call shape).
     """
-    if resolved_round_impl(pcfg) != "fused":
-        return False
+
+    def unfused(reason: str) -> RoundDecision:
+        return RoundDecision("unfused", None, reason)
+
+    impl = resolved_round_impl(pcfg)
+    if impl != "fused":
+        return unfused(f"round_impl resolved to {impl!r}")
     if pcfg.algorithm not in ("decafork", "decafork+"):
-        return False
-    if pcfg.analytic_survival or pcfg.auto_eps:
-        return False
-    impl = resolved_estimator_impl(pcfg)
-    if _fused_round_backend() == "pallas":
-        return impl in ("compare", "pallas", "fused")
-    return impl == "gather"
+        return unfused(f"algorithm {pcfg.algorithm!r} has no fused round")
+    if pcfg.analytic_survival:
+        return unfused("analytic_survival only runs the stage sequence")
+    if pcfg.auto_eps:
+        return unfused("auto_eps thresholds only run the stage sequence")
+    eimpl = resolved_estimator_impl(pcfg)
+    backend = _fused_round_backend()
+    if backend == "pallas":
+        if eimpl not in ("compare", "pallas", "fused"):
+            return unfused(
+                f"estimator_impl {eimpl!r} is outside the pallas fused "
+                "round's node-sum family"
+            )
+    elif eimpl != "gather":
+        return unfused(
+            f"estimator_impl {eimpl!r} is outside the ref fused round's "
+            "gather family"
+        )
+    if pcfg.walk_variant != "uniform":
+        return unfused(
+            f"walk_variant {pcfg.walk_variant!r} has no fused round"
+        )
+    if fcfg is not None and backend == "pallas":
+        if fcfg.pacman_mobile:
+            return unfused(
+                "mobile Pac-Man is not in the pallas whole-round kernel"
+            )
+        if fcfg.n_pacman:
+            return unfused(
+                "multiple Pac-Man nodes are not in the pallas whole-round "
+                "kernel"
+            )
+        if fcfg.n_edge_cuts:
+            return unfused(
+                "scheduled edge cuts are not in the pallas whole-round "
+                "kernel"
+            )
+    return RoundDecision(
+        "fused", backend, f"all stages supported by the {backend} fused round"
+    )
 
 
-def observation_rows(n: int, pcfg: prt.ProtocolConfig) -> int:
+def _will_fuse_round(
+    pcfg: prt.ProtocolConfig, fcfg: flr.FailureConfig | None = None
+) -> bool:
+    """Boolean view of :func:`round_impl_decision` (see its docstring)."""
+    return round_impl_decision(pcfg, fcfg).fused
+
+
+def observation_rows(
+    n: int,
+    pcfg: prt.ProtocolConfig,
+    fcfg: flr.FailureConfig | None = None,
+) -> int:
     """Static row count of the observation-state arrays for a run.
 
     On the fused paths (observation-fused estimator, or the whole-round
@@ -237,7 +328,7 @@ def observation_rows(n: int, pcfg: prt.ProtocolConfig) -> int:
     tile-aligned); everywhere else it is just ``n``.
     """
     pad_for_kernel = _will_fuse(pcfg) or (
-        _will_fuse_round(pcfg) and _fused_round_backend() == "pallas"
+        _will_fuse_round(pcfg, fcfg) and _fused_round_backend() == "pallas"
     )
     if not pad_for_kernel:
         return n
@@ -275,7 +366,7 @@ def protocol_step(
     the sequence below, verified by the whole-round golden tests. This
     function body IS the unfused oracle (``round_impl="unfused"``).
     """
-    if _will_fuse_round(pcfg):
+    if _will_fuse_round(pcfg, fcfg):
         if pi is not None:
             raise ValueError(
                 "the fused whole-round path does not take an analytic-"
@@ -301,10 +392,29 @@ def protocol_step(
         active=flr.kill_resident_walks(ws.active, ws.pos, gs.node_up)
     )
 
-    # 2. movement over the currently-available edges
-    ws = wlk.move_walks(
-        ws, neighbors, degrees, k_move, availability(gs, neighbors, degrees)
-    )
+    # 1b. a mobile Pac-Man hops over the same live topology the walks see
+    # (dedicated stream tag 6 + 1: never perturbs the walk/decision draws)
+    pac_pos = state.pacman_pos
+    if fcfg.pacman_mobile:
+        k_pac = fold_in_time(key, t, 7)
+        pac_pos = flr.step_mobile_pacman(
+            pac_pos, t, fcfg, k_pac, neighbors, degrees,
+            availability(gs, neighbors, degrees),
+        )
+
+    # 2. movement over the currently-available edges; non-uniform zoo
+    # variants (jump / biased / bloom) are whole other static programs
+    if pcfg.walk_variant == "uniform":
+        ws = wlk.move_walks(
+            ws, neighbors, degrees, k_move, availability(gs, neighbors, degrees)
+        )
+    else:
+        from repro.zoo.variants import move_variant
+
+        ws = move_variant(
+            ws, pcfg, neighbors, degrees, k_move,
+            availability(gs, neighbors, degrees), gs.node_up,
+        )
 
     # 3. walk-level threat models
     active = flr.apply_probabilistic_failures(ws.active, t, fcfg, k_pfail)
@@ -312,7 +422,7 @@ def protocol_step(
     active, byz_state = flr.step_byzantine(
         active, ws.pos, t, state.byz_state, fcfg, k_byz
     )
-    active = flr.apply_pacman(active, ws.pos, t, fcfg)
+    active = flr.apply_pacman(active, ws.pos, t, fcfg, pac_pos)
     ws = ws._replace(active=active)
     n_failed = n_before - jnp.sum(active)
 
@@ -416,6 +526,7 @@ def protocol_step(
         key=key,
         theta_hist=theta_hist,
         graph=gs,
+        pacman_pos=pac_pos,
     )
     out = StepOutputs(
         z=jnp.sum(ws.active),
@@ -479,13 +590,24 @@ def _protocol_step_fused(
     n = degrees.shape[0]
     n_before = jnp.sum(ws.active)
     enabled = t >= pcfg.protocol_start
+    pac_pos = state.pacman_pos
 
     if _fused_round_backend() == "ref":
         # 1. topology evolves; a crashing node kills its resident walks
+        # (step_topology already applies any scheduled edge cuts)
         gs = flr.step_topology(state.graph, t, fcfg, k_topo, neighbors, mirror)
         ws = ws._replace(
             active=flr.kill_resident_walks(ws.active, ws.pos, gs.node_up)
         )
+
+        # 1b. mobile Pac-Man hop — same helper, same dedicated stream as
+        # the unfused sequence, so the positions stay its exact bits
+        if fcfg.pacman_mobile:
+            k_pac = fold_in_time(key, t, 7)
+            pac_pos = flr.step_mobile_pacman(
+                pac_pos, t, fcfg, k_pac, neighbors, degrees,
+                availability(gs, neighbors, degrees),
+            )
 
         # 2. movement, row-restricted to the walks' own adjacency rows
         u_move = jax.random.uniform(k_move, (W,))
@@ -505,7 +627,7 @@ def _protocol_step_fused(
         active, byz_state = flr.step_byzantine(
             active, ws.pos, t, state.byz_state, fcfg, k_byz
         )
-        active = flr.apply_pacman(active, ws.pos, t, fcfg)
+        active = flr.apply_pacman(active, ws.pos, t, fcfg, pac_pos)
         ws = ws._replace(active=active)
         n_failed = n_before - jnp.sum(active)
 
@@ -647,6 +769,7 @@ def _protocol_step_fused(
         key=key,
         theta_hist=state.theta_hist,
         graph=gs,
+        pacman_pos=pac_pos,
     )
     out = StepOutputs(
         z=jnp.sum(ws.active),
@@ -717,7 +840,7 @@ def _run_core(
     it is created, on a copy of its parent's pre-round replica. Returns
     ``((final SimState, final carry), (RecordedOutputs, payload_outputs))``.
     """
-    n_obs = observation_rows(n, pcfg)
+    n_obs = observation_rows(n, pcfg, fcfg)
     state = init_state(
         n, neighbors.shape[1], pcfg, fcfg, key, n_obs=n_obs, steps=steps
     )

@@ -24,6 +24,11 @@ class WalkState(NamedTuple):
     pos: jax.Array  # (W,) int32 current node
     active: jax.Array  # (W,) bool
     track: jax.Array  # (W,) int32 last_seen column owned by this walk
+    # ---- zoo walk-variant memory (None unless the variant needs it; a
+    # None field is an empty pytree subtree, so the default program and
+    # its scan carry are structurally unchanged) -------------------------
+    prev: jax.Array | None = None  # (W,) int32 previous node ('biased')
+    bloom: jax.Array | None = None  # (W, bloom_bits) bool history ('bloom')
 
 
 def init_walks(z0: int, max_walks: int, n_nodes: int, key: jax.Array) -> WalkState:
@@ -208,8 +213,16 @@ def execute_forks(
     else:
         # MISSINGPERSON: replacement carries the missing walk's identity
         track = ws.track.at[safe_slot].set(ev_track, mode="drop")
+    # zoo variant memory forks with the slot: the child duplicates the
+    # parent's previous-node column and Bloom history
+    prev = ws.prev
+    if prev is not None:
+        prev = prev.at[safe_slot].set(prev[ev_parent], mode="drop")
+    bloom = ws.bloom
+    if bloom is not None:
+        bloom = bloom.at[safe_slot].set(bloom[ev_parent], mode="drop")
     return (
-        WalkState(pos=pos, active=active, track=track),
+        WalkState(pos=pos, active=active, track=track, prev=prev, bloom=bloom),
         last_seen,
         jnp.sum(ev_ok),
         fork_parent,

@@ -167,6 +167,53 @@ def power_law_graph(n: int, m: int = 3, seed: int = 0) -> Graph:
     return _adj_to_graph(a, "power_law")
 
 
+def community_graph(
+    n: int,
+    k_bridges: int = 2,
+    p_in: float | None = None,
+    seed: int = 0,
+) -> Graph:
+    """Two ER communities joined by ``k_bridges`` random bridge edges.
+
+    Nodes ``[0, n//2)`` form one community, ``[n//2, n)`` the other —
+    the id boundary ``n//2`` is exactly the threshold the zoo's
+    ``edge_cut`` attack severs, so cutting there isolates the halves.
+    Each half is a connected G(n/2, p_in) (default ``p_in = 3 ln(n/2) /
+    (n/2)``); bridges pair uniformly random endpoints across the halves
+    (deduplicated, so the bridge count is exactly ``k_bridges``).
+    """
+    if n < 4:
+        raise ValueError("community graph needs n >= 4")
+    if k_bridges < 1:
+        raise ValueError("need k_bridges >= 1 (else the graph disconnects)")
+    h = n // 2
+    sizes = (h, n - h)
+    if p_in is None:
+        p_in = min(1.0, 3.0 * np.log(max(sizes)) / min(sizes))
+    rng = np.random.default_rng(seed)
+    a = np.zeros((n, n), dtype=bool)
+    for lo, size in ((0, sizes[0]), (h, sizes[1])):
+        for _attempt in range(1000):
+            block = rng.random((size, size)) < p_in
+            block = np.triu(block, 1)
+            block = block | block.T
+            if is_connected_adj(block):
+                a[lo : lo + size, lo : lo + size] = block
+                break
+        else:
+            raise RuntimeError(
+                "failed to sample a connected community; increase p_in"
+            )
+    bridges: set = set()
+    while len(bridges) < k_bridges:
+        u = int(rng.integers(0, h))
+        v = int(rng.integers(h, n))
+        bridges.add((u, v))
+    for u, v in sorted(bridges):
+        a[u, v] = a[v, u] = True
+    return _adj_to_graph(a, "community")
+
+
 def ring_graph(n: int) -> Graph:
     a = np.zeros((n, n), dtype=bool)
     idx = np.arange(n)
@@ -192,6 +239,7 @@ GRAPH_FAMILIES: Dict[str, Callable[..., Graph]] = {
     "erdos_renyi": erdos_renyi_graph,
     "complete": complete_graph,
     "power_law": power_law_graph,
+    "community": community_graph,
     "ring": ring_graph,
     "torus": torus_graph,
 }
@@ -207,6 +255,10 @@ def make_graph(family: str, n: int, seed: int = 0, **kwargs) -> Graph:
         return complete_graph(n)
     if family == "power_law":
         return power_law_graph(n, kwargs.get("m", 3), seed)
+    if family == "community":
+        return community_graph(
+            n, kwargs.get("k_bridges", 2), kwargs.get("p_in"), seed
+        )
     if family == "ring":
         return ring_graph(n)
     if family == "torus":

@@ -47,6 +47,15 @@ uniforms are pre-drawn by the caller from the exact PRNG streams the
 unfused sequence consumes (``core.simulator._protocol_step_fused``), so
 the kernel is deterministic data flow and bitwise-testable against the
 literal unfused round.
+
+Zoo coverage (``repro.zoo``): the kernel handles the classic single
+static Pac-Man only. The zoo's attack statics — ``pacman_mobile``,
+extra ``pacman_nodes``, scheduled edge cuts — and every non-uniform
+``walk_variant`` are gated OFF this kernel by
+``core.simulator.round_impl_decision`` (the ref fused round, which
+shares the jnp failure helpers, still fuses the attack statics; walk
+variants always take the stage sequence). Extending the kernel to the
+zoo attacks rides the real-TPU validation item in ROADMAP item 3.
 """
 from __future__ import annotations
 

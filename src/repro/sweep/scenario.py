@@ -44,14 +44,18 @@ def static_signature(scenario) -> tuple:
     """Hashable program-shape key: scenarios batch iff signatures match.
 
     The final element collects the shape-bearing schedule lengths (walk
-    bursts, scheduled node crashes); ``group_scenarios`` strips it because
-    ``pad_bursts`` reconciles those at stacking time.
+    bursts, scheduled node crashes, extra Pac-Man ids, edge cuts);
+    ``group_scenarios`` strips it because ``pad_bursts`` reconciles those
+    at stacking time. The failure config's own static aux fields
+    (``pacman_mobile``) are part of the key proper — a mobile-Pac-Man
+    scenario carries different scan state and cannot share a program.
     """
     pcfg, fcfg = as_pair(scenario)
     return (
         pcfg.static_fields,
         pcfg.fork_prob is None,  # None vs value changes the pytree structure
-        (fcfg.n_bursts, fcfg.n_node_crashes),
+        fcfg.static_fields,
+        (fcfg.n_bursts, fcfg.n_node_crashes, fcfg.n_pacman, fcfg.n_edge_cuts),
     )
 
 

@@ -1,0 +1,141 @@
+"""repro.zoo — the adversary & walk-variant zoo (ROADMAP item 4).
+
+Attacks (``repro.zoo.attacks``) and walk-variant defenses
+(``repro.zoo.variants``) are registry-named builders over the ordinary
+config pytrees, so the whole defense x attack cross-product is just a
+list of :class:`~repro.sweep.scenario.Scenario` rows — the sweep engine
+runs it with ONE compiled program per static group (walk variant,
+``pacman_mobile``, schedule widths), and every numeric knob batches under
+vmap inside its group.
+
+    from repro.zoo import zoo_scenarios
+    rows = zoo_scenarios(
+        defenses=["uniform", "jump", "bloom"],
+        attacks=[("mobile_pacman", {"node": 0}),
+                 ("edge_cut", {"time": 50, "threshold": 32})],
+    )
+    Experiment(graph=g, scenarios=rows, steps=500).plan().sweep(seeds=8)
+
+The registered ``"zoo"`` experiment builder packages the common study —
+a community graph under the default 3-defense x 3-attack grid — for
+config-driven callers (``Experiment.from_config({"experiment": "zoo"})``,
+the service, ``benchmarks/fig9_zoo.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.zoo.attacks import ATTACKS, attack, register_attack
+from repro.zoo.variants import (
+    DEFENSES,
+    defense,
+    init_variant_state,
+    move_variant,
+)
+
+__all__ = [
+    "ATTACKS",
+    "DEFENSES",
+    "attack",
+    "defense",
+    "init_variant_state",
+    "move_variant",
+    "zoo_scenarios",
+    "register_attack",
+]
+
+
+def _named(entry, kind):
+    """Normalize ``"name"`` | ``("name", {kwargs})`` entries."""
+    if isinstance(entry, str):
+        return entry, {}
+    name, kwargs = entry
+    if not isinstance(kwargs, dict):
+        raise TypeError(
+            f"{kind} entry {entry!r} must be 'name' or ('name', dict)"
+        )
+    return name, dict(kwargs)
+
+
+def zoo_scenarios(defenses, attacks, base_protocol=None):
+    """The defense x attack cross-product as named Scenario rows.
+
+    ``defenses``/``attacks`` entries are names or ``(name, kwargs)``
+    pairs — defense kwargs override the preset's ProtocolConfig fields,
+    attack kwargs go to the attack builder. Rows are named
+    ``"<defense>|<attack>"`` and ordered defense-major. The returned
+    list drops straight into ``Experiment(scenarios=...)``; grouping,
+    schedule padding and compile caching are the sweep engine's job.
+    """
+    from repro.core.protocol import ProtocolConfig
+    from repro.sweep.scenario import Scenario
+
+    base = base_protocol if base_protocol is not None else ProtocolConfig()
+    rows = []
+    for d_entry in defenses:
+        d_name, d_kw = _named(d_entry, "defense")
+        pcfg = dataclasses.replace(base, **defense(d_name, **d_kw))
+        for a_entry in attacks:
+            a_name, a_kw = _named(a_entry, "attack")
+            rows.append(
+                Scenario(
+                    name=f"{d_name}|{a_name}",
+                    pcfg=pcfg,
+                    fcfg=attack(a_name, **a_kw),
+                )
+            )
+    return rows
+
+
+def _register_experiment():
+    from repro.api import registry
+
+    @registry.register("zoo")
+    def _zoo(
+        *,
+        graph: str = "community",
+        n: int = 64,
+        graph_seed: int = 0,
+        graph_kwargs: dict | None = None,
+        steps: int = 500,
+        protocol: dict | None = None,
+        defenses=("uniform", "jump", "bloom"),
+        attacks=("mobile_pacman", "multi_pacman", "edge_cut"),
+        outputs="scalars",
+        placement="auto",
+        name: str | None = None,
+    ):
+        """The zoo study: a (default: community) graph under the defense
+        x attack grid. Plain attack names get graph-aware defaults —
+        ``edge_cut`` severs the id boundary ``n//2`` at ``steps//3``,
+        ``multi_pacman`` posts one Pac-Man per community."""
+        from repro.api.experiment import Experiment
+        from repro.core.protocol import ProtocolConfig
+        from repro.graphs.generators import make_graph
+
+        g = make_graph(graph, int(n), int(graph_seed), **(graph_kwargs or {}))
+        half = int(n) // 2
+        auto_kw = {
+            "edge_cut": {"time": int(steps) // 3, "threshold": half},
+            "multi_pacman": {"nodes": (0, half)},
+            "mobile_pacman": {"node": 0},
+            "pacman": {"node": 0},
+        }
+        rows = [
+            (a, auto_kw.get(a, {})) if isinstance(a, str) else a
+            for a in attacks
+        ]
+        return Experiment(
+            graph=g,
+            scenarios=zoo_scenarios(
+                defenses, rows,
+                base_protocol=ProtocolConfig(**(protocol or {})),
+            ),
+            steps=int(steps),
+            outputs=outputs,
+            placement=placement,
+            name=name,
+        )
+
+
+_register_experiment()

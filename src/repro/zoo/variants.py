@@ -1,0 +1,211 @@
+"""Walk-variant strategies — the zoo's *defense* axis.
+
+Each variant is a movement rule layered over the slot machinery in
+``core/walkers.py``; the simulator dispatches here whenever
+``ProtocolConfig.walk_variant != "uniform"`` (a static field, so each
+variant is its own compiled program and the default program is
+bitwise-untouched). Variants and the literature motivating them:
+
+  * ``uniform`` — the paper's walk: a uniform available neighbor
+    (literally ``walkers.move_walks``; listed so the registry is total);
+  * ``jump``    — random walks with jumps (Liu et al.): after the normal
+    hop, teleport w.p. ``p_jump`` to a uniformly random *up* node —
+    escapes slow mixing and, crucially, scheduled partition cuts;
+  * ``biased``  — node2vec-style second-order p/q walk: relative to the
+    previous node (``WalkState.prev``), returning weighs ``1/bias_p``,
+    staying at distance 1 weighs ``1``, exploring outward weighs
+    ``1/bias_q`` — ``bias_q < 1`` pushes exploration;
+  * ``bloom``   — self-avoiding walk with a fixed-size Bloom-filter
+    history per walk (``WalkState.bloom``, ``bloom_bits`` wide, forked
+    with the slot): the walk marks every node it leaves and prefers
+    unvisited available neighbors, falling back to uniform when all are
+    marked — jit-compatible walk memory after h-ohsaki's SRW variants.
+
+All rules are branch-free on traced values (``p_jump``/``bias_p``/
+``bias_q`` are ordinary vmap-batchable leaves), hold position when no
+eligible edge exists (exactly like ``move_walks``), and keep inactive
+slots frozen.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import walkers as wlk
+
+__all__ = [
+    "DEFENSES",
+    "defense",
+    "init_variant_state",
+    "move_variant",
+]
+
+# named defense presets: ProtocolConfig field overrides. ``defense()``
+# merges caller overrides on top, so a preset is a starting point, not a
+# straitjacket.
+DEFENSES: dict = {
+    "uniform": {},
+    "jump": {"walk_variant": "jump", "p_jump": 0.05},
+    "biased": {"walk_variant": "biased", "bias_p": 4.0, "bias_q": 0.5},
+    "bloom": {"walk_variant": "bloom", "bloom_bits": 64},
+}
+
+
+def defense(name: str, **overrides) -> dict:
+    """The named defense's ``ProtocolConfig`` overrides (+ caller's)."""
+    try:
+        base = DEFENSES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown defense {name!r}; known: {sorted(DEFENSES)}"
+        ) from None
+    return {**base, **overrides}
+
+
+def init_variant_state(ws: wlk.WalkState, pcfg) -> wlk.WalkState:
+    """Attach the variant's per-walk memory columns to a fresh WalkState.
+
+    ``biased`` seeds ``prev`` with the walk's own starting node — every
+    neighbor is then at distance 1 from "prev", so the first hop is
+    uniform, the standard second-order-walk initialization. ``bloom``
+    starts with an empty filter.
+    """
+    W = ws.pos.shape[0]
+    if pcfg.walk_variant == "biased":
+        return ws._replace(prev=ws.pos)
+    if pcfg.walk_variant == "bloom":
+        return ws._replace(bloom=jnp.zeros((W, pcfg.bloom_bits), bool))
+    return ws
+
+
+def move_variant(
+    ws: wlk.WalkState,
+    pcfg,
+    neighbors: jax.Array,
+    degrees: jax.Array,
+    key: jax.Array,
+    avail: jax.Array,
+    node_up: jax.Array,
+) -> wlk.WalkState:
+    """One movement round under ``pcfg.walk_variant`` (see module doc).
+
+    Same contract as ``walkers.move_walks``: consumes the round's
+    movement key (splitting it internally — each variant is a distinct
+    static program, so stream layout only matters within a variant) and
+    the live availability mask; returns the moved WalkState.
+    """
+    variant = pcfg.walk_variant
+    if variant == "uniform":
+        return wlk.move_walks(ws, neighbors, degrees, key, avail)
+    if variant == "jump":
+        return _move_jump(ws, pcfg, neighbors, degrees, key, avail, node_up)
+    if variant == "biased":
+        return _move_biased(ws, pcfg, neighbors, degrees, key, avail)
+    if variant == "bloom":
+        return _move_bloom(ws, pcfg, neighbors, degrees, key, avail)
+    raise ValueError(f"unknown walk_variant {variant!r}")
+
+
+def _move_jump(ws, pcfg, neighbors, degrees, key, avail, node_up):
+    """Normal hop, then w.p. ``p_jump`` teleport to a uniform up-node.
+
+    The teleport target is rank-selected over the live ``node_up`` mask
+    (same primitive shape as edge selection): with every node up it is
+    exactly ``floor(u * n)``; with nodes down only up nodes are
+    reachable, so a jump can never land a walk on a crashed node. With
+    zero up-nodes (fully crashed graph) the walk keeps its hop result.
+    """
+    W = ws.pos.shape[0]
+    n = node_up.shape[0]
+    k_hop, k_gate, k_dest = jax.random.split(key, 3)
+    ws = wlk.move_walks(ws, neighbors, degrees, k_hop, avail)
+    do_jump = jax.random.uniform(k_gate, (W,)) < pcfg.p_jump
+    u = jax.random.uniform(k_dest, (W,))
+    n_up = jnp.sum(node_up, dtype=jnp.int32)
+    idx = jnp.minimum((u * n_up).astype(jnp.int32), n_up - 1)
+    rank = jnp.cumsum(node_up, dtype=jnp.int32) - 1  # rank among up nodes
+    ids = jnp.arange(n, dtype=jnp.int32)
+    rank_to_node = (
+        jnp.zeros((n,), jnp.int32)
+        .at[jnp.where(node_up, rank, n)]
+        .set(ids, mode="drop")
+    )
+    dest = rank_to_node[jnp.clip(idx, 0, n - 1)]
+    teleport = ws.active & do_jump & (n_up > 0)
+    return ws._replace(pos=jnp.where(teleport, dest, ws.pos))
+
+
+def _move_biased(ws, pcfg, neighbors, degrees, key, avail):
+    """node2vec-style p/q walk: weight each available incident edge by
+    the destination's relation to the previous node, then sample the
+    categorical with one uniform against the row's weight CDF."""
+    W = ws.pos.shape[0]
+    D = neighbors.shape[1]
+    rows = neighbors[ws.pos]  # (W, D) candidate destinations
+    row_mask = avail[ws.pos]
+    prev = ws.prev
+    prev_rows = neighbors[prev]  # (W, D) the previous node's neighbors
+    prev_deg = (
+        jnp.arange(D, dtype=degrees.dtype)[None, :] < degrees[prev, None]
+    )
+    is_prev = rows == prev[:, None]
+    dist1 = (
+        (rows[:, :, None] == prev_rows[:, None, :]) & prev_deg[:, None, :]
+    ).any(axis=-1)
+    w = jnp.where(
+        is_prev,
+        1.0 / pcfg.bias_p,
+        jnp.where(dist1, 1.0, 1.0 / pcfg.bias_q),
+    )
+    w = jnp.where(row_mask, w, 0.0)
+    tot = jnp.sum(w, axis=1)
+    u = jax.random.uniform(key, (W,)) * tot
+    cdf = jnp.cumsum(w, axis=1)
+    # first slot whose cdf exceeds u — a zero-weight slot shares its
+    # predecessor's cdf, so it can never be first
+    sel = jnp.argmax(cdf > u[:, None], axis=1)
+    nxt = jnp.take_along_axis(rows, sel[:, None], axis=1)[:, 0]
+    can_move = ws.active & (tot > 0)
+    return ws._replace(
+        pos=jnp.where(can_move, nxt, ws.pos),
+        prev=jnp.where(can_move, ws.pos, prev),
+    )
+
+
+def _bloom_hashes(node: jax.Array, bits: int):
+    """Two independent multiplicative hashes into [0, bits)."""
+    x = node.astype(jnp.uint32)
+    h1 = (x * jnp.uint32(2654435761)) % jnp.uint32(bits)
+    h2 = (x * jnp.uint32(40503) + jnp.uint32(2699)) % jnp.uint32(bits)
+    return h1.astype(jnp.int32), h2.astype(jnp.int32)
+
+
+def _move_bloom(ws, pcfg, neighbors, degrees, key, avail):
+    """Self-avoiding hop: mark the node being left in the walk's Bloom
+    filter, then hop uniformly among available neighbors NOT in the
+    filter — falling back to plain uniform-available when every
+    candidate is marked (or a false positive says so). The filter is
+    per-walk state, duplicated on fork with the slot."""
+    W = ws.pos.shape[0]
+    B = ws.bloom.shape[1]
+    slots = jnp.arange(W, dtype=jnp.int32)
+    h1, h2 = _bloom_hashes(ws.pos, B)
+    mark = ws.active
+    bloom = ws.bloom
+    bloom = bloom.at[slots, h1].set(bloom[slots, h1] | mark)
+    bloom = bloom.at[slots, h2].set(bloom[slots, h2] | mark)
+    rows = neighbors[ws.pos]  # (W, D)
+    g1, g2 = _bloom_hashes(rows, B)
+    visited = jnp.take_along_axis(bloom, g1, axis=1) & jnp.take_along_axis(
+        bloom, g2, axis=1
+    )
+    row_mask = avail[ws.pos]
+    fresh = row_mask & ~visited
+    mask = jnp.where(fresh.any(axis=1)[:, None], fresh, row_mask)
+    u = jax.random.uniform(key, (W,))
+    adeg, sel = wlk.select_available_edge(mask, u, degrees.dtype)
+    nxt = jnp.take_along_axis(rows, sel[:, None], axis=1)[:, 0]
+    can_move = ws.active & (adeg > 0)
+    return ws._replace(
+        pos=jnp.where(can_move, nxt, ws.pos), bloom=bloom
+    )

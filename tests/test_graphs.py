@@ -3,6 +3,7 @@ import pytest
 
 from repro.graphs import (
     GRAPH_FAMILIES,
+    community_graph,
     complete_graph,
     erdos_renyi_graph,
     expected_return_times,
@@ -54,6 +55,41 @@ def test_make_graph_dispatch():
         assert is_connected_adj(g.adjacency())
     with pytest.raises(KeyError):
         make_graph("nope", 10)
+
+
+@pytest.mark.parametrize("n,k", [(24, 1), (24, 2), (33, 3), (64, 2)])
+def test_community_graph_structure(n, k):
+    """Two connected halves, exactly k bridges across the id boundary,
+    connected overall (also for odd n, where the halves differ by one)."""
+    g = community_graph(n, k_bridges=k, seed=3)
+    g.validate()
+    assert g.family == "community"
+    a = g.adjacency()
+    h = n // 2
+    assert a[:h, h:].sum() == k  # exactly k cross edges
+    assert is_connected_adj(a[:h, :h])  # each half connected on its own
+    assert is_connected_adj(a[h:, h:])
+    # severing the bridges disconnects the graph — the edge_cut attack's
+    # partition premise
+    cut = a.copy()
+    cut[:h, h:] = cut[h:, :h] = False
+    assert not is_connected_adj(cut)
+
+
+def test_community_graph_deterministic_and_guarded():
+    g1 = community_graph(40, k_bridges=2, seed=7)
+    g2 = community_graph(40, k_bridges=2, seed=7)
+    np.testing.assert_array_equal(g1.neighbors, g2.neighbors)
+    np.testing.assert_array_equal(g1.degrees, g2.degrees)
+    assert community_graph(40, k_bridges=2, seed=8).num_edges != 0
+    with pytest.raises(ValueError):
+        community_graph(3)  # too small
+    with pytest.raises(ValueError):
+        community_graph(24, k_bridges=0)  # would disconnect
+    m = make_graph("community", 24, seed=3, k_bridges=2)
+    np.testing.assert_array_equal(
+        m.neighbors, community_graph(24, 2, seed=3).neighbors
+    )
 
 
 def test_stationary_and_kac():

@@ -1,0 +1,697 @@
+"""The zoo (PR 8): attacks x walk-variant defenses as registry scenarios.
+
+Contract under test:
+  * golden no-op parity — explicitly-neutral zoo knobs (uniform variant,
+    zero jump probability, empty attack schedules) reproduce the PR-1
+    golden trajectories bitwise: the zoo costs the default program
+    nothing;
+  * oracle parity — every zoo attack runs bitwise-identically under the
+    fused round and the literal unfused stage sequence, over churny
+    trajectories, on tile-multiple AND non-tile-multiple n;
+  * attack semantics — multi-Pac-Man extinction, mobile Pac-Man hopping
+    along live edges, scheduled edge cuts severing exactly the
+    cross-partition edges and confining walks;
+  * defense semantics — jump teleports across a partition, biased walks
+    honor the p/q weights, Bloom walks avoid marked neighbors;
+  * sweep integration — zoo rows group/pad correctly: a mixed sweep is
+    bitwise each row's private ensemble, schedules pad with the
+    never-fires fill;
+  * compile-cache accounting — each variant's static tag opens exactly
+    one cache slot, structurally-equal zoo configs share slots and hash
+    to a stable ResultStore key;
+  * observability — ``round_impl_decision`` / ``Plan.round_decisions``
+    name the gate that sends a config to the stage sequence, decided on
+    the group's PADDED schedule widths.
+"""
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import Experiment, ResultStore
+from repro.api import plan as plan_mod
+from repro.core import FailureConfig, ProtocolConfig
+from repro.core import failures as flr
+from repro.core import simulator as sim
+from repro.core import walkers as wlk
+from repro.graphs import (
+    availability,
+    community_graph,
+    init_graph_state,
+    mirror_indices,
+    random_regular_graph,
+    ring_graph,
+)
+from repro.sweep import Scenario
+from repro.sweep.scenario import group_scenarios, stack_configs
+from repro.zoo import attack, defense, zoo_scenarios
+from repro.zoo.variants import _bloom_hashes
+
+GOLDEN = os.path.join(
+    os.path.dirname(__file__), "golden", "pr1_trajectories.json"
+)
+
+# must mirror tests/golden/capture_pr1.py
+N, DEG, GRAPH_SEED = 24, 4, 3
+W, Z0, STEPS, SEEDS, BASE_KEY = 10, 5, 60, 2, 7
+HALF = N // 2
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return random_regular_graph(N, DEG, seed=GRAPH_SEED)
+
+
+@pytest.fixture(scope="module")
+def cgraph():
+    return community_graph(N, k_bridges=2, seed=GRAPH_SEED)
+
+
+@pytest.fixture(scope="module")
+def golden():
+    with open(GOLDEN) as f:
+        return json.load(f)
+
+
+def _pcfg(alg="decafork", **kw):
+    base = dict(
+        algorithm=alg, z0=Z0, max_walks=W, rt_bins=32, protocol_start=10
+    )
+    base.update(kw)
+    return ProtocolConfig(**base)
+
+
+def _bitwise(a, b, label):
+    for name, x, y in zip(a._fields, a, b):
+        np.testing.assert_array_equal(
+            np.asarray(x), np.asarray(y), err_msg=f"{label}: field {name}"
+        )
+
+
+# ---------------------------------------------------------------------------
+# golden no-op parity: neutral zoo knobs == the pre-zoo program, bitwise
+# ---------------------------------------------------------------------------
+
+
+def test_neutral_zoo_knobs_are_bitwise_pr1_golden(graph, golden):
+    """Every zoo knob at its explicit neutral value — uniform variant,
+    p_jump=0, unit biases, no extra Pac-Men, no cuts — reproduces the
+    PR-1 golden ensemble bitwise (outputs='full': every recorded field)."""
+    pcfg = _pcfg(
+        "decafork", eps=1.8,
+        walk_variant="uniform", p_jump=0.0, bias_p=1.0, bias_q=1.0,
+        bloom_bits=64,
+    )
+    fcfg = FailureConfig(
+        burst_times=(20,), burst_sizes=(2,),
+        pacman_nodes=(), pacman_mobile=False, pacman_hop_prob=1.0,
+        edge_cut_times=(), edge_cut_thresholds=(),
+    )
+    outs = Experiment(
+        graph=graph, protocol=pcfg, failures=fcfg, steps=STEPS,
+        outputs="full",
+    ).ensemble(SEEDS, base_key=BASE_KEY)
+    ref = golden["ensemble"]["decafork/burst"]
+    for name, arr in zip(outs._fields, outs):
+        got = np.asarray(arr)
+        np.testing.assert_array_equal(
+            got, np.asarray(ref[name], dtype=got.dtype),
+            err_msg=f"neutral zoo: field {name}",
+        )
+
+
+def test_uniform_defense_preset_is_empty():
+    """The 'uniform' defense overrides nothing: applying it to any base
+    protocol is the identity (so the default program stays untouched)."""
+    assert defense("uniform") == {}
+    base = _pcfg("decafork+", eps=1.6, eps2=6.0)
+    assert dataclasses.replace(base, **defense("uniform")) == base
+
+
+# ---------------------------------------------------------------------------
+# fused vs unfused oracle, per attack, on tile- and non-tile-multiple n
+# ---------------------------------------------------------------------------
+
+_CHURN = dict(
+    burst_times=(30,), burst_sizes=(2,),
+    p_node_fail=0.02, p_node_recover=0.3, node_fail_start=10,
+    p_link_fail=0.05, p_link_recover=0.4, link_fail_start=10,
+)
+
+
+def _attack_under_churn(name, n):
+    half = n // 2
+    builders = {
+        "mobile_pacman": lambda: attack(
+            "mobile_pacman", node=0, hop_prob=0.7, start=5, **_CHURN
+        ),
+        "multi_pacman": lambda: attack(
+            "multi_pacman", nodes=(0, half), start=5, **_CHURN
+        ),
+        "edge_cut": lambda: attack(
+            "edge_cut", time=10, threshold=half, **_CHURN
+        ),
+    }
+    return builders[name]()
+
+
+@pytest.mark.parametrize("attack_name",
+                         ["mobile_pacman", "multi_pacman", "edge_cut"])
+@pytest.mark.parametrize("n", [19, N])
+def test_zoo_attacks_fused_bitwise_unfused(attack_name, n, graph, cgraph):
+    """Each zoo attack under heavy topology churn: the fused round must
+    be bitwise the literal stage sequence on every recorded output —
+    n=19 exercises the non-tile-multiple path, n=24 the community graph."""
+    g = random_regular_graph(19, 4, seed=2) if n == 19 else cgraph
+    fcfg = _attack_under_churn(attack_name, n)
+    outs = {}
+    for rimpl in ("fused", "unfused"):
+        pcfg = _pcfg(
+            "decafork+", eps=1.4, eps2=6.0, max_walks=8, z0=4,
+            protocol_start=15, estimator_impl="gather", round_impl=rimpl,
+        )
+        _, outs[rimpl] = Experiment(
+            graph=g, protocol=pcfg, failures=fcfg, steps=STEPS,
+            outputs="full",
+        ).run(key=5)
+    _bitwise(outs["fused"], outs["unfused"], f"{attack_name}/n={n}")
+
+
+@pytest.mark.parametrize("variant", ["jump", "biased", "bloom"])
+def test_variant_fallback_is_bitwise_the_stage_sequence(variant):
+    """A non-uniform variant with round_impl='fused' requested must take
+    the validated fallback: bitwise the explicit unfused stage sequence
+    (on a non-tile-multiple n, under churn + an attack)."""
+    g = random_regular_graph(19, 4, seed=2)
+    fcfg = _attack_under_churn("multi_pacman", 19)
+    outs = {}
+    for rimpl in ("fused", "unfused"):
+        pcfg = _pcfg(
+            "decafork", eps=1.8, z0=4, max_walks=8, protocol_start=15,
+            round_impl=rimpl, **defense(variant),
+        )
+        assert not sim.round_impl_decision(pcfg, fcfg).fused
+        _, outs[rimpl] = Experiment(
+            graph=g, protocol=pcfg, failures=fcfg, steps=STEPS,
+            outputs="full",
+        ).run(key=5)
+    _bitwise(outs["fused"], outs["unfused"], f"{variant} fallback")
+
+
+# ---------------------------------------------------------------------------
+# attack semantics
+# ---------------------------------------------------------------------------
+
+
+def test_multi_pacman_extinguishes_unregulated_walks(graph):
+    """Several absorbing nodes at once: the unregulated population only
+    shrinks, and dies out."""
+    fcfg = attack("multi_pacman", nodes=(0, 5, 9), start=0)
+    assert fcfg.n_pacman == 2  # ids beyond the first ride the schedule
+    _, outs = Experiment(
+        graph=graph, protocol=_pcfg("none"), failures=fcfg, steps=2000
+    ).run(key=3)
+    z = np.asarray(outs.z)
+    assert z[-1] == 0
+    assert (np.diff(z) <= 0).all()
+
+
+def test_mobile_pacman_hops_along_live_edges(graph):
+    """With hop_prob=1 the Pac-Man moves every armed round, always to a
+    neighbor of its current node (the movement primitive's edge set)."""
+    neighbors = jnp.asarray(graph.neighbors)
+    degrees = jnp.asarray(graph.degrees)
+    gs = init_graph_state(graph.n, graph.max_degree)
+    avail = availability(gs, neighbors, degrees)
+    fcfg = attack("mobile_pacman", node=0, hop_prob=1.0, start=0)
+    assert fcfg.pacman_mobile
+    pac = flr.initial_pacman_positions(fcfg)
+    nbrs, degs = np.asarray(graph.neighbors), np.asarray(graph.degrees)
+    for t in range(15):
+        new = flr.step_mobile_pacman(
+            pac, jnp.int32(t), fcfg, jax.random.key(t), neighbors, degrees,
+            avail,
+        )
+        old_p, new_p = int(pac[0]), int(new[0])
+        assert new_p != old_p  # hop_prob=1, degree>0: always moves
+        assert new_p in nbrs[old_p, : degs[old_p]].tolist()
+        pac = new
+
+
+def test_mobile_pacman_hop_prob_zero_matches_static_pacman(graph):
+    """hop_prob=0 never moves (the final carry proves it), and the whole
+    trajectory is bitwise the classic static Pac-Man's — the mobile
+    machinery only changes the program where it changes the physics."""
+    pcfg = _pcfg("decafork", eps=1.8)
+    frozen = attack("mobile_pacman", node=3, hop_prob=0.0, start=30)
+    static = attack("pacman", node=3, start=30)
+    final, mobile_outs = Experiment(
+        graph=graph, protocol=pcfg, failures=frozen, steps=STEPS
+    ).run(key=BASE_KEY)
+    assert final.pacman_pos is not None
+    np.testing.assert_array_equal(
+        np.asarray(final.pacman_pos),
+        np.asarray(flr.initial_pacman_positions(frozen)),
+    )
+    _, static_outs = Experiment(
+        graph=graph, protocol=pcfg, failures=static, steps=STEPS
+    ).run(key=BASE_KEY)
+    _bitwise(mobile_outs, static_outs, "frozen mobile vs static pacman")
+
+
+def test_edge_cut_mask_severs_exactly_the_cross_edges(cgraph):
+    """At the scheduled time the mask covers precisely the edges whose
+    endpoints straddle the id threshold — in both directed slots — and
+    nothing at any other time."""
+    neighbors = jnp.asarray(cgraph.neighbors)
+    fcfg = attack("edge_cut", time=10, threshold=HALF)
+    nbrs, degs = np.asarray(cgraph.neighbors), np.asarray(cgraph.degrees)
+    want = np.zeros(nbrs.shape, bool)
+    for i in range(cgraph.n):
+        for k in range(degs[i]):
+            want[i, k] = (i < HALF) != (nbrs[i, k] < HALF)
+    got = np.asarray(flr.edge_cut_mask(neighbors, jnp.int32(10), fcfg))
+    # padding slots beyond a node's degree are don't-cares: mask them off
+    in_deg = np.arange(nbrs.shape[1])[None, :] < degs[:, None]
+    np.testing.assert_array_equal(got & in_deg, want & in_deg)
+    off = np.asarray(flr.edge_cut_mask(neighbors, jnp.int32(9), fcfg))
+    assert not (off & in_deg).any()
+
+
+def test_edge_cut_confines_walks_to_their_community(cgraph):
+    """After the partition fires no walk ever changes sides: the side
+    each (unregulated, deathless) walk holds at step 1 is the side it
+    holds 40 steps later."""
+    pcfg = _pcfg("none")
+    fcfg = attack("edge_cut", time=0, threshold=HALF)
+    side = {}
+    for steps in (1, 41):
+        final, _ = Experiment(
+            graph=cgraph, protocol=pcfg, failures=fcfg, steps=steps
+        ).run(key=BASE_KEY)
+        pos = np.asarray(final.walks.pos)
+        act = np.asarray(final.walks.active)
+        side[steps] = np.where(pos < HALF, 0, 1)[act]
+        assert act.sum() == Z0  # cuts strand, they don't kill
+    np.testing.assert_array_equal(side[1], side[41])
+
+
+# ---------------------------------------------------------------------------
+# defense semantics
+# ---------------------------------------------------------------------------
+
+
+def _cut_state(cgraph):
+    """GraphState + availability with every cross-community edge down."""
+    neighbors = jnp.asarray(cgraph.neighbors)
+    degrees = jnp.asarray(cgraph.degrees)
+    mirror = jnp.asarray(mirror_indices(cgraph))
+    gs = init_graph_state(cgraph.n, cgraph.max_degree)
+    fcfg = attack("edge_cut", time=0, threshold=HALF)
+    gs = flr.step_topology(
+        gs, jnp.int32(0), fcfg, jax.random.key(0), neighbors, mirror
+    )
+    return gs, availability(gs, neighbors, degrees)
+
+
+def test_jump_defense_crosses_a_partition(cgraph):
+    """With the cut in force, uniform movement keeps every walk on its
+    side; the jump variant's teleport reaches the other community."""
+    neighbors = jnp.asarray(cgraph.neighbors)
+    degrees = jnp.asarray(cgraph.degrees)
+    gs, avail = _cut_state(cgraph)
+    ws = wlk.WalkState(
+        pos=jnp.zeros((W,), jnp.int32),  # all on side A
+        active=jnp.ones((W,), bool),
+        track=jnp.arange(W, dtype=jnp.int32),
+    )
+    from repro.zoo.variants import move_variant
+
+    stuck = wlk.move_walks(ws, neighbors, degrees, jax.random.key(1), avail)
+    assert (np.asarray(stuck.pos) < HALF).all()
+    jumped = move_variant(
+        ws, _pcfg(walk_variant="jump", p_jump=1.0), neighbors, degrees,
+        jax.random.key(1), avail, gs.node_up,
+    )
+    assert (np.asarray(jumped.pos) >= HALF).any()
+
+
+def test_biased_walk_honors_pq_weights():
+    """On a ring with an overwhelming return penalty (bias_p huge) and
+    outward pull (bias_q small) the walk must step forward, and ``prev``
+    must follow it."""
+    g = ring_graph(5)
+    neighbors, degrees = jnp.asarray(g.neighbors), jnp.asarray(g.degrees)
+    avail = availability(
+        init_graph_state(g.n, g.max_degree), neighbors, degrees
+    )
+    ws = wlk.WalkState(
+        pos=jnp.array([1], jnp.int32),
+        active=jnp.array([True]),
+        track=jnp.array([0], jnp.int32),
+        prev=jnp.array([0], jnp.int32),
+    )
+    from repro.zoo.variants import move_variant
+
+    pcfg = _pcfg(walk_variant="biased", bias_p=1e9, bias_q=1e-9,
+                 z0=1, max_walks=1)
+    out = move_variant(
+        ws, pcfg, neighbors, degrees, jax.random.key(0), avail,
+        jnp.ones((g.n,), bool),
+    )
+    assert int(out.pos[0]) == 2  # forward: the only non-vanishing weight
+    assert int(out.prev[0]) == 1
+
+
+def test_bloom_walk_avoids_marked_neighbor():
+    """A walk at node 0 of a 4-ring whose filter already holds node 1
+    must hop to node 3 — the only fresh available neighbor."""
+    g = ring_graph(4)
+    neighbors, degrees = jnp.asarray(g.neighbors), jnp.asarray(g.degrees)
+    avail = availability(
+        init_graph_state(g.n, g.max_degree), neighbors, degrees
+    )
+    B = 64
+    bloom = np.zeros((1, B), bool)
+    h1, h2 = _bloom_hashes(jnp.array([1], jnp.int32), B)
+    bloom[0, int(h1[0])] = bloom[0, int(h2[0])] = True
+    ws = wlk.WalkState(
+        pos=jnp.array([0], jnp.int32),
+        active=jnp.array([True]),
+        track=jnp.array([0], jnp.int32),
+        bloom=jnp.asarray(bloom),
+    )
+    from repro.zoo.variants import move_variant
+
+    pcfg = _pcfg(walk_variant="bloom", bloom_bits=B, z0=1, max_walks=1)
+    out = move_variant(
+        ws, pcfg, neighbors, degrees, jax.random.key(0), avail,
+        jnp.ones((g.n,), bool),
+    )
+    assert int(out.pos[0]) == 3
+    # and the node it left is now marked
+    g1, g2 = _bloom_hashes(jnp.array([0], jnp.int32), B)
+    assert bool(out.bloom[0, int(g1[0])]) and bool(out.bloom[0, int(g2[0])])
+
+
+def test_forks_duplicate_variant_memory():
+    """execute_forks copies the parent's prev/bloom columns into the
+    child slot — a forked biased/bloom walk inherits its history."""
+    n, Wc = 6, 4
+    ws = wlk.WalkState(
+        pos=jnp.array([0, 1, 2, 3], jnp.int32),
+        active=jnp.array([True, True, False, False]),
+        track=jnp.array([0, 1, -1, -1], jnp.int32),
+        prev=jnp.arange(Wc, dtype=jnp.int32) + 10,
+        bloom=jnp.zeros((Wc, 8), bool).at[1, 3].set(True),
+    )
+    last_seen = jnp.zeros((n, Wc), jnp.int32)
+    ev_mask = jnp.array([False, True, False, False])  # slot 1 forks
+    out, _, n_forks, fork_parent = wlk.execute_forks(
+        ws, last_seen, ev_mask, ws.pos, None, jnp.int32(5)
+    )
+    assert int(n_forks) == 1
+    new_slot = int(np.nonzero(np.asarray(fork_parent) == 1)[0][0])
+    assert bool(out.active[new_slot])
+    assert int(out.prev[new_slot]) == 11  # parent slot 1's prev
+    assert bool(out.bloom[new_slot, 3])  # parent slot 1's filter bit
+
+
+# ---------------------------------------------------------------------------
+# sweep integration: grouping, padding, bitwise-equal mixed sweeps
+# ---------------------------------------------------------------------------
+
+
+def _zoo_rows(base):
+    return zoo_scenarios(
+        defenses=["uniform", "jump"],
+        attacks=[
+            ("none", {}),
+            ("multi_pacman", {"nodes": (0, HALF), "start": 20}),
+            ("edge_cut", {"time": 20, "threshold": HALF}),
+        ],
+        base_protocol=base,
+    ) + zoo_scenarios(
+        defenses=["uniform"],
+        attacks=[("mobile_pacman", {"node": 0, "start": 20})],
+        base_protocol=base,
+    )
+
+
+def test_zoo_mixed_sweep_bitwise_matches_private_ensembles(cgraph):
+    """The 7-row zoo grid groups into 3 compiled programs (schedule
+    widths pad within a group) and every row stays bitwise what its own
+    private ensemble computes."""
+    rows = _zoo_rows(_pcfg("decafork", eps=1.8))
+    groups = group_scenarios(rows)
+    assert len(groups) == 3  # uniform / jump / uniform+mobile
+    res = Experiment(
+        graph=cgraph, scenarios=rows, steps=STEPS, outputs="full"
+    ).plan().sweep(seeds=SEEDS, base_key=BASE_KEY)
+    assert res.names == tuple(r.name for r in rows)
+    for row, out in zip(rows, res.outputs):
+        ref = Experiment(
+            graph=cgraph, protocol=row.pcfg, failures=row.fcfg, steps=STEPS,
+            outputs="full",
+        ).ensemble(SEEDS, base_key=BASE_KEY)
+        _bitwise(ref, out, row.name)
+
+
+def test_pad_bursts_pads_zoo_schedules():
+    """Pac-Man id and edge-cut schedules pad to the group's widest row
+    with the never-fires fill (-1), like every other schedule family."""
+    a = FailureConfig(pacman_node=0, pacman_nodes=(5, 9))
+    b = FailureConfig(edge_cut_times=(7,), edge_cut_thresholds=(12,))
+    pa, pb = flr.pad_bursts([a, b])
+    assert pa.n_pacman == pb.n_pacman == 2
+    assert pa.n_edge_cuts == pb.n_edge_cuts == 1
+    assert np.asarray(pb.pacman_nodes).tolist() == [-1, -1]
+    assert np.asarray(pa.edge_cut_times).tolist() == [-1]
+    assert np.asarray(pa.edge_cut_thresholds).tolist() == [-1]
+    # padded -1 ids never fire: same trajectory as the unpadded config
+    g = random_regular_graph(N, DEG, seed=GRAPH_SEED)
+    pcfg = _pcfg("decafork", eps=1.8)
+    plain = Experiment(
+        graph=g, protocol=pcfg, failures=b, steps=STEPS
+    ).ensemble(SEEDS, base_key=BASE_KEY)
+    padded = Experiment(
+        graph=g, protocol=pcfg,
+        failures=dataclasses.replace(pb, pacman_nodes=(-1, -1)),
+        steps=STEPS,
+    ).ensemble(SEEDS, base_key=BASE_KEY)
+    _bitwise(plain, padded, "padded-schedule no-op")
+
+
+# ---------------------------------------------------------------------------
+# compile-cache accounting + stable store keys
+# ---------------------------------------------------------------------------
+
+
+def _count_lowerings(monkeypatch):
+    calls = []
+    real = plan_mod._lower
+
+    def counting(mode, signature):
+        calls.append((mode, signature))
+        return real(mode, signature)
+
+    monkeypatch.setattr(plan_mod, "_lower", counting)
+    return calls
+
+
+def test_each_variant_opens_exactly_one_cache_slot(graph, monkeypatch):
+    """Four defenses -> four ensemble cache slots; structurally-equal
+    rebuilds (fresh configs, new Experiment objects, different numeric
+    knobs) re-lower nothing and recompile nothing."""
+    calls = _count_lowerings(monkeypatch)
+    fcfg = FailureConfig(burst_times=(20,), burst_sizes=(2,))
+
+    def run_all(eps):
+        for name in ("uniform", "jump", "biased", "bloom"):
+            # rt_bins=48 is this test's own static: the process-wide
+            # cache may already hold other suites' rt_bins=32 slots
+            pcfg = dataclasses.replace(
+                _pcfg("decafork", eps=eps, rt_bins=48), **defense(name)
+            )
+            Experiment(
+                graph=graph, protocol=pcfg, failures=fcfg, steps=STEPS
+            ).ensemble(SEEDS, base_key=BASE_KEY)
+
+    run_all(1.8)
+    first = len(calls)
+    assert first == len(set(calls)) == 4  # one slot per variant tag
+    compiles = plan_mod.cache_stats()["xla_compiles"]
+    run_all(2.2)  # numeric change only: same four programs
+    assert len(calls) == first
+    assert plan_mod.cache_stats()["xla_compiles"] == compiles
+
+
+def test_zoo_attack_statics_partition_the_cache(graph, monkeypatch):
+    """pacman_mobile and the schedule widths are program structure: the
+    mobile attack opens its own slot, while static multi-Pac-Man reuses
+    the plain ensemble structure only when widths match."""
+    calls = _count_lowerings(monkeypatch)
+    pcfg = _pcfg("decafork", eps=1.8, rt_bins=48)  # own cache partition
+
+    def run(fcfg):
+        Experiment(
+            graph=graph, protocol=pcfg, failures=fcfg, steps=STEPS
+        ).ensemble(SEEDS, base_key=BASE_KEY)
+
+    run(attack("multi_pacman", nodes=(0, 5), start=20))
+    run(attack("mobile_pacman", node=0, start=20))
+    assert len(calls) == len(set(calls)) == 2
+    # structurally equal attacks (different ids — traced leaves) share
+    run(attack("multi_pacman", nodes=(1, 7), start=25))
+    run(attack("mobile_pacman", node=2, hop_prob=0.5, start=10))
+    assert len(calls) == 2
+
+
+def test_zoo_sweep_store_key_is_stable(cgraph):
+    """Two independently built but structurally-equal zoo sweeps hash to
+    the same ResultStore key; changing one traced defense knob changes
+    it."""
+    store = ResultStore("/tmp/unused-zoo-keys")
+
+    def build(p_jump=0.3):
+        rows = zoo_scenarios(
+            defenses=[("jump", {"p_jump": p_jump})],
+            attacks=[("edge_cut", {"time": 20, "threshold": HALF})],
+            base_protocol=_pcfg("decafork", eps=1.8),
+        )
+        plan = Experiment(
+            graph=cgraph, scenarios=rows, steps=STEPS
+        ).plan()
+        pcfgs, fcfgs = stack_configs(rows)
+        lens = (
+            int(jnp.shape(fcfgs.burst_times)[-1]),
+            int(jnp.shape(fcfgs.node_crash_times)[-1]),
+            int(jnp.shape(fcfgs.pacman_nodes)[-1]),
+            int(jnp.shape(fcfgs.edge_cut_times)[-1]),
+        )
+        sig = plan._signature("sweep", rows[0].pcfg, lens, rows[0].fcfg)
+        return store.sweep_key(
+            sig, cgraph, (pcfgs, fcfgs), SEEDS, jax.random.key(BASE_KEY)
+        )
+
+    assert build() == build()  # content-addressed, not identity-addressed
+    assert build(p_jump=0.31) != build()
+
+
+# ---------------------------------------------------------------------------
+# round decisions: the fallback is loud, and decided on padded widths
+# ---------------------------------------------------------------------------
+
+
+def test_round_impl_decision_names_the_gate():
+    fused_ok = _pcfg(
+        "decafork", eps=1.8, round_impl="fused", estimator_impl="gather"
+    )
+    dec = sim.round_impl_decision(fused_ok, FailureConfig())
+    assert dec.fused and dec.backend == "ref"
+    for name in ("jump", "biased", "bloom"):
+        pcfg = dataclasses.replace(fused_ok, **defense(name))
+        dec = sim.round_impl_decision(pcfg, FailureConfig())
+        assert not dec.fused
+        assert f"walk_variant {name!r}" in dec.reason
+    dec = sim.round_impl_decision(dataclasses.replace(fused_ok,
+                                                      round_impl="unfused"))
+    assert not dec.fused and "round_impl" in dec.reason
+
+
+def test_ref_backend_fuses_zoo_attacks_pallas_does_not(monkeypatch):
+    """The ref fused round shares the jnp failure helpers, so zoo attack
+    statics stay fused on it; the Pallas whole-round kernel falls back,
+    and the reason says which attack tripped it."""
+    attacks = {
+        "mobile Pac-Man": attack("mobile_pacman", node=0),
+        "multiple Pac-Man": attack("multi_pacman", nodes=(0, 1)),
+        "edge cuts": attack("edge_cut", time=5, threshold=HALF),
+    }
+    ref_pcfg = _pcfg(
+        "decafork", eps=1.8, round_impl="fused", estimator_impl="gather"
+    )
+    for fcfg in attacks.values():
+        assert sim.round_impl_decision(ref_pcfg, fcfg).fused
+    monkeypatch.setattr(sim, "_fused_round_backend", lambda: "pallas")
+    pallas_pcfg = dataclasses.replace(ref_pcfg, estimator_impl="compare")
+    assert sim.round_impl_decision(pallas_pcfg, FailureConfig()).fused
+    for phrase, fcfg in attacks.items():
+        dec = sim.round_impl_decision(pallas_pcfg, fcfg)
+        assert not dec.fused
+        assert phrase in dec.reason
+
+
+def test_plan_round_decisions_use_padded_group_widths(graph, monkeypatch):
+    """Plan.round_decisions reports per compile group, on the PADDED
+    schedule widths the compiled program actually sees: a cut-free row
+    co-batched with an edge-cut row shares the group's fallback."""
+    monkeypatch.setattr(sim, "_fused_round_backend", lambda: "pallas")
+    pcfg = _pcfg(
+        "decafork", eps=1.8, round_impl="fused", estimator_impl="compare"
+    )
+    rows = [
+        Scenario("calm", pcfg, FailureConfig()),
+        Scenario("cut", pcfg, attack("edge_cut", time=20, threshold=HALF)),
+        Scenario("jump", dataclasses.replace(pcfg, **defense("jump")),
+                 FailureConfig()),
+    ]
+    plan = Experiment(graph=graph, scenarios=rows, steps=STEPS).plan()
+    decisions = plan.round_decisions()
+    assert len(decisions) == 2  # {calm, cut} co-batch; jump is its own
+    by_rows = {tuple(idxs): dec for _sig, idxs, dec in decisions}
+    group_dec = by_rows[(0, 1)]
+    assert not group_dec.fused
+    assert "edge cuts" in group_dec.reason  # calm row shares the fallback
+    assert "walk_variant 'jump'" in by_rows[(2,)].reason
+    # alone, the calm row fuses — the padding is what demotes it
+    assert sim.round_impl_decision(pcfg, FailureConfig()).fused
+
+
+def test_plan_round_decisions_base_plan(graph):
+    plan = Experiment(
+        graph=graph, protocol=_pcfg("decafork", eps=1.8),
+        failures=attack("mobile_pacman", node=0), steps=STEPS,
+    ).plan()
+    [(sig, idxs, dec)] = plan.round_decisions()
+    assert sig is None and idxs == [0]
+    assert isinstance(dec, sim.RoundDecision) and dec.reason
+
+
+# ---------------------------------------------------------------------------
+# registry integration
+# ---------------------------------------------------------------------------
+
+
+def test_registry_resolves_zoo_experiment(cgraph):
+    """Experiment.from_config({'experiment': 'zoo'}) builds the grid with
+    the graph-aware attack defaults (the registry lazy-imports repro.zoo
+    on first lookup, so config-driven callers need no import)."""
+    exp = Experiment.from_config({
+        "experiment": "zoo",
+        "n": N, "graph_seed": GRAPH_SEED, "steps": STEPS,
+        "protocol": dict(algorithm="decafork", z0=Z0, max_walks=W,
+                         rt_bins=32, protocol_start=10, eps=1.8),
+        "defenses": ["uniform", "jump"],
+        "attacks": ["edge_cut", "multi_pacman"],
+    })
+    assert [s.name for s in exp.scenarios] == [
+        "uniform|edge_cut", "uniform|multi_pacman",
+        "jump|edge_cut", "jump|multi_pacman",
+    ]
+    assert exp.scenarios[0].fcfg.n_edge_cuts == 1
+    assert exp.scenarios[1].fcfg.n_pacman == 1  # one per community
+    assert exp.scenarios[2].pcfg.walk_variant == "jump"
+
+
+def test_unknown_names_raise():
+    with pytest.raises(KeyError, match="unknown attack"):
+        attack("meteor")
+    with pytest.raises(KeyError, match="unknown defense"):
+        defense("prayer")
+    with pytest.raises(ValueError, match="walk_variant"):
+        ProtocolConfig(walk_variant="quantum")
