@@ -1,0 +1,132 @@
+"""BENCH: durable segmented execution overhead vs segment length.
+
+Workload: the ``bench_sweep`` epsilon grid, unchanged (8 scenarios x 4
+seeds x 600 steps reduced; 16 x 8 x 2000 with BENCH_FULL=1), so the
+monolithic arm here is directly comparable to ``bench_sweep/sweep``.
+
+Arms, all over the identical workload:
+  - ``monolithic``     : one ``sweep_stacked`` call (the baseline);
+  - ``seg<k>``         : ``segment_steps=k``, NO store — pure
+                         chunking overhead (extra dispatches + host-side
+                         chunk concatenation);
+  - ``seg<k>_store``   : ``segment_steps=k`` with a throwaway on-disk
+                         ResultStore — adds the boundary snapshot
+                         write-behind, i.e. the full durability cost.
+
+Each arm is measured ``cold`` (first call, includes compiles of every
+distinct chunk length) and ``steady`` (min over REPEATS cached re-runs;
+the store arm clears both snapshots and the final result between runs so
+it re-executes rather than warm-hitting). Before ANY number is reported,
+every arm's ``z`` trajectory must be bitwise the monolithic one — a
+durability layer that changes results is not measured, it is broken.
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import FULL, default_graph, save_result
+from benchmarks.bench_sweep import SEEDS, STEPS, _scenarios
+from repro.api import Experiment
+from repro.api.store import ResultStore
+
+REPEATS = 2
+SEGMENTS = (STEPS, STEPS // 4, 50)  # 1 chunk, 4 chunks, many chunks
+
+
+def _plan(graph, scenarios):
+    return Experiment(graph=graph, scenarios=scenarios, steps=STEPS).plan()
+
+
+def _time(fn):
+    t0 = time.time()
+    out = fn()
+    return time.time() - t0, np.asarray(out.z)
+
+
+def _steady(fn):
+    best, z = None, None
+    for _ in range(REPEATS):
+        t, z = _time(fn)
+        best = t if best is None else min(best, t)
+    return best, z
+
+
+def run(verbose: bool = True):
+    graph = default_graph()
+    scenarios = _scenarios()
+    plan = _plan(graph, scenarios)
+    denom = len(scenarios) * STEPS * SEEDS
+    rows, gates = [], []
+
+    def emit(name, cold, steady, z):
+        gates.append((name, z))
+        rows.append({"name": f"bench_resume/{name}", "wall_s": cold,
+                     "us_per_call": cold * 1e6 / denom})
+        rows.append({"name": f"bench_resume/{name}_steady", "wall_s": steady,
+                     "us_per_call": steady * 1e6 / denom})
+
+    t_cold, z_ref = _time(lambda: plan.sweep_stacked(seeds=SEEDS, base_key=0))
+    t_steady, _ = _steady(lambda: plan.sweep_stacked(seeds=SEEDS, base_key=0))
+    emit("monolithic", t_cold, t_steady, z_ref)
+
+    for seg in SEGMENTS:
+        arm = lambda: plan.sweep_stacked(  # noqa: E731
+            seeds=SEEDS, base_key=0, segment_steps=seg
+        )
+        t_cold, z = _time(arm)
+        t_steady, _ = _steady(arm)
+        emit(f"seg{seg}", t_cold, t_steady, z)
+
+    tmp = tempfile.mkdtemp(prefix="bench_resume_store_")
+    try:
+        for seg in SEGMENTS:
+            store = ResultStore(tmp)
+
+            def arm(seg=seg, store=store):
+                # drop prior state so the run re-executes (write-behind
+                # cost, not warm-hit cost, is what this arm measures)
+                shutil.rmtree(store.root, ignore_errors=True)
+                return plan.sweep_stacked(
+                    seeds=SEEDS, base_key=0, segment_steps=seg, store=store
+                )
+
+            t_cold, z = _time(arm)
+            t_steady, _ = _steady(arm)
+            emit(f"seg{seg}_store", t_cold, t_steady, z)
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    # the bitwise gate: no number leaves this bench unless every arm
+    # reproduced the monolithic trajectories exactly
+    for name, z in gates[1:]:
+        assert np.array_equal(z_ref, z), f"{name} diverged from monolithic"
+
+    mono_steady = rows[1]["wall_s"]
+    extra = {
+        "scenarios": len(scenarios), "steps": STEPS, "seeds": SEEDS,
+        "segment_lengths": list(SEGMENTS), "repeats": REPEATS,
+        "full": FULL, "bitwise_gate": "passed",
+        "overhead_steady": {
+            r["name"].split("/", 1)[1].removesuffix("_steady"):
+                r["wall_s"] / mono_steady
+            for r in rows
+            if r["name"].endswith("_steady")
+        },
+    }
+    save_result("bench_resume", rows, extra)
+    if verbose:
+        for r in rows:
+            print(f"{r['name']},{r['us_per_call']:.2f},wall={r['wall_s']:.2f}s")
+        ratios = ", ".join(
+            f"{k}={v:.2f}x" for k, v in extra["overhead_steady"].items()
+        )
+        print(f"BENCH bench_resume steady overhead vs monolithic: {ratios}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

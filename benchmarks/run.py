@@ -19,6 +19,7 @@ import time
 from benchmarks import (
     auto_eps,
     bench_payload,
+    bench_resume,
     bench_round,
     bench_service,
     bench_sweep,
@@ -52,6 +53,7 @@ BENCHES = {
     "round": bench_round.run,
     "payload": bench_payload.run,
     "service": bench_service.run,
+    "resume": bench_resume.run,
 }
 
 
@@ -275,9 +277,40 @@ def smoke() -> None:
                 err_msg=f"service coalescing drift: {name}.{f}",
             )
 
+    # --- durable-execution bitwise tripwire ------------------------------
+    # a segmented run killed at a boundary and resumed from its snapshot
+    # must be bitwise the straight run — the ISSUE-9 invariant, in seconds
+    import tempfile
+
+    from repro.api.store import ResultStore
+    from repro.utils.faults import FaultPlan, Kill, SimulatedKill
+
+    straight = plan.sweep_stacked([scen[0]], seeds=2, base_key=5)
+    with tempfile.TemporaryDirectory() as tmp:
+        store = ResultStore(tmp)
+        fp = FaultPlan().skip("segment.boundary", 1).at(
+            "segment.boundary", Kill()
+        )
+        killed = False
+        try:
+            with fp.active():
+                plan.sweep_stacked([scen[0]], seeds=2, base_key=5,
+                                   store=store, segment_steps=20)
+        except SimulatedKill:
+            killed = True
+        assert killed, "the boundary kill must fire"
+        resumed = plan.sweep_stacked([scen[0]], seeds=2, base_key=5,
+                                     store=store, segment_steps=20)
+    for name, a, b in zip(straight._fields, straight, resumed):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b),
+            err_msg=f"resume drift vs straight run: {name}",
+        )
+
     print("SMOKE ok: estimator impls agree (round bitwise, trajectories); "
           "zoo neutral row bitwise == plain config; legacy shims bitwise == "
-          "Experiment API; coalesced service == sequential sweep bitwise")
+          "Experiment API; coalesced service == sequential sweep bitwise; "
+          "kill-and-resume bitwise == straight run")
 
 
 def main() -> None:

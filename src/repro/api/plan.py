@@ -33,6 +33,7 @@ from repro.api.results import SweepResult
 from repro.core import simulator as sim
 from repro.graphs.spectral import stationary_distribution
 from repro.graphs.state import mirror_indices
+from repro.utils.faults import fault_point
 
 __all__ = [
     "Plan",
@@ -42,10 +43,19 @@ __all__ = [
 ]
 
 _STATIC_ARGNAMES = ("steps", "n", "payload", "spec", "pspec")
+_SEG_STATIC_ARGNAMES = ("seg_len",) + _STATIC_ARGNAMES
 _CORES = {
     "run": sim._run_core,
     "ensemble": sim._run_ensemble_core,
     "sweep": sim._sweep_core,
+    # durable-execution segment cores: carry -> (carry', recorded chunk)
+    "seg_run": sim._seg_run_core,
+    "seg_ensemble": sim._seg_ensemble_core,
+    "seg_sweep": sim._seg_sweep_core,
+}
+_MODE_STATICS = {
+    mode: (_SEG_STATIC_ARGNAMES if mode.startswith("seg_") else _STATIC_ARGNAMES)
+    for mode in _CORES
 }
 
 # the process-wide compile cache: (mode, signature) -> jitted executable.
@@ -129,7 +139,7 @@ def _lower(mode: str, signature: tuple):
     fn = _JITTED.get(mode)
     if fn is None:
         fn = _JITTED[mode] = jax.jit(
-            _CORES[mode], static_argnames=_STATIC_ARGNAMES
+            _CORES[mode], static_argnames=_MODE_STATICS[mode]
         )
     return fn
 
@@ -284,6 +294,135 @@ class Plan:
             spec=self.spec, pspec=self.pspec,
         )
 
+    # -- durable segmented execution ---------------------------------------
+    #
+    # The segmented path splits one scan into ``ceil(steps/segment_steps)``
+    # compiled chunks through the ``seg_*`` cores. Because every PRNG
+    # stream folds the CARRIED step counter (never a scan index), the
+    # chunked trajectory is bitwise the monolithic one — the golden
+    # resume tests hold this invariant. With a store, each boundary
+    # write-behinds a self-contained snapshot (carry + recorded-so-far)
+    # under the run's content key, so a killed process resumes from the
+    # deepest loadable snapshot regardless of the chunking it now uses.
+
+    def _segment_store(self, store, sig, stacked_configs, seeds, base):
+        from repro.api.store import ResultStore
+
+        store = ResultStore.resolve(store)
+        if store is None:
+            return None, None
+        skey = store.sweep_key(sig, self.graph, stacked_configs, seeds, base)
+        return store, skey
+
+    def _drive_segments(
+        self, mode, sig, init_carry, cfg_args, segment_steps, time_axis,
+        store, skey,
+    ):
+        """Run one segmented trajectory/ensemble/sweep to completion.
+
+        ``init_carry`` is a thunk (only called when no resumable snapshot
+        exists); ``cfg_args`` is ``(pi, pcfg(s), fcfg(s))``;
+        ``time_axis`` is where recorded chunks concatenate (run: 0,
+        ensemble: 1, sweep: 2). Snapshot writes are best-effort — a
+        failing store degrades to lost progress, never a failed run —
+        and fault site ``segment.boundary`` fires after every boundary.
+        """
+        segment_steps = int(segment_steps)
+        if segment_steps < 1:
+            raise ValueError(f"segment_steps must be >= 1, got {segment_steps}")
+        steps = self.steps
+        done, carry, recorded = 0, None, None
+        if store is not None:
+            found = store.latest_segment(skey, max_steps=steps)
+            if found is not None:
+                done, snap = found
+                carry, recorded = snap["carry"], snap["recorded"]
+        if carry is None:
+            carry = init_carry()
+        while done < steps:
+            seg = min(segment_steps, steps - done)
+            seg_sig = sig + (("seg_len", seg),)
+            carry, chunk = executable(mode, seg_sig)(
+                carry, self.neighbors, self.degrees, self.mirror, *cfg_args,
+                seg_len=seg, steps=steps, n=self.n, payload=self.payload,
+                spec=self.spec, pspec=self.pspec,
+            )
+            recorded = chunk if recorded is None else jax.tree_util.tree_map(
+                lambda a, b: jnp.concatenate((a, b), axis=time_axis),
+                recorded, chunk,
+            )
+            done += seg
+            if store is not None and done < steps:
+                try:
+                    store.put_segment(
+                        skey, done,
+                        jax.block_until_ready(
+                            {"carry": carry, "recorded": recorded}
+                        ),
+                        extra_meta={"mode": mode, "total_steps": steps},
+                    )
+                except Exception as exc:  # write-behind is best-effort
+                    import warnings
+
+                    warnings.warn(
+                        f"segment write-behind failed at {done}/{steps} "
+                        f"steps: {exc!r}"
+                    )
+            fault_point("segment.boundary")
+        return carry, recorded
+
+    def run_segmented(
+        self, key: jax.Array | int = 0, *, segment_steps: int, store=None
+    ):
+        """:meth:`run`, executed in resumable segments — same return
+        value, bitwise. ``store=`` enables boundary snapshots (and
+        resume from them); on completion the snapshots are cleared."""
+        pcfg, fcfg = self._require_base("run_segmented")
+        base = _as_key(key)
+        sig = self._signature("seg_run", pcfg, _schedule_lens(fcfg), fcfg)
+        store, skey = self._segment_store(store, sig, (pcfg, fcfg), 1, base)
+        carry, recorded = self._drive_segments(
+            "seg_run", sig,
+            lambda: sim._init_carry(
+                base, self.neighbors, pcfg, fcfg, self.steps, self.n,
+                self.payload,
+            ),
+            (self._pi(pcfg), pcfg, fcfg), segment_steps, 0, store, skey,
+        )
+        if store is not None:
+            store.clear_segments(skey)
+        final = sim._finalize_segmented(carry, self.n, pcfg, self.payload)
+        return final, recorded
+
+    def ensemble_segmented(
+        self,
+        seeds: int,
+        base_key: jax.Array | int = 0,
+        *,
+        segment_steps: int,
+        store=None,
+    ):
+        """:meth:`ensemble` in resumable segments — same outputs,
+        bitwise (leading ``(seeds,)`` axis, time on axis 1)."""
+        pcfg, fcfg = self._require_base("ensemble_segmented")
+        base = _as_key(base_key)
+        keys = jax.random.split(base, seeds)
+        sig = self._signature("seg_ensemble", pcfg, _schedule_lens(fcfg), fcfg)
+        store, skey = self._segment_store(
+            store, sig, (pcfg, fcfg), seeds, base
+        )
+        _carry, recorded = self._drive_segments(
+            "seg_ensemble", sig,
+            lambda: sim._init_ensemble_carry(
+                keys, self.neighbors, pcfg, fcfg, self.steps, self.n,
+                self.payload,
+            ),
+            (self._pi(pcfg), pcfg, fcfg), segment_steps, 1, store, skey,
+        )
+        if store is not None:
+            store.clear_segments(skey)
+        return recorded
+
     def sweep_stacked(
         self,
         scenarios: Sequence | None = None,
@@ -291,6 +430,7 @@ class Plan:
         seeds: int,
         base_key: jax.Array | int = 0,
         store=None,
+        segment_steps: int | None = None,
     ):
         """One static-structure scenario stack x seeds in ONE compiled
         call; outputs carry leading ``(S, seeds)`` axes.
@@ -306,6 +446,15 @@ class Plan:
         cached pytree without tracing, compiling or executing anything —
         the content key covers the plan signature, the graph, every
         stacked scenario leaf, ``seeds`` and the base key material.
+
+        ``segment_steps=`` switches to the durable segmented executor:
+        the scan runs in resumable chunks (bitwise identical to the
+        monolithic call), and with a store each boundary write-behinds a
+        snapshot so a killed process resumes a half-finished sweep from
+        disk. The final result lands under the SAME content key as the
+        monolithic path — segmented and monolithic warm hits are
+        interchangeable — and ``segment_steps`` itself never enters the
+        store key (only the per-chunk compile signatures).
         """
         from repro.sweep.scenario import as_pair, stack_configs
 
@@ -338,18 +487,32 @@ class Plan:
 
         keys = jax.random.split(base, seeds)
         pcfgs, fcfgs = self.placement.place(pcfgs, fcfgs, len(scenarios))
-        result = executable("sweep", sig)(
-            keys, self.neighbors, self.degrees, self.mirror,
-            self._pi(pcfg0), pcfgs, fcfgs,
-            steps=self.steps, n=self.n, payload=self.payload,
-            spec=self.spec, pspec=self.pspec,
-        )
+        if segment_steps is None:
+            result = executable("sweep", sig)(
+                keys, self.neighbors, self.degrees, self.mirror,
+                self._pi(pcfg0), pcfgs, fcfgs,
+                steps=self.steps, n=self.n, payload=self.payload,
+                spec=self.spec, pspec=self.pspec,
+            )
+        else:
+            seg_sig = self._signature("seg_sweep", pcfg0, lens, fcfgs)
+            _carry, result = self._drive_segments(
+                "seg_sweep", seg_sig,
+                lambda: sim._init_sweep_carry(
+                    keys, self.neighbors, pcfgs, fcfgs, self.steps, self.n,
+                    self.payload,
+                ),
+                (self._pi(pcfg0), pcfgs, fcfgs), segment_steps, 2,
+                store, skey,
+            )
         if store is not None:
             store.put(
                 skey,
                 jax.block_until_ready(result),
                 extra_meta={"scenarios": len(scenarios), "seeds": int(seeds)},
             )
+            if segment_steps is not None:
+                store.clear_segments(skey)
         return result
 
     def sweep(
@@ -359,6 +522,7 @@ class Plan:
         seeds: int,
         base_key: jax.Array | int = 0,
         store=None,
+        segment_steps: int | None = None,
     ) -> SweepResult:
         """Run a mixed scenario list: grouped by static signature, ONE
         compiled call per group, per-scenario results in input order.
@@ -379,7 +543,7 @@ class Plan:
         for _sig, idxs in self.groups(scenarios):
             stacked = self.sweep_stacked(
                 [scenarios[i] for i in idxs], seeds=seeds, base_key=base_key,
-                store=store,
+                store=store, segment_steps=segment_steps,
             )
             if self.payload is not None:
                 stacked, stacked_payload = stacked

@@ -33,9 +33,25 @@ coalesce across a short ``linger`` window), or ``autostart=False`` +
 explicit :meth:`~ExperimentService.flush` for deterministic batching —
 everything submitted since the last flush coalesces maximally (this is
 what the tests and benchmarks use).
+
+**Resilience** (the durable-execution contract, chaos-tested through
+``repro.utils.faults``): every group attempt passes fault site
+``service.run_group``; retryable failures (:func:`default_retryable`)
+retry with exponential backoff + jitter up to ``retries`` times; a group
+that still fails with >1 member is *split* and its members re-run
+individually, so one poisoned scenario fails only its own futures; a
+per-submission ``timeout=`` bounds how long requests may wait before
+their future fails with :class:`DeadlineExceededError`; and a (simulated)
+kill unwinding the worker thread never strands callers — pending futures
+are failed, and ``flush``/``result`` detect the dead worker and drain
+inline. ``close()`` is deterministic: post-close ``submit`` raises
+:class:`ServiceClosedError` immediately, and anything still queued at
+close resolves (delivered by the final drain, or failed with
+:class:`ServiceClosedError`) — futures never hang.
 """
 from __future__ import annotations
 
+import random
 import threading
 import time
 from typing import Sequence
@@ -45,8 +61,30 @@ import numpy as np
 
 from repro.api.results import SweepResult
 from repro.api.store import ResultStore
+from repro.utils.faults import TransientFault, fault_point
 
-__all__ = ["ExperimentService", "SubmissionFuture"]
+__all__ = [
+    "ExperimentService",
+    "SubmissionFuture",
+    "ServiceClosedError",
+    "DeadlineExceededError",
+    "default_retryable",
+]
+
+
+class ServiceClosedError(RuntimeError):
+    """``submit()`` on a closed service — it no longer accepts work."""
+
+
+class DeadlineExceededError(TimeoutError):
+    """A submission's deadline passed before its group (re)ran."""
+
+
+def default_retryable(exc: BaseException) -> bool:
+    """The default retry classification: transient injected faults and
+    environmental IO/timeout errors retry; everything else — bad configs,
+    shape errors, poisoned scenarios — fails fast (or splits)."""
+    return isinstance(exc, (TransientFault, OSError, TimeoutError))
 
 
 def _key_token(base_key) -> tuple:
@@ -159,15 +197,18 @@ class SubmissionFuture:
 class _Request:
     """One scenario row of one submission, tagged for delivery."""
 
-    __slots__ = ("future", "index", "scenario", "seeds", "base_key", "key")
+    __slots__ = (
+        "future", "index", "scenario", "seeds", "base_key", "key", "deadline",
+    )
 
-    def __init__(self, future, index, scenario, seeds, base_key, key):
+    def __init__(self, future, index, scenario, seeds, base_key, key, deadline):
         self.future = future
         self.index = index
         self.scenario = scenario
         self.seeds = seeds
         self.base_key = base_key
         self.key = key  # the coalescing key
+        self.deadline = deadline  # monotonic seconds, or None
 
 
 class ExperimentService:
@@ -184,11 +225,22 @@ class ExperimentService:
                   only on explicit :meth:`flush` — deterministic, used by
                   tests/benchmarks);
       linger      seconds the worker waits after a wake-up before
-                  draining, so concurrent submitters land in one batch.
+                  draining, so concurrent submitters land in one batch;
+      retries     re-attempts per group on a retryable failure (see
+                  ``retryable``) before splitting/failing;
+      backoff     base seconds of the exponential retry backoff (each
+                  retry waits ``backoff * 2**k``, +25% jitter);
+      retryable   predicate ``exc -> bool`` classifying retryable
+                  failures (default :func:`default_retryable`);
+      segment_steps  when set, every group runs through the durable
+                  segmented executor (``sweep_stacked(segment_steps=)``):
+                  with a store, a killed process resumes half-finished
+                  sweeps from their boundary snapshots.
 
     ``stats`` counts traffic: ``submissions`` / ``scenarios`` in,
     ``batches`` compiled calls out, ``coalesced`` scenarios that rode a
-    batch with >1 submission contributing.
+    batch with >1 submission contributing, ``retries`` re-attempts,
+    ``splits`` degraded groups re-run member-by-member.
     """
 
     def __init__(
@@ -198,6 +250,10 @@ class ExperimentService:
         store="env",
         autostart: bool = True,
         linger: float = 0.002,
+        retries: int = 2,
+        backoff: float = 0.05,
+        retryable=None,
+        segment_steps: int | None = None,
     ):
         from repro.api.plan import Plan
 
@@ -206,11 +262,17 @@ class ExperimentService:
         )
         self.store = ResultStore.resolve(store)
         self.linger = float(linger)
+        self.retries = int(retries)
+        self.backoff = float(backoff)
+        self.retryable = default_retryable if retryable is None else retryable
+        self.segment_steps = segment_steps
         self.stats = {
             "submissions": 0,
             "scenarios": 0,
             "batches": 0,
             "coalesced": 0,
+            "retries": 0,
+            "splits": 0,
         }
         self._lock = threading.Lock()
         self._wake = threading.Condition(self._lock)
@@ -218,6 +280,7 @@ class ExperimentService:
         self._inflight = 0
         self._closed = False
         self._worker = None
+        self._worker_error: BaseException | None = None
         if autostart:
             self._worker = threading.Thread(
                 target=self._worker_loop,
@@ -234,10 +297,13 @@ class ExperimentService:
         *,
         seeds: int,
         base_key=0,
+        timeout: float | None = None,
     ) -> SubmissionFuture:
         """Enqueue a scenario list; returns immediately with a
         :class:`SubmissionFuture`. Scenarios coalesce with every pending
-        request sharing ``(static structure, seeds, base_key)``."""
+        request sharing ``(static structure, seeds, base_key)``.
+        ``timeout=`` sets a deadline: requests whose group has not (re)run
+        by then fail their future with :class:`DeadlineExceededError`."""
         from repro.sweep.scenario import group_key
 
         scenarios = list(scenarios)
@@ -251,18 +317,20 @@ class ExperimentService:
             raise ValueError(f"duplicate scenario names in submission: {dupes}")
         seeds = int(seeds)
         ktok = _key_token(base_key)
+        deadline = None if timeout is None else time.monotonic() + timeout
         future = SubmissionFuture(
             self, names, has_payload=self.plan.payload is not None
         )
         reqs = [
             _Request(
-                future, i, s, seeds, base_key, (group_key(s), seeds, ktok)
+                future, i, s, seeds, base_key, (group_key(s), seeds, ktok),
+                deadline,
             )
             for i, s in enumerate(scenarios)
         ]
         with self._lock:
             if self._closed:
-                raise RuntimeError("ExperimentService is closed")
+                raise ServiceClosedError("ExperimentService is closed")
             self._queue.extend(reqs)
             self.stats["submissions"] += 1
             self.stats["scenarios"] += len(reqs)
@@ -277,27 +345,50 @@ class ExperimentService:
 
     def flush(self, timeout: float | None = None) -> None:
         """Run everything pending and block until the queue is empty and
-        no batch is in flight. With ``autostart=False`` this is the only
-        execution path, so every submission since the last flush
-        coalesces maximally."""
-        if self._worker is None:
-            self._drain()
-        with self._lock:
-            if not self._wake.wait_for(
-                lambda: not self._queue and self._inflight == 0, timeout
-            ):
-                raise TimeoutError(f"queue not drained within {timeout}s")
+        no batch is in flight. With ``autostart=False`` (or a worker that
+        died) this drains inline, so every submission since the last
+        flush coalesces maximally — a dead worker never strands work."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            if self._worker_alive() is None:
+                self._drain()
+            with self._lock:
+                remaining = (
+                    None if deadline is None
+                    else max(0.0, deadline - time.monotonic())
+                )
+                if not self._wake.wait_for(
+                    lambda: (not self._queue and self._inflight == 0)
+                    or self._worker_error is not None,
+                    remaining,
+                ):
+                    raise TimeoutError(f"queue not drained within {timeout}s")
+                if not self._queue and self._inflight == 0:
+                    return
+            # the worker died mid-stream: loop around and take over inline
 
     def close(self, timeout: float | None = None) -> None:
         """Drain pending work, then stop the worker. Idempotent; further
-        ``submit`` calls raise."""
+        ``submit`` calls raise :class:`ServiceClosedError`. Deterministic
+        teardown: every future submitted before close resolves — rows the
+        final drain delivered succeed, anything left (a drain killed
+        mid-way, a worker that never ran) fails with
+        :class:`ServiceClosedError` — no caller hangs."""
         with self._lock:
             self._closed = True
             self._wake.notify_all()
-        if self._worker is not None:
-            self._worker.join(timeout)
-            self._worker = None
-        self._drain()  # autostart=False (or a dead worker): drain inline
+        worker, self._worker = self._worker, None
+        if worker is not None and worker.is_alive():
+            worker.join(timeout)
+        try:
+            self._drain()  # autostart=False (or a dead worker): inline
+        finally:
+            with self._lock:
+                leftovers, self._queue = self._queue, []
+            if leftovers:
+                exc = ServiceClosedError("ExperimentService is closed")
+                for fut in {id(r.future): r.future for r in leftovers}.values():
+                    fut._fail(exc)
 
     def __enter__(self):
         return self
@@ -306,21 +397,36 @@ class ExperimentService:
         self.close()
         return False
 
+    def _worker_alive(self):
+        """The live worker thread, or None (not started / joined / died)."""
+        worker = self._worker
+        if worker is None or not worker.is_alive():
+            return None
+        return worker
+
     def _ensure_progress(self) -> None:
         """Guard futures against deadlock: blocking on a result while no
-        worker exists runs the pending batch inline."""
-        if self._worker is None:
+        live worker exists runs the pending batch inline."""
+        if self._worker_alive() is None:
             self._drain()
 
     def _worker_loop(self) -> None:
-        while True:
+        try:
+            while True:
+                with self._lock:
+                    self._wake.wait_for(lambda: self._queue or self._closed)
+                    if self._closed and not self._queue:
+                        return
+                if self.linger:
+                    time.sleep(self.linger)  # let concurrent submitters land
+                self._drain()
+        except BaseException as exc:
+            # the worker "process" died (e.g. a SimulatedKill). Record it
+            # and wake waiters: flush()/result() detect the dead thread
+            # and drain inline, so no caller hangs on a killed worker.
             with self._lock:
-                self._wake.wait_for(lambda: self._queue or self._closed)
-                if self._closed and not self._queue:
-                    return
-            if self.linger:
-                time.sleep(self.linger)  # let concurrent submitters land
-            self._drain()
+                self._worker_error = exc
+                self._wake.notify_all()
 
     def _drain(self) -> None:
         """Pop the whole queue, group by coalescing key, run each group
@@ -343,25 +449,81 @@ class ExperimentService:
                 self._inflight -= 1
                 self._wake.notify_all()
 
-    def _run_group(self, reqs: list) -> None:
+    def _expire(self, reqs: list) -> list:
+        """Fail requests whose deadline passed; return the live rest."""
+        now = time.monotonic()
+        live = []
+        for r in reqs:
+            if r.deadline is not None and now > r.deadline:
+                r.future._fail(
+                    DeadlineExceededError(
+                        f"submission deadline exceeded before scenario "
+                        f"{getattr(r.scenario, 'name', r.index)!r} ran"
+                    )
+                )
+            else:
+                live.append(r)
+        return live
+
+    def _fail_group(self, reqs: list, exc: BaseException) -> None:
+        for fut in {id(r.future): r.future for r in reqs}.values():
+            fut._fail(exc)
+
+    def _run_group(self, reqs: list, _split: bool = True) -> None:
+        """Run one coalesced group with the full resilience ladder:
+        deadline check -> attempt (fault site ``service.run_group``) ->
+        exponential-backoff retries for retryable failures -> split a
+        still-failing multi-member group and re-run members individually
+        (one poisoned scenario fails only its own futures) -> clean
+        per-future error delivery. A (simulated) kill fails the touching
+        futures and re-raises — it unwinds the worker like the real thing.
+        """
         has_payload = self.plan.payload is not None
-        try:
-            stacked = self.plan.sweep_stacked(
-                [r.scenario for r in reqs],
-                seeds=reqs[0].seeds,
-                base_key=reqs[0].base_key,
-                store=self.store,
-            )
-            stacked_payload = None
-            if has_payload:
-                stacked, stacked_payload = stacked
-            self.stats["batches"] += 1
-            if len({id(r.future) for r in reqs}) > 1:
-                self.stats["coalesced"] += len(reqs)
-        except BaseException as exc:  # deliver, don't kill the worker
-            for fut in {id(r.future): r.future for r in reqs}.values():
-                fut._fail(exc)
+        reqs = self._expire(reqs)
+        if not reqs:
             return
+        attempt = 0
+        while True:
+            try:
+                fault_point("service.run_group")
+                stacked = self.plan.sweep_stacked(
+                    [r.scenario for r in reqs],
+                    seeds=reqs[0].seeds,
+                    base_key=reqs[0].base_key,
+                    store=self.store,
+                    segment_steps=self.segment_steps,
+                )
+                break
+            except Exception as exc:
+                if attempt < self.retries and self.retryable(exc):
+                    attempt += 1
+                    self.stats["retries"] += 1
+                    delay = self.backoff * (2 ** (attempt - 1))
+                    if delay > 0:
+                        time.sleep(delay * (1.0 + 0.25 * random.random()))
+                    reqs = self._expire(reqs)
+                    if not reqs:
+                        return
+                    continue
+                if _split and len(reqs) > 1:
+                    # graceful degradation: the group is poisoned but the
+                    # culprit is unknown — re-run members individually so
+                    # only the culprit's futures fail
+                    self.stats["splits"] += 1
+                    for req in reqs:
+                        self._run_group([req], _split=False)
+                    return
+                self._fail_group(reqs, exc)
+                return
+            except BaseException as exc:
+                self._fail_group(reqs, exc)  # no caller may hang on a kill
+                raise
+        stacked_payload = None
+        if has_payload:
+            stacked, stacked_payload = stacked
+        self.stats["batches"] += 1
+        if len({id(r.future) for r in reqs}) > 1:
+            self.stats["coalesced"] += len(reqs)
         for j, req in enumerate(reqs):
             outputs = jax.tree_util.tree_map(lambda x: x[j], stacked)
             payload_out = (

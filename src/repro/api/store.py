@@ -42,6 +42,7 @@ import numpy as np
 
 from repro.checkpoint import load_pytree, save_pytree
 from repro.core.outputs import RecordedOutputs
+from repro.utils.faults import fault_point
 
 __all__ = ["ResultStore", "UnstableSignatureError", "canonical_token"]
 
@@ -133,6 +134,14 @@ def _describe(obj: Any, leaves: list) -> dict:
             "keys": keys,
             "children": [_describe(obj[k], leaves) for k in keys],
         }
+    if getattr(obj, "dtype", None) is not None and jax.dtypes.issubdtype(
+        obj.dtype, jax.dtypes.prng_key
+    ):
+        # typed PRNG keys (SimState.key in segment snapshots): store the
+        # raw key_data, re-wrap on rebuild — the data IS the key
+        a = np.asarray(jax.random.key_data(obj))
+        leaves.append(a)
+        return {"kind": "prng_key", "dtype": str(a.dtype), "shape": list(a.shape)}
     a = np.asarray(obj)
     leaves.append(a)
     return {"kind": "leaf", "dtype": str(a.dtype), "shape": list(a.shape)}
@@ -153,6 +162,10 @@ def _rebuild(schema: dict, leaves) -> Any:
         return None
     if kind == "leaf":
         return next(leaves)
+    if kind == "prng_key":
+        import jax.numpy as jnp
+
+        return jax.random.wrap_key_data(jnp.asarray(next(leaves)))
     children = [_rebuild(c, leaves) for c in schema["children"]]
     if kind == "recorded":
         return RecordedOutputs(tuple(schema["fields"]), tuple(children))
@@ -176,7 +189,7 @@ def _leaf_templates(schema: dict, out: list) -> None:
     checked restore (dtypes restored exactly, including the bfloat16 ->
     float32 npz round-trip)."""
     kind = schema["kind"]
-    if kind == "leaf":
+    if kind in ("leaf", "prng_key"):
         out.append(np.zeros(tuple(schema["shape"]), _np_dtype(schema["dtype"])))
     elif kind != "none":
         for c in schema.get("children", ()):
@@ -256,9 +269,12 @@ class ResultStore:
     def get(self, key: str):
         """The stored result pytree for ``key``, or None on a miss.
         Corrupt/partial entries (e.g. from a dead writer on a pre-atomic
-        checkpoint layer) count as misses."""
+        checkpoint layer) count as misses — and so does ANY read failure
+        (fault site ``store.get``): a flaky store must degrade to
+        recomputation, never take the caller down."""
         base, npz, meta_path = self._paths(key)
         try:
+            fault_point("store.get")
             with open(meta_path) as f:
                 meta = json.load(f)
             schema = meta["schema"]
@@ -274,7 +290,9 @@ class ResultStore:
 
     def put(self, key: str, result: Any, extra_meta: dict | None = None):
         """Persist a result pytree under ``key`` (atomic: readers see the
-        old entry or the new one, never a torn write)."""
+        old entry or the new one, never a torn write). Fault site
+        ``store.put`` fires before any IO."""
+        fault_point("store.put")
         base, _npz, _meta = self._paths(key)
         leaves: list = []
         schema = _describe(result, leaves)
@@ -284,6 +302,106 @@ class ResultStore:
         save_pytree(base, leaves, metadata=meta)
         self.puts += 1
         return key
+
+    # -- segment snapshots (durable execution write-behind) ----------------
+    #
+    # A segmented run (``Plan.*_segmented`` / ``sweep_stacked(
+    # segment_steps=...)``) persists, at each segment boundary, one
+    # SELF-CONTAINED snapshot: the trajectory carry after ``steps_done``
+    # rounds plus every recorded output so far. Snapshots are keyed by
+    # the SAME content key as the final result and named by their step
+    # count, so resume is segmentation-independent: a killed process
+    # restarts from the deepest loadable snapshot whatever chunking it
+    # now runs with. Older snapshots double as fallbacks for a torn
+    # latest write; ``keep`` bounds how many stay on disk.
+
+    def _segment_dir(self, key: str) -> str:
+        return os.path.join(self.root, "segments", key[:2], key)
+
+    def segment_steps_on_disk(self, key: str) -> list:
+        """Step counts of the on-disk snapshots for ``key``, descending
+        (no validation — :meth:`latest_segment` does the checked load)."""
+        d = self._segment_dir(key)
+        out = []
+        try:
+            for name in os.listdir(d):
+                if name.startswith("seg_") and name.endswith(".npz"):
+                    try:
+                        out.append(int(name[4:-4]))
+                    except ValueError:
+                        continue
+        except OSError:
+            return []
+        return sorted(set(out), reverse=True)
+
+    def put_segment(
+        self,
+        key: str,
+        steps_done: int,
+        snapshot: Any,
+        extra_meta: dict | None = None,
+        keep: int = 2,
+    ) -> None:
+        """Write-behind one segment snapshot (atomic; fault site
+        ``store.put``). Keeps the newest ``keep`` snapshots, pruning the
+        rest — the previous one survives as the fallback for a torn
+        latest write."""
+        fault_point("store.put")
+        base = os.path.join(self._segment_dir(key), f"seg_{steps_done:07d}")
+        leaves: list = []
+        schema = _describe(snapshot, leaves)
+        meta = {
+            "schema_version": _SCHEMA_VERSION,
+            "key": key,
+            "steps_done": int(steps_done),
+            "schema": schema,
+        }
+        if extra_meta:
+            meta.update(extra_meta)
+        save_pytree(base, leaves, metadata=meta)
+        self.puts += 1
+        for stale in self.segment_steps_on_disk(key)[keep:]:
+            self._drop_segment(key, stale)
+
+    def latest_segment(self, key: str, max_steps: int | None = None):
+        """The deepest loadable snapshot for ``key``:
+        ``(steps_done, snapshot)``, or None. Corrupt/torn/mismatched
+        snapshots are skipped (falling back to the next-older one), and
+        any snapshot deeper than ``max_steps`` is ignored — a stale
+        deeper run must not leak into a shorter one."""
+        for steps_done in self.segment_steps_on_disk(key):
+            if max_steps is not None and steps_done > max_steps:
+                continue
+            base = os.path.join(self._segment_dir(key), f"seg_{steps_done:07d}")
+            try:
+                fault_point("store.get")
+                with open(base + ".meta.json") as f:
+                    meta = json.load(f)
+                schema = meta["schema"]
+                like: list = []
+                _leaf_templates(schema, like)
+                leaves = load_pytree(base, like)
+                snapshot = _rebuild(schema, iter(leaves))
+            except Exception:  # torn/corrupt snapshot: fall back
+                self.misses += 1
+                continue
+            self.hits += 1
+            return steps_done, snapshot
+        return None
+
+    def clear_segments(self, key: str) -> None:
+        """Drop every segment snapshot for ``key`` (the run completed —
+        its final result owns the key now)."""
+        for steps_done in self.segment_steps_on_disk(key):
+            self._drop_segment(key, steps_done)
+
+    def _drop_segment(self, key: str, steps_done: int) -> None:
+        base = os.path.join(self._segment_dir(key), f"seg_{steps_done:07d}")
+        for suffix in (".npz", ".meta.json"):
+            try:
+                os.remove(base + suffix)
+            except OSError:
+                pass
 
     def __repr__(self):
         return (

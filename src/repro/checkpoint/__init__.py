@@ -1,3 +1,13 @@
-from repro.checkpoint.checkpoint import save_pytree, load_pytree, save_walk_snapshot
+from repro.checkpoint.checkpoint import (
+    CheckpointMismatchError,
+    load_pytree,
+    save_pytree,
+    save_walk_snapshot,
+)
 
-__all__ = ["save_pytree", "load_pytree", "save_walk_snapshot"]
+__all__ = [
+    "CheckpointMismatchError",
+    "save_pytree",
+    "load_pytree",
+    "save_walk_snapshot",
+]

@@ -2,7 +2,18 @@
 
 A forked walk *is* a live checkpoint copy — the same serialization is used
 to snapshot a walk's model replica so a restarted node can re-enter the
-system (``save_walk_snapshot``).
+system (``save_walk_snapshot``), and the durable-execution layer
+(``repro.api.plan`` segment snapshots, ``repro.api.store``) rides the
+same two functions.
+
+Writes are atomic (same-directory temp + fsync + ``os.replace``); loads
+are *checked*: every leaf must match the ``like`` template's path, shape
+AND dtype, or :class:`CheckpointMismatchError` names every offender — a
+stale snapshot with a drifted schema must never silently reinterpret
+arrays. The one sanctioned dtype mismatch is the bfloat16 round-trip:
+npz cannot hold ml_dtypes, so bf16 leaves are stored as float32 (exact —
+f32 is a superset) and cast back on load (exact — the values are bf16
+representable).
 """
 from __future__ import annotations
 
@@ -13,7 +24,52 @@ from typing import Any
 import jax
 import numpy as np
 
+from repro.utils.faults import SimulatedKill, fault_point
 from repro.utils.tree import tree_flatten_with_paths
+
+__all__ = [
+    "CheckpointMismatchError",
+    "save_pytree",
+    "load_pytree",
+    "save_walk_snapshot",
+]
+
+
+def _is_prng_key(leaf: Any) -> bool:
+    """Typed PRNG key arrays (``jax.random.key``) need an explicit
+    encoding: npz holds their raw ``key_data`` (uint32), and a key-typed
+    ``like`` leaf wraps it back — exactly, the data IS the key."""
+    dtype = getattr(leaf, "dtype", None)
+    return dtype is not None and jax.dtypes.issubdtype(
+        dtype, jax.dtypes.prng_key
+    )
+
+
+def _wrap_key(arr: np.ndarray, ref: Any) -> jax.Array:
+    try:
+        return jax.random.wrap_key_data(
+            jax.numpy.asarray(arr), impl=jax.random.key_impl(ref)
+        )
+    except (AttributeError, TypeError):  # older impl-spec surface
+        return jax.random.wrap_key_data(jax.numpy.asarray(arr))
+
+
+class CheckpointMismatchError(ValueError):
+    """A snapshot's leaves disagree with the expected structure.
+
+    Raised by :func:`load_pytree` when any stored leaf's shape or dtype
+    differs from the ``like`` template — the error message lists every
+    mismatching leaf path with the stored vs expected spec.
+    """
+
+    def __init__(self, path: str, mismatches: list):
+        self.path = path
+        self.mismatches = list(mismatches)
+        lines = "\n  ".join(self.mismatches)
+        super().__init__(
+            f"checkpoint {path!r} does not match the expected structure "
+            f"({len(self.mismatches)} leaf mismatch(es)):\n  {lines}"
+        )
 
 
 def _atomic_write(path: str, write_fn) -> None:
@@ -22,13 +78,27 @@ def _atomic_write(path: str, write_fn) -> None:
     A crash (or raised exception) mid-write leaves at worst an orphaned
     ``*.tmp-*`` file — the previous snapshot at ``path`` stays intact,
     and readers never observe a half-written file.
+
+    Fault site ``checkpoint.write`` fires before anything touches disk;
+    a scheduled :class:`~repro.utils.faults.Torn` action makes this
+    writer behave like its pre-atomic ancestor dying mid-write: the
+    final path gets a truncated prefix of the payload, then the
+    "process" dies (:class:`~repro.utils.faults.SimulatedKill`). Readers
+    must survive that file.
     """
+    torn = fault_point("checkpoint.write", tearable=True)
     tmp = f"{path}.tmp-{os.getpid()}"
     try:
         with open(tmp, "wb") as f:
             write_fn(f)
             f.flush()
             os.fsync(f.fileno())
+        if torn is not None:
+            with open(tmp, "rb") as f:
+                prefix = f.read(torn.keep_bytes)
+            with open(path, "wb") as f:  # deliberately non-atomic
+                f.write(prefix)
+            raise SimulatedKill("checkpoint.write")
         os.replace(tmp, path)
     finally:
         if os.path.exists(tmp):
@@ -39,6 +109,8 @@ def save_pytree(path: str, tree: Any, metadata: dict | None = None) -> None:
     flat = tree_flatten_with_paths(tree)
     arrays = {}
     for p, leaf in flat:
+        if _is_prng_key(leaf):
+            leaf = jax.random.key_data(leaf)
         a = np.asarray(leaf)
         if a.dtype.name == "bfloat16":  # npz can't serialize ml_dtypes
             a = a.astype(np.float32)
@@ -55,17 +127,46 @@ def save_pytree(path: str, tree: Any, metadata: dict | None = None) -> None:
 
 
 def load_pytree(path: str, like: Any) -> Any:
-    """Restore into the structure of `like` (shape/dtype checked)."""
-    with np.load(path if path.endswith(".npz") else path + ".npz") as data:
+    """Restore into the structure of ``like``.
+
+    Every leaf is validated against its template: a missing path raises
+    ``KeyError``; any shape OR dtype drift raises
+    :class:`CheckpointMismatchError` listing every mismatching leaf
+    (bf16 templates accept the documented float32 npz encoding and are
+    cast back exactly).
+    """
+    npz_path = path if path.endswith(".npz") else path + ".npz"
+    with np.load(npz_path) as data:
         flat = tree_flatten_with_paths(like)
         leaves = []
+        mismatches = []
         for p, ref in flat:
             if p not in data:
                 raise KeyError(f"checkpoint missing leaf {p!r}")
             arr = data[p]
-            if tuple(arr.shape) != tuple(ref.shape):
-                raise ValueError(f"shape mismatch for {p}: {arr.shape} vs {ref.shape}")
-            leaves.append(arr.astype(ref.dtype))
+            is_key = _is_prng_key(ref)
+            # a key-typed template validates against its raw key_data
+            spec = jax.random.key_data(ref) if is_key else ref
+            ref_dtype = np.dtype(spec.dtype)
+            if tuple(arr.shape) != tuple(spec.shape):
+                mismatches.append(
+                    f"{p}: stored shape {tuple(arr.shape)} != expected "
+                    f"{tuple(spec.shape)}"
+                )
+                continue
+            if arr.dtype != ref_dtype and not (
+                ref_dtype.name == "bfloat16" and arr.dtype == np.float32
+            ):
+                mismatches.append(
+                    f"{p}: stored dtype {arr.dtype} != expected {ref_dtype}"
+                )
+                continue
+            if is_key:
+                leaves.append(_wrap_key(arr, ref))
+            else:
+                leaves.append(arr.astype(ref.dtype))
+        if mismatches:
+            raise CheckpointMismatchError(npz_path, mismatches)
     treedef = jax.tree.structure(like)
     return jax.tree.unflatten(treedef, leaves)
 

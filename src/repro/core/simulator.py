@@ -804,6 +804,81 @@ def _strip_obs_pad(state: SimState, n: int, pcfg: prt.ProtocolConfig) -> SimStat
     )
 
 
+def _init_carry(key, neighbors, pcfg, fcfg, steps, n, payload=None):
+    """The trajectory's step-0 carry: ``(SimState, payload carry | None)``.
+
+    This is the SAME initialization ``_run_core`` performs (same key
+    splits, same observation-row padding, same cumulative-carry trim on
+    ``steps`` — the TOTAL step budget, never a segment length), factored
+    out so the segmented execution path starts from bitwise the state
+    the monolithic scan starts from.
+    """
+    n_obs = observation_rows(n, pcfg, fcfg)
+    state = init_state(
+        n, neighbors.shape[1], pcfg, fcfg, key, n_obs=n_obs, steps=steps
+    )
+    pcarry = payload.init(payload_init_key(key)) if payload is not None else None
+    return (state, pcarry)
+
+
+def _scan_chunk(
+    carry, neighbors, degrees, mirror, pi, pcfg, fcfg, length, steps,
+    payload=None, spec=SCALARS, pspec=None,
+):
+    """Advance a trajectory carry by ``length`` rounds — THE scan body.
+
+    ``_run_core`` calls this once with ``length == steps``; the segment
+    cores call it per segment. Both trace the identical per-round body
+    (``protocol_step`` + payload hooks), and every PRNG stream folds the
+    carried step counter ``state.t`` — never the loop index — so where
+    the scan is *split* cannot change a single drawn bit. ``steps`` (the
+    total budget) feeds ``max_elapsed`` so the estimator's bin trim is a
+    whole-run constant.
+
+    With ``payload=None`` the scan carry is the bare ``SimState``
+    (exactly the pre-segmentation program); with a payload it is
+    ``(SimState, payload_carry)`` and each round runs the hook sequence
+    ``on_terminate -> on_fork -> on_visit`` after the protocol round,
+    mirroring the protocol's own order (``execute_terminations`` frees
+    slots *before* ``execute_forks`` reallocates them, so a slot can be
+    terminated and re-forked in one round — clearing must not clobber the
+    fresh copy); the forked walk trains at its origin node the very round
+    it is created, on a copy of its parent's pre-round replica.
+    """
+    state, pcarry = carry
+
+    if payload is None:
+
+        def body(s, _):
+            s2, out = protocol_step(
+                s, pcfg, fcfg, neighbors, degrees, mirror, pi,
+                max_elapsed=steps,
+            )
+            return s2, spec.select(out)
+
+        final, recorded = jax.lax.scan(body, state, None, length=length)
+        return (final, None), recorded
+
+    def body(c, _):
+        s, pc = c
+        t = s.t  # pre-round step counter, matching the simulator's streams
+        k_visit = fold_in_time(s.key, t, PAYLOAD_STREAM)
+        s2, out = protocol_step(
+            s, pcfg, fcfg, neighbors, degrees, mirror, pi, max_elapsed=steps
+        )
+        pc = payload.on_terminate(pc, out.terminated)
+        pc = payload.on_fork(pc, out.fork_parent)
+        pc, pout = payload.on_visit(pc, s2.walks, t, k_visit)
+        if pspec is not None:
+            pout = pspec.select(pout)
+        return (s2, pc), (spec.select(out), pout)
+
+    (final, pcarry), recorded = jax.lax.scan(
+        body, (state, pcarry), None, length=length
+    )
+    return (final, pcarry), recorded
+
+
 def _run_core(
     key, neighbors, degrees, mirror, pi, pcfg, fcfg, steps, n,
     payload=None, spec=SCALARS, pspec=None,
@@ -829,54 +904,22 @@ def _run_core(
     sliced back once after the scan — bitwise-identical to padding every
     round, without the per-round state copy.
 
-    With ``payload=None`` this is exactly the payload-free program (same
-    scan carry, same jaxpr). With a payload, the carry becomes
-    ``(SimState, payload_carry)`` and each round runs the hook sequence
-    ``on_terminate -> on_fork -> on_visit`` after the protocol round,
-    mirroring the protocol's own order (``execute_terminations`` frees
-    slots *before* ``execute_forks`` reallocates them, so a slot can be
-    terminated and re-forked in one round — clearing must not clobber the
-    fresh copy); the forked walk trains at its origin node the very round
-    it is created, on a copy of its parent's pre-round replica. Returns
+    The body is :func:`_scan_chunk` with ``length == steps``; the
+    durable-execution path (``Plan.*_segmented`` over ``_seg_run_core``)
+    runs the same chunks with checkpoint boundaries in between, so the
+    two are bitwise-equal by construction (and golden-tested as such).
+    Returns ``(final SimState, RecordedOutputs)`` — with a payload,
     ``((final SimState, final carry), (RecordedOutputs, payload_outputs))``.
     """
-    n_obs = observation_rows(n, pcfg, fcfg)
-    state = init_state(
-        n, neighbors.shape[1], pcfg, fcfg, key, n_obs=n_obs, steps=steps
+    carry = _init_carry(key, neighbors, pcfg, fcfg, steps, n, payload)
+    (final, pcarry), recorded = _scan_chunk(
+        carry, neighbors, degrees, mirror, pi, pcfg, fcfg, steps, steps,
+        payload, spec, pspec,
     )
-
+    final = _strip_obs_pad(final, n, pcfg)
     if payload is None:
-
-        def body(s, _):
-            s2, out = protocol_step(
-                s, pcfg, fcfg, neighbors, degrees, mirror, pi,
-                max_elapsed=steps,
-            )
-            return s2, spec.select(out)
-
-        final, recorded = jax.lax.scan(body, state, None, length=steps)
-        return _strip_obs_pad(final, n, pcfg), recorded
-
-    pcarry = payload.init(payload_init_key(key))
-
-    def body(carry, _):
-        s, pc = carry
-        t = s.t  # pre-round step counter, matching the simulator's streams
-        k_visit = fold_in_time(s.key, t, PAYLOAD_STREAM)
-        s2, out = protocol_step(
-            s, pcfg, fcfg, neighbors, degrees, mirror, pi, max_elapsed=steps
-        )
-        pc = payload.on_terminate(pc, out.terminated)
-        pc = payload.on_fork(pc, out.fork_parent)
-        pc, pout = payload.on_visit(pc, s2.walks, t, k_visit)
-        if pspec is not None:
-            pout = pspec.select(pout)
-        return (s2, pc), (spec.select(out), pout)
-
-    (final, pcarry), recorded = jax.lax.scan(
-        body, (state, pcarry), None, length=steps
-    )
-    return (_strip_obs_pad(final, n, pcfg), pcarry), recorded
+        return final, recorded
+    return (final, pcarry), recorded
 
 
 # deliberately NO input donation on any entry point: the trajectory
@@ -919,6 +962,101 @@ def _sweep_core(
         )(keys)
 
     return jax.vmap(one_scenario)(pcfgs, fcfgs)
+
+
+# ---------------------------------------------------------------------------
+# Segmented (durable) execution cores
+# ---------------------------------------------------------------------------
+#
+# A segmented run is the monolithic scan split at host-visible
+# boundaries: the carry ``(SimState, payload_carry)`` — the int16
+# histogram / cumulative return carry, zoo columns (``prev``/``bloom``),
+# mobile Pac-Man positions, live topology masks, payload replicas, all
+# of it — crosses each boundary as a plain pytree the host can
+# ``checkpoint.save_pytree`` and reload. Because every PRNG stream folds
+# the carried step counter (never a loop index), and because each
+# segment traces the identical ``_scan_chunk`` body, interrupting at any
+# boundary and resuming from the snapshot is BITWISE the uninterrupted
+# run (``tests/test_resume.py`` proves it per algorithm x attack). The
+# drivers that thread snapshots through these cores live in
+# ``repro.api.plan`` (``Plan.run_segmented`` / ``ensemble_segmented`` /
+# ``sweep_stacked(segment_steps=...)``).
+
+
+def _seg_run_core(
+    carry, neighbors, degrees, mirror, pi, pcfg, fcfg, seg_len, steps, n,
+    payload=None, spec=SCALARS, pspec=None,
+):
+    """One segment of one trajectory: carry -> (carry', recorded chunk).
+
+    ``seg_len`` (static) is this segment's round count; ``steps`` stays
+    the TOTAL budget (it feeds the estimator's bin trim, a whole-run
+    constant). ``n`` only shapes the static signature — the final
+    ``_strip_obs_pad`` happens once, host-side, after the last segment.
+    """
+    del n  # signature parity with _run_core; padding strips at the end
+    return _scan_chunk(
+        carry, neighbors, degrees, mirror, pi, pcfg, fcfg, seg_len, steps,
+        payload, spec, pspec,
+    )
+
+
+def _seg_ensemble_core(
+    carry, neighbors, degrees, mirror, pi, pcfg, fcfg, seg_len, steps, n,
+    payload=None, spec=SCALARS, pspec=None,
+):
+    """One segment of a seed ensemble (carry leaves lead with (seeds,))."""
+    return jax.vmap(
+        lambda c: _seg_run_core(
+            c, neighbors, degrees, mirror, pi, pcfg, fcfg, seg_len, steps, n,
+            payload, spec, pspec,
+        )
+    )(carry)
+
+
+def _seg_sweep_core(
+    carry, neighbors, degrees, mirror, pi, pcfgs, fcfgs, seg_len, steps, n,
+    payload=None, spec=SCALARS, pspec=None,
+):
+    """One segment of a stacked sweep (carry leaves lead with (S, seeds))."""
+
+    def one_scenario(c, pcfg, fcfg):
+        return jax.vmap(
+            lambda cc: _seg_run_core(
+                cc, neighbors, degrees, mirror, pi, pcfg, fcfg, seg_len,
+                steps, n, payload, spec, pspec,
+            )
+        )(c)
+
+    return jax.vmap(one_scenario)(carry, pcfgs, fcfgs)
+
+
+def _init_ensemble_carry(keys, neighbors, pcfg, fcfg, steps, n, payload=None):
+    """Step-0 carries for a seed ensemble: leaves lead with (seeds,)."""
+    return jax.vmap(
+        lambda k: _init_carry(k, neighbors, pcfg, fcfg, steps, n, payload)
+    )(keys)
+
+
+def _init_sweep_carry(keys, neighbors, pcfgs, fcfgs, steps, n, payload=None):
+    """Step-0 carries for a stacked sweep: leaves lead with (S, seeds)."""
+
+    def one_scenario(pcfg, fcfg):
+        return jax.vmap(
+            lambda k: _init_carry(k, neighbors, pcfg, fcfg, steps, n, payload)
+        )(keys)
+
+    return jax.vmap(one_scenario)(pcfgs, fcfgs)
+
+
+def _finalize_segmented(carry, n, pcfg, payload=None):
+    """Host-side final-state normalization after the last segment — the
+    exact ``_strip_obs_pad`` the monolithic core applies inside jit."""
+    state, pcarry = carry
+    state = _strip_obs_pad(state, n, pcfg)
+    if payload is None:
+        return state
+    return (state, pcarry)
 
 
 def _graph_arrays(graph: Graph, pcfg: prt.ProtocolConfig):

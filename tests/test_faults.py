@@ -1,0 +1,412 @@
+"""Chaos suite for the host-level fault-injection harness (ISSUE 9).
+
+Every named fault site in ``repro.utils.faults.SITES`` is exercised at
+least once, and every injected failure must yield either a correct retry
+or a clean per-future error — never a hang (every wait below carries a
+timeout) and never a silently wrong result (recovered paths are compared
+bitwise against an undisturbed reference).
+
+Site coverage map:
+  ``service.run_group``   retry/exhaustion/split tests below;
+  ``store.get``           read-fault degradation test below;
+  ``store.put``           snapshot write-behind degradation test below;
+  ``segment.boundary``    kill-and-resume tests (here and test_resume);
+  ``checkpoint.write``    torn-write tests (here via the matrix, and
+                          test_resume's fallback tests).
+"""
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import Experiment
+from repro.api.service import (
+    DeadlineExceededError,
+    ExperimentService,
+    ServiceClosedError,
+    default_retryable,
+)
+from repro.api.store import ResultStore
+from repro.core import FailureConfig, ProtocolConfig
+from repro.graphs import random_regular_graph
+from repro.sweep import Scenario
+from repro.utils import faults
+from repro.utils.faults import (
+    Delay,
+    FaultPlan,
+    Kill,
+    PermanentFault,
+    Raise,
+    SimulatedKill,
+    Torn,
+    TransientFault,
+    fault_point,
+)
+
+N, W, Z0, STEPS, SEEDS, BASE_KEY = 24, 10, 5, 30, 2, 7
+WAIT = 120.0  # every blocking call below is bounded: a hang is a failure
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return random_regular_graph(N, 4, seed=3)
+
+
+def _pcfg(**kw):
+    base = dict(algorithm="decafork", z0=Z0, max_walks=W, rt_bins=32,
+                protocol_start=8, eps=1.8)
+    base.update(kw)
+    return ProtocolConfig(**base)
+
+
+def _scen(name, **kw):
+    fcfg = kw.pop("fcfg", FailureConfig())
+    return Scenario(name, _pcfg(**kw), fcfg)
+
+
+def _service(graph, **kw):
+    kw.setdefault("store", None)
+    kw.setdefault("autostart", False)
+    kw.setdefault("backoff", 0.0)
+    exp = Experiment(graph=graph, steps=STEPS, outputs="scalars",
+                     scenarios=[_scen("base")])
+    return ExperimentService(exp, **kw)
+
+
+def _assert_tree_equal(ref, got, label):
+    import jax
+
+    rl = jax.tree_util.tree_leaves(ref)
+    gl = jax.tree_util.tree_leaves(got)
+    assert len(rl) == len(gl), label
+    for a, b in zip(rl, gl):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=label)
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_fault_point_is_noop_without_active_plan():
+    assert fault_point("store.get") is None
+    assert fault_point("checkpoint.write", tearable=True) is None
+
+
+def test_plan_fifo_targets_kth_invocation_and_counts_hits():
+    plan = FaultPlan().skip("store.get", 2).at(
+        "store.get", Raise(TransientFault("boom"))
+    )
+    with plan.active():
+        fault_point("store.get")
+        fault_point("store.get")
+        with pytest.raises(TransientFault, match="boom"):
+            fault_point("store.get")
+        fault_point("store.get")  # queue drained: back to no-op
+    assert plan.hits["store.get"] == 4
+    assert plan.pending("store.get") == 0
+    assert [s for s, _ in plan.fired] == ["store.get"]
+
+
+def test_plan_deactivates_on_exit_and_nests():
+    outer, inner = FaultPlan(), FaultPlan()
+    with outer.active():
+        with inner.active():
+            fault_point("store.put")
+        fault_point("store.put")
+    fault_point("store.put")
+    assert inner.hits == {"store.put": 1}
+    assert outer.hits == {"store.put": 1}
+
+
+def test_torn_at_non_tearable_site_raises():
+    plan = FaultPlan().at("store.get", Torn())
+    with plan.active(), pytest.raises(RuntimeError, match="non-tearable"):
+        fault_point("store.get")
+
+
+def test_kill_is_a_base_exception():
+    with pytest.raises(SimulatedKill):
+        try:
+            Kill().fire("segment.boundary")
+        except Exception:  # a best-effort handler must NOT swallow a kill
+            pytest.fail("SimulatedKill was caught by `except Exception`")
+
+
+def test_delay_just_sleeps():
+    plan = FaultPlan().at("store.put", Delay(0.01))
+    t0 = time.monotonic()
+    with plan.active():
+        assert fault_point("store.put") is None
+    assert time.monotonic() - t0 >= 0.01
+
+
+def test_default_retryable_classification():
+    assert default_retryable(TransientFault("x"))
+    assert default_retryable(OSError("disk"))
+    assert default_retryable(TimeoutError("slow"))
+    assert not default_retryable(PermanentFault("x"))
+    assert not default_retryable(ValueError("bad config"))
+
+
+# ---------------------------------------------------------------------------
+# service retry / degradation / deadline
+# ---------------------------------------------------------------------------
+
+
+def test_transient_fault_retries_then_succeeds_bitwise(graph):
+    svc = _service(graph, retries=2)
+    ref = svc.plan.sweep([_scen("a"), _scen("b", eps=0.9)], seeds=SEEDS,
+                         base_key=BASE_KEY)
+    plan = FaultPlan().at("service.run_group", Raise(TransientFault("blip")))
+    with plan.active():
+        fut = svc.submit([_scen("a"), _scen("b", eps=0.9)], seeds=SEEDS,
+                         base_key=BASE_KEY)
+        svc.flush(timeout=WAIT)
+    got = fut.result(timeout=WAIT)
+    assert svc.stats["retries"] == 1
+    assert svc.stats["splits"] == 0
+    for name in ("a", "b"):
+        _assert_tree_equal(ref[name], got[name], f"retried result {name}")
+    svc.close()
+
+
+def test_retries_exhausted_fails_cleanly_service_survives(graph):
+    svc = _service(graph, retries=1)
+    # retries=1 -> two attempts, both transient-faulted; the group has a
+    # single member, so there is nothing to split: clean failure
+    plan = FaultPlan().at(
+        "service.run_group",
+        Raise(TransientFault("1")), Raise(TransientFault("2")),
+    )
+    with plan.active():
+        fut = svc.submit([_scen("a")], seeds=SEEDS, base_key=BASE_KEY)
+        svc.flush(timeout=WAIT)
+        with pytest.raises(TransientFault):
+            fut.result(timeout=WAIT)
+    # the service is still healthy: the next submission succeeds
+    ok = svc.submit([_scen("a")], seeds=SEEDS, base_key=BASE_KEY)
+    svc.flush(timeout=WAIT)
+    ref = svc.plan.sweep([_scen("a")], seeds=SEEDS, base_key=BASE_KEY)
+    _assert_tree_equal(ref["a"], ok.result(timeout=WAIT)["a"],
+                       "post-failure submission")
+    svc.close()
+
+
+def test_permanent_fault_never_retries(graph):
+    svc = _service(graph, retries=3)
+    plan = FaultPlan().at("service.run_group", Raise(PermanentFault("no")))
+    with plan.active():
+        fut = svc.submit([_scen("a")], seeds=SEEDS, base_key=BASE_KEY)
+        svc.flush(timeout=WAIT)
+        with pytest.raises(PermanentFault):
+            fut.result(timeout=WAIT)
+    assert svc.stats["retries"] == 0
+    svc.close()
+
+
+def test_injected_group_fault_splits_and_members_recover(graph):
+    """A non-retryable fault on a 2-member group triggers the split;
+    both members then succeed individually — bitwise."""
+    svc = _service(graph, retries=0)
+    scens = [_scen("a"), _scen("b", eps=0.9)]
+    ref = svc.plan.sweep(scens, seeds=SEEDS, base_key=BASE_KEY)
+    plan = FaultPlan().at("service.run_group", Raise(PermanentFault("grp")))
+    with plan.active():
+        fut = svc.submit(scens, seeds=SEEDS, base_key=BASE_KEY)
+        svc.flush(timeout=WAIT)
+        got = fut.result(timeout=WAIT)
+    assert svc.stats["splits"] == 1
+    for name in ("a", "b"):
+        _assert_tree_equal(ref[name], got[name], f"split recovery {name}")
+    svc.close()
+
+
+def test_poisoned_scenario_fails_only_its_own_future(graph):
+    """The natural poison: a z0 > max_walks scenario coalesces (z0 is a
+    traced leaf, so the static group key matches) but fails validation at
+    stack time. The co-batched innocent submission must still succeed,
+    bitwise; only the poisoned future errors."""
+    svc = _service(graph)
+    good = _scen("good")
+    poisoned = Scenario("bad", _pcfg(z0=jnp.asarray(W + 5, jnp.int32)),
+                        FailureConfig())
+    ref = svc.plan.sweep([good], seeds=SEEDS, base_key=BASE_KEY)
+    fut_good = svc.submit([good], seeds=SEEDS, base_key=BASE_KEY)
+    fut_bad = svc.submit([poisoned], seeds=SEEDS, base_key=BASE_KEY)
+    svc.flush(timeout=WAIT)
+    assert svc.stats["splits"] == 1
+    _assert_tree_equal(ref["good"], fut_good.result(timeout=WAIT)["good"],
+                       "innocent co-batched submission")
+    with pytest.raises(ValueError, match="max_walks"):
+        fut_bad.result(timeout=WAIT)
+    svc.close()
+
+
+def test_submission_deadline_exceeded(graph):
+    svc = _service(graph)
+    fut = svc.submit([_scen("a")], seeds=SEEDS, base_key=BASE_KEY,
+                     timeout=0.0)
+    time.sleep(0.005)
+    svc.flush(timeout=WAIT)
+    with pytest.raises(DeadlineExceededError):
+        fut.result(timeout=WAIT)
+    svc.close()
+
+
+# ---------------------------------------------------------------------------
+# store faults: degrade, never take the caller down
+# ---------------------------------------------------------------------------
+
+
+def test_store_get_fault_degrades_to_recompute_bitwise(graph, tmp_path):
+    store = ResultStore(tmp_path / "store")
+    exp = Experiment(graph=graph, steps=STEPS, outputs="scalars",
+                     scenarios=[_scen("base")])
+    plan_ = exp.plan()
+    scens = [_scen("a")]
+    ref = plan_.sweep_stacked(scens, seeds=SEEDS, base_key=1, store=store)
+    misses = store.misses
+    fp = FaultPlan().at("store.get", Raise(OSError("flaky disk")))
+    with fp.active():
+        got = plan_.sweep_stacked(scens, seeds=SEEDS, base_key=1, store=store)
+    assert store.misses == misses + 1  # the read fault counted as a miss
+    _assert_tree_equal(ref, got, "recompute under store.get fault")
+
+
+def test_snapshot_writebehind_fault_degrades_with_warning(graph, tmp_path):
+    """A failing snapshot write must cost only durability (a warning),
+    never correctness or the run itself."""
+    store = ResultStore(tmp_path / "store")
+    exp = Experiment(graph=graph, steps=STEPS, outputs="scalars",
+                     scenarios=[_scen("base")])
+    plan_ = exp.plan()
+    scens = [_scen("a")]
+    ref = plan_.sweep_stacked(scens, seeds=SEEDS, base_key=1)
+    # first store.put hit is the first boundary snapshot (get comes first
+    # and has its own site); fail it
+    fp = FaultPlan().at("store.put", Raise(OSError("disk full")))
+    with fp.active(), pytest.warns(UserWarning, match="write-behind"):
+        got = plan_.sweep_stacked(scens, seeds=SEEDS, base_key=1,
+                                  store=store, segment_steps=10)
+    _assert_tree_equal(ref, got, "segmented run under store.put fault")
+
+
+# ---------------------------------------------------------------------------
+# kills: worker death and close() determinism — never a hang
+# ---------------------------------------------------------------------------
+
+
+def test_worker_kill_fails_futures_and_service_drains_inline(graph):
+    """A kill inside the background worker's group run: the touching
+    future errors (no hang), and the service keeps working — flush and
+    later submissions drain inline past the dead thread."""
+    svc = _service(graph, autostart=True, linger=0.0)
+    fp = FaultPlan().at("service.run_group", Kill())
+    with fp.active():
+        fut = svc.submit([_scen("a")], seeds=SEEDS, base_key=BASE_KEY)
+        with pytest.raises(SimulatedKill):
+            fut.result(timeout=WAIT)
+    # wait for the worker thread to actually die
+    deadline = time.monotonic() + WAIT
+    while svc._worker_alive() is not None:
+        assert time.monotonic() < deadline, "worker did not die"
+        time.sleep(0.005)
+    ok = svc.submit([_scen("a")], seeds=SEEDS, base_key=BASE_KEY)
+    svc.flush(timeout=WAIT)
+    ref = svc.plan.sweep([_scen("a")], seeds=SEEDS, base_key=BASE_KEY)
+    _assert_tree_equal(ref["a"], ok.result(timeout=WAIT)["a"],
+                       "submission after worker death")
+    svc.close(timeout=WAIT)
+
+
+def test_close_resolves_pending_and_post_close_submit_raises(graph):
+    svc = _service(graph)
+    fut = svc.submit([_scen("a")], seeds=SEEDS, base_key=BASE_KEY)
+    svc.close(timeout=WAIT)
+    # the pending future resolved deterministically (final drain ran it)
+    assert fut.done()
+    fut.result(timeout=WAIT)
+    with pytest.raises(ServiceClosedError, match="closed"):
+        svc.submit([_scen("a")], seeds=SEEDS, base_key=BASE_KEY)
+    svc.close(timeout=WAIT)  # idempotent
+
+
+def test_close_is_deterministic_with_live_worker(graph):
+    svc = _service(graph, autostart=True)
+    futs = [svc.submit([_scen("a")], seeds=SEEDS, base_key=BASE_KEY)
+            for _ in range(3)]
+    svc.close(timeout=WAIT)
+    for fut in futs:
+        assert fut.done()
+        fut.result(timeout=WAIT)
+    with pytest.raises(ServiceClosedError):
+        svc.submit([_scen("a")], seeds=SEEDS, base_key=BASE_KEY)
+
+
+def test_concurrent_submitters_with_transient_faults(graph):
+    """Chaos under concurrency: several submitter threads race a worker
+    that takes transient hits; every future must resolve correctly."""
+    svc = _service(graph, autostart=True, retries=3, linger=0.005)
+    scens = [_scen("a"), _scen("b", eps=0.9)]
+    ref = svc.plan.sweep(scens, seeds=SEEDS, base_key=BASE_KEY)
+    fp = FaultPlan().at(
+        "service.run_group",
+        Raise(TransientFault("x")), Delay(0.002), Raise(TransientFault("y")),
+    )
+    results, errors = {}, []
+
+    def submitter(i):
+        try:
+            fut = svc.submit(scens, seeds=SEEDS, base_key=BASE_KEY)
+            results[i] = fut.result(timeout=WAIT)
+        except BaseException as exc:  # noqa: BLE001 - recorded for assert
+            errors.append(exc)
+
+    with fp.active():
+        threads = [threading.Thread(target=submitter, args=(i,))
+                   for i in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(WAIT)
+            assert not t.is_alive(), "submitter hung"
+    assert not errors, f"submitters failed: {errors!r}"
+    for i, got in results.items():
+        for name in ("a", "b"):
+            _assert_tree_equal(ref[name], got[name],
+                               f"concurrent submitter {i}/{name}")
+    svc.close(timeout=WAIT)
+
+
+# ---------------------------------------------------------------------------
+# the chaos matrix: every documented site is real and exercised
+# ---------------------------------------------------------------------------
+
+
+def test_every_documented_site_is_hit_by_one_durable_service_run(graph,
+                                                                tmp_path):
+    """One durable service run (segmented + store + a retried transient)
+    passes through EVERY fault site in ``faults.SITES`` — the harness
+    instruments the whole host stack, not a subset."""
+    store = ResultStore(tmp_path / "store")
+    svc = _service(graph, store=store, segment_steps=10, retries=1)
+    fp = FaultPlan().at("service.run_group", Raise(TransientFault("once")))
+    with fp.active():
+        fut = svc.submit([_scen("a")], seeds=SEEDS, base_key=BASE_KEY)
+        svc.flush(timeout=WAIT)
+        fut.result(timeout=WAIT)
+    assert set(faults.SITES) <= set(fp.hits), (
+        f"unhit sites: {set(faults.SITES) - set(fp.hits)}"
+    )
+    svc.close(timeout=WAIT)
+
+
+def test_sites_tuple_matches_module_doc():
+    assert faults.SITES == (
+        "checkpoint.write", "store.get", "store.put",
+        "service.run_group", "segment.boundary",
+    )

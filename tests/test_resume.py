@@ -1,0 +1,422 @@
+"""Durable segmented execution (ISSUE 9 tentpole): bitwise resume.
+
+Contract under test:
+  * a run/ensemble/sweep executed in ``segment_steps`` chunks is BITWISE
+    the monolithic call — recorded outputs, payload outputs, and the
+    final carried state — for every algorithm and under the churniest
+    zoo scenario (node/link churn + bursts + mobile Pac-Men + cuts);
+  * interrupt-at-any-segment-boundary-then-resume (a SimulatedKill, the
+    snapshot already on disk) reproduces the uninterrupted trajectory
+    bitwise, and resume is chunking-independent;
+  * segmented and monolithic sweeps share one result-store content key
+    (warm hits interchange), and completed runs clear their snapshots;
+  * segment snapshots survive torn writes (fall back to the previous
+    snapshot) — and the checkpoint layer round-trips the full modern
+    SimState (int16 histograms, cumulative estimator carry, zoo
+    prev/bloom/pacman_pos columns, typed PRNG keys, payload carry)
+    exactly, rejecting shape/dtype drift with a named error.
+"""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import Experiment
+from repro.api.store import ResultStore
+from repro.checkpoint import (
+    CheckpointMismatchError,
+    load_pytree,
+    save_pytree,
+)
+from repro.core import FailureConfig, ProtocolConfig
+from repro.core import simulator as sim
+from repro.graphs import random_regular_graph
+from repro.sweep import Scenario
+from repro.utils.faults import FaultPlan, Kill, SimulatedKill, Torn
+
+N, DEG, W, Z0, STEPS, SEEDS, BASE_KEY = 24, 4, 10, 5, 36, 2, 7
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return random_regular_graph(N, DEG, seed=3)
+
+
+def _pcfg(alg="decafork", **kw):
+    base = dict(algorithm=alg, z0=Z0, max_walks=W, rt_bins=32,
+                protocol_start=8, eps=1.8)
+    base.update(kw)
+    return ProtocolConfig(**base)
+
+
+def _churny_fcfg(**kw):
+    """The kitchen-sink zoo scenario: bursts + i.i.d. node/link churn +
+    mobile Pac-Men (scan-carried positions) + a scheduled partition cut."""
+    base = dict(
+        burst_times=(9, 23), burst_sizes=(3, 2),
+        p_node_fail=0.02, p_node_recover=0.3,
+        p_link_fail=0.03, p_link_recover=0.4,
+        pacman_nodes=(2, 11), pacman_mobile=True, pacman_hop_prob=0.5,
+        edge_cut_times=(15,), edge_cut_thresholds=(12,),
+    )
+    base.update(kw)
+    return FailureConfig(**base)
+
+
+def _plan(graph, pcfg, fcfg, **kw):
+    return Experiment(
+        graph=graph, protocol=pcfg, failures=fcfg, steps=STEPS, **kw
+    ).plan()
+
+
+def _leaves(tree):
+    out = []
+    for leaf in jax.tree_util.tree_leaves(tree):
+        if jax.dtypes.issubdtype(
+            getattr(leaf, "dtype", np.dtype("f4")), jax.dtypes.prng_key
+        ):
+            leaf = jax.random.key_data(leaf)
+        out.append(np.asarray(leaf))
+    return out
+
+
+def _assert_tree_equal(ref, got, label):
+    rl, gl = _leaves(ref), _leaves(got)
+    assert len(rl) == len(gl), f"{label}: leaf count {len(rl)} != {len(gl)}"
+    for i, (a, b) in enumerate(zip(rl, gl)):
+        np.testing.assert_array_equal(a, b, err_msg=f"{label}: leaf {i}")
+
+
+def _assert_tree_close(ref, got, label, rtol=1e-6, atol=1e-6):
+    """Integer leaves exact; float leaves to the last ulp.
+
+    For payload floats compared ACROSS compiled programs (segmented vs
+    monolithic), XLA may re-fuse reductions — the documented PR-5
+    caveat. Default tolerances fit the per-step telemetry (last-ulp);
+    optimizer state after many training steps amplifies that ulp noise
+    chaotically per parameter (adamw divides by near-zero second
+    moments), so carry comparisons pass looser bounds explicitly.
+    Same-chunking comparisons stay on _assert_tree_equal.
+    """
+    rl, gl = _leaves(ref), _leaves(got)
+    assert len(rl) == len(gl), f"{label}: leaf count {len(rl)} != {len(gl)}"
+    for i, (a, b) in enumerate(zip(rl, gl)):
+        if np.issubdtype(a.dtype, np.floating):
+            np.testing.assert_allclose(
+                a, b, rtol=rtol, atol=atol, err_msg=f"{label}: leaf {i}"
+            )
+        else:
+            np.testing.assert_array_equal(a, b, err_msg=f"{label}: leaf {i}")
+
+
+# ---------------------------------------------------------------------------
+# golden: segmented == monolithic, bitwise, per algorithm x churny zoo
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("alg", ["none", "missingperson", "decafork",
+                                 "decafork+"])
+def test_segmented_run_bitwise_per_algorithm(graph, alg):
+    """run_segmented is bitwise run() — final state AND every recorded
+    field — for every algorithm under the churny zoo scenario (an uneven
+    final chunk included: 13 does not divide 36)."""
+    plan = _plan(graph, _pcfg(alg), _churny_fcfg())
+    s_mono, r_mono = plan.run(BASE_KEY)
+    s_seg, r_seg = plan.run_segmented(BASE_KEY, segment_steps=13)
+    _assert_tree_equal(r_mono, r_seg, f"{alg}: recorded")
+    _assert_tree_equal(s_mono, s_seg, f"{alg}: final state")
+
+
+def test_segmented_bloom_variant_bitwise(graph):
+    """The bloom walk variant carries prev/bloom columns through the
+    scan — they must round-trip segment boundaries bitwise too."""
+    plan = _plan(graph, _pcfg(walk_variant="bloom", bloom_bits=64),
+                 _churny_fcfg())
+    s_mono, r_mono = plan.run(BASE_KEY)
+    s_seg, r_seg = plan.run_segmented(BASE_KEY, segment_steps=10)
+    _assert_tree_equal(r_mono, r_seg, "bloom: recorded")
+    _assert_tree_equal(s_mono, s_seg, "bloom: final state")
+
+
+def test_segmented_ensemble_bitwise(graph):
+    plan = _plan(graph, _pcfg(), _churny_fcfg())
+    ref = plan.ensemble(SEEDS, BASE_KEY)
+    got = plan.ensemble_segmented(SEEDS, BASE_KEY, segment_steps=17)
+    _assert_tree_equal(ref, got, "ensemble")
+
+
+def test_segmented_sweep_bitwise_and_store_interchange(graph, tmp_path):
+    """Segmented sweeps land under the SAME content key as monolithic
+    ones (warm hits interchange both ways) and clear their snapshots on
+    completion."""
+    pcfg, fcfg = _pcfg(), _churny_fcfg()
+    plan = _plan(graph, pcfg, fcfg)
+    scens = [Scenario(f"e{e}", dataclasses.replace(pcfg, eps=e), fcfg)
+             for e in (0.9, 1.8)]
+    ref = plan.sweep_stacked(scens, seeds=SEEDS, base_key=1)
+    store = ResultStore(tmp_path / "store")
+    got = plan.sweep_stacked(scens, seeds=SEEDS, base_key=1, store=store,
+                             segment_steps=15)
+    _assert_tree_equal(ref, got, "segmented sweep")
+    # the monolithic call must now be a warm hit on the segmented result
+    before = store.hits
+    warm = plan.sweep_stacked(scens, seeds=SEEDS, base_key=1, store=store)
+    _assert_tree_equal(ref, warm, "warm interchange")
+    assert store.hits == before + 1
+    # completed runs own their key via the final result, not snapshots
+    seg_root = os.path.join(store.root, "segments")
+    leftover = [
+        f for _, _, files in os.walk(seg_root) for f in files
+    ] if os.path.isdir(seg_root) else []
+    assert leftover == []
+
+
+# ---------------------------------------------------------------------------
+# kill-and-resume: the durable-execution invariant
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("boundary", [0, 1, 2])
+def test_kill_at_any_boundary_then_resume_is_bitwise(graph, tmp_path,
+                                                     boundary):
+    """A SimulatedKill at the k-th segment boundary, then a fresh call:
+    the resumed sweep picks up from the boundary snapshot and finishes
+    bitwise identical to the never-interrupted run."""
+    pcfg, fcfg = _pcfg(), _churny_fcfg()
+    plan = _plan(graph, pcfg, fcfg)
+    scens = [Scenario(f"e{e}", dataclasses.replace(pcfg, eps=e), fcfg)
+             for e in (0.9, 1.8)]
+    ref = plan.sweep_stacked(scens, seeds=SEEDS, base_key=1)
+    store = ResultStore(tmp_path / "store")
+    fp = FaultPlan().skip("segment.boundary", boundary).at(
+        "segment.boundary", Kill()
+    )
+    with pytest.raises(SimulatedKill), fp.active():
+        plan.sweep_stacked(scens, seeds=SEEDS, base_key=1, store=store,
+                           segment_steps=10)
+    assert fp.fired, "the kill must actually have fired"
+    resumed = plan.sweep_stacked(scens, seeds=SEEDS, base_key=1, store=store,
+                                 segment_steps=10)
+    _assert_tree_equal(ref, resumed, f"kill@boundary{boundary} + resume")
+
+
+def test_resume_is_chunking_independent(graph, tmp_path):
+    """Snapshots are keyed by steps-done, not by segment length: a run
+    killed under segment_steps=9 resumes bitwise under segment_steps=15."""
+    pcfg, fcfg = _pcfg(), _churny_fcfg()
+    plan = _plan(graph, pcfg, fcfg)
+    scens = [Scenario("base", pcfg, fcfg)]
+    ref = plan.sweep_stacked(scens, seeds=SEEDS, base_key=2)
+    store = ResultStore(tmp_path / "store")
+    fp = FaultPlan().skip("segment.boundary", 1).at(
+        "segment.boundary", Kill()
+    )
+    with pytest.raises(SimulatedKill), fp.active():
+        plan.sweep_stacked(scens, seeds=SEEDS, base_key=2, store=store,
+                           segment_steps=9)
+    resumed = plan.sweep_stacked(scens, seeds=SEEDS, base_key=2, store=store,
+                                 segment_steps=15)
+    _assert_tree_equal(ref, resumed, "cross-chunking resume")
+
+
+def test_run_segmented_kill_resume(graph, tmp_path):
+    """The single-trajectory surface resumes bitwise too (final state
+    included — the obs-pad strip happens once, after the last segment)."""
+    pcfg, fcfg = _pcfg(), _churny_fcfg()
+    plan = _plan(graph, pcfg, fcfg)
+    s_ref, r_ref = plan.run(BASE_KEY)
+    store = ResultStore(tmp_path / "store")
+    fp = FaultPlan().skip("segment.boundary", 1).at(
+        "segment.boundary", Kill()
+    )
+    with pytest.raises(SimulatedKill), fp.active():
+        plan.run_segmented(BASE_KEY, segment_steps=10, store=store)
+    s_got, r_got = plan.run_segmented(BASE_KEY, segment_steps=10, store=store)
+    _assert_tree_equal(r_ref, r_got, "run resume: recorded")
+    _assert_tree_equal(s_ref, s_got, "run resume: final state")
+
+
+# ---------------------------------------------------------------------------
+# payload trajectories: RwSGD training rides the same invariant
+# ---------------------------------------------------------------------------
+
+
+def _tiny_payload():
+    from repro.data import make_markov_task
+    from repro.models.config import ModelConfig
+    from repro.models.model import Model
+    from repro.optim import RwSgdPayload, adamw
+
+    cfg = ModelConfig(
+        name="tiny", arch_type="dense", num_layers=1, d_model=32, d_ff=64,
+        vocab_size=64, num_heads=2, num_kv_heads=2, head_dim=16,
+        dtype="float32",
+    )
+    return RwSgdPayload(
+        Model(cfg), adamw(1e-2), make_markov_task(cfg.vocab_size, rank=4),
+        max_walks=W, local_batch=1, seq_len=8, train_every=2,
+    )
+
+
+@pytest.mark.slow
+def test_payload_segmented_bitwise(graph):
+    """Segmented payload runs reproduce the control plane bitwise; the
+    payload's float telemetry/carry is compared across two DIFFERENT
+    compiled programs (chunked vs monolithic scan), where XLA may
+    re-fuse the loss/grad reductions at the last ulp — so floats get
+    the PR-5 allclose treatment, integers stay exact."""
+    plan = _plan(graph, _pcfg(), _churny_fcfg(), payload=_tiny_payload())
+    (s_ref, pc_ref), (r_ref, p_ref) = plan.run(BASE_KEY)
+    (s_got, pc_got), (r_got, p_got) = plan.run_segmented(
+        BASE_KEY, segment_steps=13
+    )
+    _assert_tree_equal(r_ref, r_got, "payload: recorded")
+    _assert_tree_equal(s_ref, s_got, "payload: final state")
+    _assert_tree_close(p_ref, p_got, "payload: payload outputs")
+    _assert_tree_close(pc_ref, pc_got, "payload: payload carry",
+                       rtol=1e-2, atol=1e-4)
+
+
+@pytest.mark.slow
+def test_payload_kill_resume_bitwise(graph, tmp_path):
+    """Kill-and-resume holds bitwise for training runs: the payload
+    carry (replica params + optimizer state) round-trips the snapshot.
+
+    The reference is the UNINTERRUPTED segmented run — the durability
+    invariant is interrupt-then-resume == uninterrupted, and with the
+    same segment_steps both arms run the same compiled chunk programs,
+    so even the payload floats must match exactly. (Monolithic-vs-
+    segmented float drift is covered, allclose, above.)"""
+    pcfg, fcfg = _pcfg(), _churny_fcfg()
+    plan = _plan(graph, pcfg, fcfg, payload=_tiny_payload())
+    r_ref, p_ref = plan.ensemble_segmented(SEEDS, BASE_KEY, segment_steps=12)
+    store = ResultStore(tmp_path / "store")
+    fp = FaultPlan().skip("segment.boundary", 1).at(
+        "segment.boundary", Kill()
+    )
+    with pytest.raises(SimulatedKill), fp.active():
+        plan.ensemble_segmented(SEEDS, BASE_KEY, segment_steps=12,
+                                store=store)
+    r_got, p_got = plan.ensemble_segmented(SEEDS, BASE_KEY, segment_steps=12,
+                                           store=store)
+    _assert_tree_equal(r_ref, r_got, "payload resume: recorded")
+    _assert_tree_equal(p_ref, p_got, "payload resume: payload outputs")
+
+
+# ---------------------------------------------------------------------------
+# snapshot torn-write recovery
+# ---------------------------------------------------------------------------
+
+
+def test_torn_snapshot_falls_back_to_previous(graph, tmp_path):
+    """A torn latest snapshot (killed mid-write, pre-atomic file at the
+    final path) must fall back to the previous boundary's snapshot —
+    and the resumed run still finishes bitwise."""
+    pcfg, fcfg = _pcfg(), _churny_fcfg()
+    plan = _plan(graph, pcfg, fcfg)
+    scens = [Scenario("base", pcfg, fcfg)]
+    ref = plan.sweep_stacked(scens, seeds=SEEDS, base_key=3)
+    store = ResultStore(tmp_path / "store")
+    # let the first snapshot land, tear the second mid-write
+    fp = FaultPlan().skip("checkpoint.write", 2).at(
+        "checkpoint.write", Torn(keep_bytes=40)
+    )
+    with pytest.raises(SimulatedKill), fp.active():
+        plan.sweep_stacked(scens, seeds=SEEDS, base_key=3, store=store,
+                           segment_steps=9)
+    resumed = plan.sweep_stacked(scens, seeds=SEEDS, base_key=3, store=store,
+                                 segment_steps=9)
+    _assert_tree_equal(ref, resumed, "torn snapshot + resume")
+
+
+def test_latest_segment_skips_torn_and_deeper_snapshots(graph, tmp_path):
+    """latest_segment: a torn newest file falls back to the next-older
+    loadable snapshot; snapshots deeper than max_steps are ignored."""
+    store = ResultStore(tmp_path / "store")
+    snap = {"carry": jnp.arange(4, dtype=jnp.int32), "recorded": None}
+    store.put_segment("k" * 64, 10, snap)
+    store.put_segment("k" * 64, 20, snap)
+    fp = FaultPlan().at("checkpoint.write", Torn(keep_bytes=16))
+    with pytest.raises(SimulatedKill), fp.active():
+        store.put_segment("k" * 64, 30, snap)
+    steps_done, got = store.latest_segment("k" * 64)
+    assert steps_done == 20
+    np.testing.assert_array_equal(np.asarray(got["carry"]), np.arange(4))
+    # a stale deeper run must not leak into a shorter one
+    assert store.latest_segment("k" * 64, max_steps=15)[0] == 10
+    store.clear_segments("k" * 64)
+    assert store.latest_segment("k" * 64) is None
+
+
+# ---------------------------------------------------------------------------
+# checkpoint round-trip of the full modern carry (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_full_simstate_checkpoint_roundtrip(graph, tmp_path):
+    """The complete segmented carry — SimState with int16 histogram /
+    cumulative estimator carry, zoo prev/bloom columns, mobile Pac-Man
+    positions, GraphState churn masks, typed PRNG key — survives
+    save_pytree/load_pytree bitwise."""
+    pcfg = _pcfg(walk_variant="bloom", bloom_bits=64)
+    fcfg = _churny_fcfg()
+    plan = _plan(graph, pcfg, fcfg)
+    state, _ = plan.run_segmented(BASE_KEY, segment_steps=STEPS)
+    path = str(tmp_path / "state")
+    save_pytree(path, state)
+    restored = load_pytree(path, state)
+    _assert_tree_equal(state, restored, "SimState round-trip")
+    # the restored key is a working typed key, not just equal bytes
+    assert jax.dtypes.issubdtype(restored.key.dtype, jax.dtypes.prng_key)
+    jax.random.fold_in(restored.key, 1)
+
+
+@pytest.mark.slow
+def test_payload_carry_checkpoint_roundtrip(graph, tmp_path):
+    """Replica params + optimizer state round-trip exactly (the payload
+    carry is what makes a killed training run resumable)."""
+    plan = _plan(graph, _pcfg(), _churny_fcfg(), payload=_tiny_payload())
+    (state, pcarry), _ = plan.run(BASE_KEY)
+    path = str(tmp_path / "carry")
+    save_pytree(path, pcarry)
+    restored = load_pytree(path, pcarry)
+    _assert_tree_equal(pcarry, restored, "payload carry round-trip")
+
+
+def test_load_pytree_rejects_shape_and_dtype_drift(tmp_path):
+    """CheckpointMismatchError names EVERY mismatching leaf — a drifted
+    schema must never silently reinterpret arrays."""
+    path = str(tmp_path / "ck")
+    save_pytree(path, {"a": jnp.zeros((3,), jnp.float32),
+                       "b": jnp.zeros((2, 2), jnp.int32),
+                       "c": jnp.zeros((4,), jnp.float32)})
+    like = {"a": jnp.zeros((4,), jnp.float32),     # shape drift
+            "b": jnp.zeros((2, 2), jnp.int16),     # dtype drift
+            "c": jnp.zeros((4,), jnp.float32)}     # fine
+    with pytest.raises(CheckpointMismatchError) as ei:
+        load_pytree(path, like)
+    msg = str(ei.value)
+    assert "a" in msg and "shape" in msg
+    assert "b" in msg and "dtype" in msg
+    assert len(ei.value.mismatches) == 2
+    # missing leaves still raise the established KeyError
+    with pytest.raises(KeyError):
+        load_pytree(path, {"zz": jnp.zeros((1,))})
+
+
+def test_load_pytree_bf16_exemption_still_exact(tmp_path):
+    """bf16 leaves store as f32 (exact) and cast back (exact) — the one
+    sanctioned dtype mismatch; anything else still raises."""
+    path = str(tmp_path / "bf")
+    save_pytree(path, {"w": jnp.arange(8, dtype=jnp.bfloat16) / 3})
+    out = load_pytree(path, {"w": jnp.zeros((8,), jnp.bfloat16)})
+    assert out["w"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(
+        np.asarray(out["w"].astype(jnp.float32)),
+        np.asarray((jnp.arange(8, dtype=jnp.bfloat16) / 3).astype(jnp.float32)),
+    )
+    with pytest.raises(CheckpointMismatchError):
+        load_pytree(path, {"w": jnp.zeros((8,), jnp.float16)})
